@@ -1,0 +1,130 @@
+"""Shared benchmark utilities: timing, synthetic SuiteSparse-style matrices,
+and the v5e kernel cost model used for `derived` columns.
+
+This container is CPU-only, so every row reports BOTH:
+  * ``us_per_call`` — measured wall time of the jitted CPU implementation
+    (relative comparisons only), and
+  * ``derived``     — modeled TPU v5e execution from the roofline cost model
+    (bytes/flops of the kernel dataflow; this is the number the paper's
+    tables are reproduced against).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+import jax
+
+# v5e constants (same as analysis/roofline.py)
+PEAK_MXU = 197e12  # bf16 FLOP/s
+PEAK_VPU = 3.2e12  # f32 vector FLOP/s (CUDA-core analogue)
+HBM_BW = 819e9  # B/s
+GRID_STEP_NS = 100.0  # per-grid-step scalar/DMA issue overhead (modeled)
+VMEM_RESIDENT_BYTES = 8 * 1024 * 1024  # B-slice VMEM residency budget
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time in microseconds (CPU measurement)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([x for x in xs if x > 0], np.float64)
+    return float(np.exp(np.log(xs).mean())) if len(xs) else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Synthetic SuiteSparse-style matrices (banded / power-law / uniform)
+# ---------------------------------------------------------------------------
+
+
+def suite_matrix(kind: str, m: int, k: int, density: float, seed: int
+                 ) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = np.zeros((m, k), np.float32)
+    nnz = int(density * m * k)
+    if kind == "uniform":
+        idx = rng.choice(m * k, size=nnz, replace=False)
+        a.flat[idx] = rng.normal(size=nnz).astype(np.float32)
+    elif kind == "banded":
+        bw = max(1, int(density * k))
+        for i in range(m):
+            c0 = int(i * k / m)
+            lo, hi = max(0, c0 - bw), min(k, c0 + bw)
+            a[i, lo:hi] = rng.normal(size=hi - lo)
+    elif kind == "powerlaw":
+        # a few dense rows, long sparse tail (degree-skewed graphs)
+        row_nnz = (k * density * (np.arange(1, m + 1) ** -0.8))
+        row_nnz = np.maximum(1, (row_nnz * m / row_nnz.sum() * k * density)
+                             ).astype(int)
+        rng.shuffle(row_nnz)
+        for i in range(m):
+            n_i = min(int(row_nnz[i]), k)
+            cols = rng.choice(k, size=n_i, replace=False)
+            a[i, cols] = rng.normal(size=n_i)
+    else:
+        raise ValueError(kind)
+    return a
+
+
+SUITE = [
+    ("uniform", 0.005), ("uniform", 0.02), ("uniform", 0.05),
+    ("banded", 0.01), ("banded", 0.05), ("banded", 0.1),
+    ("powerlaw", 0.005), ("powerlaw", 0.02), ("powerlaw", 0.05),
+]
+
+
+# ---------------------------------------------------------------------------
+# v5e kernel cost model
+# ---------------------------------------------------------------------------
+
+
+def model_bcsr_time(nnz_blocks: int, bm: int, bk: int, n: int, bn: int,
+                    dtype_bytes: int = 2, *, k: int | None = None,
+                    overlap: bool = True, mxu: bool = True,
+                    grid_ns: float = GRID_STEP_NS,
+                    c_zero_pass: bool = False, row_lengths=None) -> float:
+    """Modeled seconds for the BCSR kernel's dataflow on one v5e core.
+
+    B traffic: if the [K, bn] dense column slice fits the VMEM residency
+    budget it is read once per n-tile (VMEM residency — the TPU analogue of
+    the H100's 50MB L2 holding B, which is what makes the paper's sparse
+    kernels win on small/medium K); otherwise every block re-fetches its
+    [bk, bn] tile from HBM.
+    """
+    n_tiles = -(-n // bn)
+    steps = nnz_blocks * n_tiles
+    flops = 2.0 * nnz_blocks * bm * bk * n_tiles * bn
+    bytes_a = nnz_blocks * bm * bk * dtype_bytes * n_tiles
+    refetch = nnz_blocks * bk * bn * dtype_bytes * n_tiles
+    if k is not None and k * bn * dtype_bytes <= VMEM_RESIDENT_BYTES:
+        bytes_b = min(refetch, k * bn * dtype_bytes * n_tiles)
+    else:
+        bytes_b = refetch
+    # C written once per (row, n) tile; estimate rows from nnz (>=1 block/row)
+    bytes_c = (row_lengths is not None and len(row_lengths) or nnz_blocks) \
+        * bm * bn * dtype_bytes
+    if c_zero_pass:
+        bytes_c *= 2  # explicit zero-init pass (removed by ScaleD=0 analogue)
+    t_comp = flops / (PEAK_MXU if mxu else PEAK_VPU)
+    t_mem = (bytes_a + bytes_b + bytes_c) / HBM_BW
+    t_grid = steps * grid_ns * 1e-9
+    if overlap:
+        return max(t_comp, t_mem) + t_grid
+    return t_comp + t_mem + t_grid
+
+
+def tflops(nnz: int, n: int, seconds: float) -> float:
+    """Paper's throughput convention: (2 * nnz * N) / t."""
+    if seconds <= 0:
+        return 0.0
+    return 2.0 * nnz * n / seconds / 1e12

@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus a copy under results/)."""
+
+import os
+import sys
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import (fig7_tilewidth, fig8_prefill, table1_suitesparse,
+                            table2_ablation, table3_gateproj)
+
+    modules = {
+        "table1": table1_suitesparse,
+        "table2": table2_ablation,
+        "table3": table3_gateproj,
+        "fig7": fig7_tilewidth,
+        "fig8": fig8_prefill,
+    }
+    rows = [("name", "us_per_call", "derived")]
+    for name, mod in modules.items():
+        if only and name != only:
+            continue
+        mod.run(rows)
+    out = "\n".join(f"{n},{u if isinstance(u, str) else f'{u:.1f}'},{d}"
+                    for n, u, d in rows)
+    print(out)
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.csv", "w") as f:
+        f.write(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Paper Table I analogue: geomean SpMM TFLOP/s on a SuiteSparse-style suite,
+stratified by density and dense width N: WCSR / BCSR vs the two baselines the
+paper compares against — BELL (cuSPARSE Blocked-ELLPACK analogue: block rows
+padded to the max row length, i.e. compute wasted on padding blocks) and a
+dense GEMM (cuBLAS analogue). Matrices are RCM-preprocessed like the paper.
+
+us_per_call measures the jitted CPU reference dataflow (at N=256 only);
+`derived` is modeled v5e TFLOP/s with the paper's convention 2*nnz*N/t.
+
+`wcsr` models the paper-faithful kernel (synchronous per-iteration gather,
+§III-C); `wcsr_opt` adds the beyond-paper double-buffered gather (8
+outstanding row DMAs overlapped with the MXU) — see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (HBM_BW, PEAK_MXU, geomean, model_bcsr_time,
+                               suite_matrix, tflops, time_call)
+from repro.core.formats import bcsr_from_dense, rcm_permutation, wcsr_from_dense
+from repro.kernels.bcsr.ref import bcsr_spmm_ref
+from repro.kernels.wcsr.ref import wcsr_spmm_ref
+from repro.kernels.tuning import select_bn
+
+M = K = 2048  # scaled-down suite (CPU container)
+NS = (256, 1024)
+N_MEASURE = 256
+B_ROW = 64  # scaled block (full TPU config uses 128; see DESIGN.md)
+DMA_ISSUE_NS = 30.0
+
+SUITE1 = [
+    ("uniform", 0.002), ("uniform", 0.005),
+    ("banded", 0.002), ("banded", 0.01), ("banded", 0.03),
+    ("powerlaw", 0.002), ("powerlaw", 0.005), ("powerlaw", 0.02),
+]
+
+
+def _model_wcsr_time(w, n, bn, overlap_gather: bool = False):
+    n_tiles = -(-n // bn)
+    flops = 2.0 * w.padded_cols * w.b_row * n_tiles * bn
+    bytes_a = w.padded_cols * w.b_row * 2 * n_tiles
+    bytes_b = w.padded_cols * bn * 2 * n_tiles  # indirect gather, no reuse
+    bytes_c = w.num_windows * w.b_row * n_tiles * bn * 4
+    t_comp = flops / PEAK_MXU
+    t_mem = (bytes_a + bytes_b + bytes_c) / HBM_BW
+    # scalar-core row-DMA issue (the cooperative-gather analogue)
+    t_issue = w.padded_cols * n_tiles * DMA_ISSUE_NS * 1e-9
+    if overlap_gather:  # double-buffered gather, 8 outstanding DMAs
+        return max(t_comp, t_mem, t_issue / 8.0)
+    return max(t_comp, t_mem) + t_issue
+
+
+def _bell_blocks(a) -> int:
+    """Blocked-ELLPACK pads every block-row to the max row length."""
+    rows = np.asarray(a.block_rows)[: a.nnz_blocks]
+    counts = np.bincount(rows, minlength=a.shape[0] // a.block[0])
+    return int(counts.max()) * (a.shape[0] // a.block[0])
+
+
+def run(csv_rows):
+    mats = []
+    for i, (kind, density) in enumerate(SUITE1):
+        d = suite_matrix(kind, M, K, density, seed=i)
+        perm = rcm_permutation(d)  # paper's preprocessing step
+        d = d[np.ix_(perm, perm)] if d.shape[0] == d.shape[1] else d[perm]
+        nnz = int((d != 0).sum())
+        a = bcsr_from_dense(d, (B_ROW, B_ROW))
+        w = wcsr_from_dense(d, b_row=B_ROW, b_col=8)
+        mats.append((kind, density, d, nnz, a, w))
+
+    for n in NS:
+        per_fmt = {"wcsr": [], "wcsr_opt": [], "bcsr": [], "bell": [],
+                   "dense": []}
+        for kind, density, d, nnz, a, w in mats:
+            bn = select_bn(n, B_ROW, B_ROW)
+            t_b = model_bcsr_time(a.nnz_blocks, B_ROW, B_ROW, n, bn, k=K)
+            t_bell = model_bcsr_time(_bell_blocks(a), B_ROW, B_ROW, n, bn, k=K)
+            t_w = _model_wcsr_time(w, n, bn)
+            t_wo = _model_wcsr_time(w, n, bn, overlap_gather=True)
+            t_d = max(2.0 * M * K * n / PEAK_MXU,
+                      (M * K + K * n + M * n) * 2 / HBM_BW)
+            per_fmt["bcsr"].append(tflops(nnz, n, t_b))
+            per_fmt["bell"].append(tflops(nnz, n, t_bell))
+            per_fmt["wcsr"].append(tflops(nnz, n, t_w))
+            per_fmt["wcsr_opt"].append(tflops(nnz, n, t_wo))
+            per_fmt["dense"].append(tflops(nnz, n, t_d))
+
+            us_b = us_w = 0.0
+            if n == N_MEASURE:
+                b = jnp.asarray(np.random.default_rng(1).normal(
+                    size=(K, n)).astype(np.float32))
+                us_b = time_call(jax.jit(lambda bb, a=a: bcsr_spmm_ref(a, bb)),
+                                 b, warmup=1, iters=3)
+                us_w = time_call(jax.jit(lambda bb, w=w: wcsr_spmm_ref(w, bb)),
+                                 b, warmup=1, iters=3)
+            csv_rows.append((f"table1/{kind}_d{density}_N{n}_wcsr", us_w,
+                             f"{per_fmt['wcsr'][-1]:.2f}TFLOPS"))
+            csv_rows.append((f"table1/{kind}_d{density}_N{n}_bcsr", us_b,
+                             f"{per_fmt['bcsr'][-1]:.2f}TFLOPS"))
+            csv_rows.append((f"table1/{kind}_d{density}_N{n}_bell", 0.0,
+                             f"{per_fmt['bell'][-1]:.2f}TFLOPS"))
+        for fmt in per_fmt:
+            gm = geomean(per_fmt[fmt])
+            csv_rows.append((f"table1/geomean_N{n}_{fmt}", 0.0,
+                             f"{gm:.2f}TFLOPS"))
+        for base in ("bell", "dense"):
+            for fmt in ("wcsr", "wcsr_opt", "bcsr"):
+                sp = geomean(per_fmt[fmt]) / max(geomean(per_fmt[base]), 1e-9)
+                csv_rows.append((f"table1/speedup_{fmt}_over_{base}_N{n}",
+                                 0.0, f"{sp:.2f}x"))
+    return csv_rows

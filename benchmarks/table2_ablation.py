@@ -1,0 +1,110 @@
+"""Paper Table II / Fig. 6 analogue: incremental async-feature ablation,
+mapped to TPU mechanisms (DESIGN.md §2):
+
+  opt0  scalar (VPU, no MXU, no overlap)         ~ CUDA-core baseline
+  opt1  +MXU micro-GEMMs, serialized loads       ~ +WGMMA
+  opt2  +BlockSpec double-buffered DMA (overlap) ~ +TMA
+  opt3  +multi-stage revisit pipeline            ~ +warp specialization
+  opt4  +halved grid-step issue overhead         ~ +raw mbarrier
+  opt5  +accumulator zero-elision                ~ +ScaleD=0
+  opt6  +static persistent traversal             ~ persistent kernel (REGRESSES)
+  opt7  +cluster A-multicast w/ sync overhead    ~ TMA multicast (REGRESSES)
+
+`us_per_call` times the interpret-mode Pallas BCSR kernel once (the real
+kernel implements opt5 semantics); `derived` is the modeled v5e TFLOP/s per
+stage on the suite geomean.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import (GRID_STEP_NS, SUITE, geomean, model_bcsr_time,
+                               suite_matrix, tflops, time_call)
+from repro.core.formats import bcsr_from_dense
+from repro.kernels.bcsr.kernel import run_bcsr_spmm
+
+M = K = 1024
+N = 1024
+BM = BK = 64
+BN = 256
+
+
+def _stage_time(a, nnz, row_imbalance, stage: str) -> float:
+    # per-step issue overhead shrinks through the pipeline stages:
+    # sync barriers (4x) -> single-stage async wait (2x) -> multi-stage
+    # circular buffer (1x) -> raw-mbarrier analogue (0.5x)
+    kw = dict(dtype_bytes=2, k=K)
+    if stage == "opt0":
+        return model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=False,
+                               mxu=False, c_zero_pass=True,
+                               grid_ns=4 * GRID_STEP_NS, **kw)
+    if stage == "opt1":
+        return model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=False,
+                               mxu=True, c_zero_pass=True,
+                               grid_ns=4 * GRID_STEP_NS, **kw)
+    if stage == "opt2":
+        return model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=True,
+                               mxu=True, c_zero_pass=True,
+                               grid_ns=2 * GRID_STEP_NS, **kw)
+    if stage == "opt3":  # multi-stage pipeline also hides most issue latency
+        return model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=True,
+                               mxu=True, c_zero_pass=True,
+                               grid_ns=0.6 * GRID_STEP_NS, **kw)
+    if stage == "opt4":
+        return model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=True,
+                               mxu=True, c_zero_pass=True,
+                               grid_ns=0.5 * GRID_STEP_NS, **kw)
+    if stage == "opt5":
+        return model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=True,
+                               mxu=True, c_zero_pass=False,
+                               grid_ns=0.5 * GRID_STEP_NS, **kw)
+    if stage == "opt6":  # persistent static assignment: load imbalance
+        t = model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=True,
+                            mxu=True, c_zero_pass=False,
+                            grid_ns=0.5 * GRID_STEP_NS, **kw)
+        return t * row_imbalance
+    if stage == "opt7":  # multicast: A fetched once per block (not per n-tile)
+        t5 = model_bcsr_time(a.nnz_blocks, BM, BK, N, BN, overlap=True,
+                             mxu=True, c_zero_pass=False,
+                             grid_ns=0.5 * GRID_STEP_NS, **kw)
+        saved_a = a.nnz_blocks * BM * BK * 2 * (N // BN - 1) / 819e9
+        sync = a.nnz_blocks * (N // BN) * 2 * GRID_STEP_NS * 1e-9  # x-CTA brr
+        return t5 - saved_a + sync
+    raise ValueError(stage)
+
+
+def run(csv_rows):
+    stages = [f"opt{i}" for i in range(8)]
+    per_stage = {s: [] for s in stages}
+    kernel_us = None
+    for i, (kind, density) in enumerate(SUITE):
+        d = suite_matrix(kind, M, K, density, seed=100 + i)
+        a = bcsr_from_dense(d, (BM, BK))
+        nnz = int((d != 0).sum())
+        rows = np.asarray(a.block_rows)[: a.nnz_blocks]
+        counts = np.bincount(rows, minlength=M // BM).astype(float)
+        imb = counts.max() / max(counts.mean(), 1e-9)
+        for s in stages:
+            per_stage[s].append(tflops(nnz, N, _stage_time(a, nnz, imb, s)))
+        if kernel_us is None:  # one interpret-mode run of the real kernel
+            b = jnp.asarray(np.random.default_rng(0).normal(
+                size=(K, 256)).astype(np.float32))
+            kernel_us = time_call(
+                lambda bb: run_bcsr_spmm(a, bb, bn=256), b, warmup=1, iters=2)
+    base = geomean(per_stage["opt0"])
+    for s in stages:
+        gm = geomean(per_stage[s])
+        us = kernel_us if s == "opt5" else 0.0
+        csv_rows.append((f"table2/{s}", us, f"{gm:.2f}TFLOPS({gm/base:.1f}x)"))
+    # paper claim: opt1..opt3 contribute ~98% of the total opt0->opt5 gain
+    g = {s: geomean(per_stage[s]) for s in stages}
+    frac = (g["opt3"] - g["opt0"]) / max(g["opt5"] - g["opt0"], 1e-9)
+    csv_rows.append(("table2/async_features_fraction_of_gain", 0.0,
+                     f"{frac:.2f}"))
+    csv_rows.append(("table2/opt6_regresses", 0.0,
+                     str(bool(g["opt6"] < g["opt5"]))))
+    csv_rows.append(("table2/opt7_regresses", 0.0,
+                     str(bool(g["opt7"] < g["opt5"]))))
+    return csv_rows

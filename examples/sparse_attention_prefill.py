@@ -1,0 +1,49 @@
+"""MInference-style sparse-attention prefill (paper §IV-D):
+profile per-head attention offline, select block patterns, run prefill
+through the block-sparse attention kernel, and report recall + speedup
+bounds.
+
+Run:  PYTHONPATH=src python examples/sparse_attention_prefill.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_attention import (mask_density, profile_block_scores,
+                                         select_patterns)
+from repro.kernels.block_attn.ops import block_sparse_attention
+from repro.kernels.block_attn.ref import block_sparse_attention_ref
+
+rng = np.random.default_rng(0)
+B, H, KVH, S, D = 1, 4, 2, 512, 32
+BLOCK = 64
+
+q = rng.normal(size=(B, H, S, D)).astype(np.float32)
+k = rng.normal(size=(B, KVH, S, D)).astype(np.float32)
+v = rng.normal(size=(B, KVH, S, D)).astype(np.float32)
+# give the heads structure: head 0 sink-ish, head 1 local-ish
+q[:, 0] += 1.5
+k[:, 0, :BLOCK] += 1.5
+
+# offline profiling pass (MInference's head analysis)
+scores = profile_block_scores(jnp.asarray(q), jnp.asarray(k), block=BLOCK)
+masks, choices = select_patterns(scores, budget=0.35)
+for h, c in enumerate(choices):
+    print(f"head {h}: pattern={c.name:14s} recall={c.recall:.3f} "
+          f"density={c.density:.3f}")
+
+out_sparse = block_sparse_attention(
+    jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), masks,
+    block_q=BLOCK, block_k=BLOCK, impl="kernel_interpret")
+out_ref = block_sparse_attention_ref(
+    jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), masks,
+    block_q=BLOCK, block_k=BLOCK)
+err = float(jnp.max(jnp.abs(out_sparse - out_ref)))
+print(f"kernel vs ref max err: {err:.2e}")
+assert err < 1e-4
+
+avg_density = float(np.mean([mask_density(m) for m in masks]))
+print(f"avg causal block density {avg_density:.2f} -> attention-FLOP bound "
+      f"{1/avg_density:.2f}x (paper: MInference reaches 1.73x E2E at 64K)")
+print("sparse_attention_prefill OK")

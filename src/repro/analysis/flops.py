@@ -1,0 +1,39 @@
+"""Analytic MODEL_FLOPS (the 6·N·D convention) per (arch, shape)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6 * N_active * tokens for train; 2 * N_active * tokens for inference
+    (forward only), decode counts the single new token per sequence."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def attention_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Quadratic attention term (not in 6ND), useful-work convention
+    (causal half), forward only; x3 for train (fwd+bwd)."""
+    if cfg.attn_type == "none":
+        return 0.0
+    hd = cfg.resolved_head_dim
+    h = cfg.num_heads
+    s = shape.seq_len
+    w = cfg.sliding_window
+    span = min(w, s) if w else s
+    if shape.kind == "decode":
+        per_tok = 2 * 2 * h * hd * min(span, s)
+        return per_tok * cfg.num_layers * shape.global_batch
+    useful = s * span - (span * (span - 1)) // 2 if span < s else s * (s + 1) // 2
+    per_seq = 2 * 2 * h * hd * useful
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return mult * per_seq * cfg.num_layers * shape.global_batch

@@ -1,0 +1,61 @@
+"""Parse collective ops + bytes out of compiled HLO text.
+
+``cost_analysis`` does not report collective traffic, so we regex the
+post-SPMD module: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op line carries its (per-device) output
+shape; we sum dtype-sized byte counts per collective kind.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL = r"all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute"
+
+# e.g.:  %all-reduce.1 = f32[16,512]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+(" + _COLL + r")(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind (output-shape accounting)."""
+    out: Dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_inner, dtype, dims, kind = m.groups()
+        # avoid double counting start/done pairs: the -done op has the
+        # same kind; count only lines not ending in -done
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start: hlo_text.find("(", m.end(4))]
+        if f"{kind}-done" in line:
+            continue
+        if tuple_inner is not None:
+            b = sum(
+                _shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(tuple_inner)
+            )
+        else:
+            b = _shape_bytes(dtype, dims)
+        out[kind] += b
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())

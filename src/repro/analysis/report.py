@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.jsonl.
+
+Usage: PYTHONPATH=src python -m repro.analysis.report [results/dryrun.jsonl]
+Writes results/roofline.md (pasted into EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except Exception:
+                pass
+    # dedupe: keep the latest record per (arch, shape, mesh, sparse)
+    by = {}
+    for r in recs:
+        by[(r["arch"], r["shape"], r["mesh"], round(r.get("sparse", 0), 4))] = r
+    return list(by.values())
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def roofline_table(recs):
+    rows = [
+        "| arch | shape | mesh | compute | memory | collective | bottleneck "
+        "| GB/chip | fits | useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|---|---|"[:-4],
+    ]
+    rows[1] = "|---|---|---|---|---|---|---|---|---|---|"
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                         r["mesh"])):
+        uf = r.get("useful_fraction")
+        rf = r.get("roofline_fraction")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | {r['bottleneck']} "
+            f"| {r['per_chip_bytes']/1e9:.1f} | {'Y' if r['fits'] else 'N'} "
+            f"| {uf and f'{uf:.2f}' or '-'} "
+            f"| {rf and f'{rf:.3f}' or '-'} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    single = [r for r in recs if r["mesh"].count("x") == 1]
+    multi = [r for r in recs if r["mesh"].count("x") == 2]
+    lines = [
+        f"cells compiled: single-pod={len(single)} multi-pod={len(multi)}",
+        f"fits (single-pod): {sum(r['fits'] for r in single)}/{len(single)}",
+    ]
+    by_bn = defaultdict(int)
+    for r in single:
+        by_bn[r["bottleneck"]] += 1
+    lines.append(f"bottleneck split (single-pod): {dict(by_bn)}")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    recs = load(path)
+    out = ["## Roofline table (single-pod 16x16 unless noted)\n",
+           roofline_table(recs), "\n\n## Summary\n", summary(recs)]
+    text = "\n".join(out)
+    with open("results/roofline.md", "w") as f:
+        f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

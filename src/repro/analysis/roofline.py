@@ -1,0 +1,103 @@
+"""Three-term roofline from a compiled dry-run artifact (see ROOFLINE
+ANALYSIS spec). All quantities are per-device (the post-SPMD module is the
+per-device program), so each term divided by per-chip peak gives seconds
+directly — equivalent to the global-quantity / (chips x peak) formulation.
+
+Hardware constants: TPU v5e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import collective_bytes
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+__all__ = ["RooflineReport", "analyze_compiled", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: Optional[float] = None
+    useful_fraction: Optional[float] = None  # MODEL_FLOPS / (HLO_FLOPs*chips)
+    arg_bytes_per_device: Optional[float] = None
+    temp_bytes_per_device: Optional[float] = None
+    out_bytes_per_device: Optional[float] = None
+
+    def dominant_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> Optional[float]:
+        """Useful-compute fraction of peak at the modeled step time."""
+        if self.model_flops_total is None:
+            return None
+        t = self.dominant_time()
+        if t <= 0:
+            return None
+        return (self.model_flops_total / self.n_chips) / (t * PEAK_FLOPS)
+
+    n_chips: int = 1
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant_time_s"] = self.dominant_time()
+        d["roofline_fraction"] = self.roofline_fraction()
+        return d
+
+
+def analyze_compiled(
+    compiled,
+    n_chips: int,
+    model_flops_total: Optional[float] = None,
+) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0) or 0.0)
+    hbm = sum(
+        float(v) for k, v in ca.items() if k.startswith("bytes accessed")
+    )
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    coll_total = float(sum(coll.values()))
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    bottleneck = max(terms, key=terms.get)
+
+    ma = compiled.memory_analysis()
+    useful = None
+    if model_flops_total is not None and flops > 0:
+        useful = model_flops_total / (flops * n_chips)
+    return RooflineReport(
+        flops_per_device=flops,
+        hbm_bytes_per_device=hbm,
+        coll_bytes_per_device=coll_total,
+        coll_breakdown=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_total=model_flops_total,
+        useful_fraction=useful,
+        arg_bytes_per_device=float(ma.argument_size_in_bytes),
+        temp_bytes_per_device=float(ma.temp_size_in_bytes),
+        out_bytes_per_device=float(ma.output_size_in_bytes),
+        n_chips=n_chips,
+    )

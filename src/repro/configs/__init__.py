@@ -1,0 +1,41 @@
+"""Arch registry: ``--arch <id>`` resolves here."""
+
+from repro.configs.base import ModelConfig, reduced_config
+from repro.configs.shapes import SHAPES, InputShape, shape_applicable
+
+from repro.configs.mixtral_8x22b import CONFIG as _mixtral
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.minitron_4b import CONFIG as _minitron
+from repro.configs.h2o_danube_1p8b import CONFIG as _danube
+from repro.configs.nemotron_4_15b import CONFIG as _nemotron
+from repro.configs.granite_3_2b import CONFIG as _granite
+from repro.configs.llama32_vision_90b import CONFIG as _llamav
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.hymba_1p5b import CONFIG as _hymba
+from repro.configs.rwkv6_1p6b import CONFIG as _rwkv6
+from repro.configs.qwen25_7b import CONFIG as _qwen
+
+ARCHS = {
+    c.name: c
+    for c in [
+        _mixtral,
+        _kimi,
+        _minitron,
+        _danube,
+        _nemotron,
+        _granite,
+        _llamav,
+        _whisper,
+        _hymba,
+        _rwkv6,
+        _qwen,
+    ]
+}
+
+ASSIGNED = [c for c in ARCHS if c != "qwen2.5-7b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

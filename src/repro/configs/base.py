@@ -1,0 +1,160 @@
+"""Model / run configuration dataclasses and the arch registry hooks."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "reduced_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # defaults to d_model // num_heads
+
+    # attention
+    attn_type: str = "gqa"  # gqa | none (attention-free)
+    sliding_window: Optional[int] = None  # tokens (SWA archs)
+    rope_theta: float = 10000.0
+
+    # FFN
+    ffn_activation: str = "swiglu"  # swiglu | sq_relu | gelu
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    expert_partition: str = "ffn"  # "expert" (EP) | "ffn" (TP inside expert)
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid
+    ssm_state: int = 0
+
+    # encoder-decoder (whisper): encoder_layers > 0
+    encoder_layers: int = 0
+
+    # VLM: insert a cross-attention layer every k layers (llama-3.2-vision)
+    cross_attn_every: int = 0
+    num_vision_tokens: int = 0
+
+    # --- the paper's technique ---
+    ffn_sparsity: float = 0.0  # fraction of FFN weight blocks dropped
+    sparse_block: Tuple[int, int] = (128, 128)
+    attn_sparsity_budget: float = 0.0  # 0 => dense attention in prefill
+
+    # numerics / parallelism-dependent layout
+    dtype: str = "bf16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    tp_shards: int = 1  # model-axis size baked into sparse/expert layouts
+    fsdp: bool = False  # shard params over the data axis too (ZeRO-3-ish)
+    remat: bool = True  # activation checkpointing per layer
+    scan_layers: bool = True  # lax.scan over stacked layer params
+    attn_unroll: bool = False  # python-loop q chunks (cost probes)
+    attn_block_q: int = 256  # q-chunk size (bounds f32 score memory)
+    loss_chunk: int = 8192  # tokens per loss chunk (bounds logits memory)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so the embedding/logits shard over the model axis
+        (production practice for odd vocab sizes, e.g. granite's 49155).
+        Padded logit columns are masked to -inf in the loss and in decode."""
+        if self.tp_shards <= 1:
+            return self.vocab_size
+        mult = 128 * self.tp_shards
+        return -(-self.vocab_size // mult) * mult
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run very long contexts (long_500k)?"""
+        return self.attn_type == "none" or self.sliding_window is not None or (
+            self.family in ("ssm", "hybrid")
+        )
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (embeddings + layers)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        qkv = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        attn = qkv + o
+        n_ffn_mats = 3 if self.ffn_activation == "swiglu" else 2
+        ffn_dense = n_ffn_mats * d * self.d_ff
+        if self.is_moe:
+            ffn = self.num_experts * ffn_dense + d * self.num_experts  # + router
+        else:
+            ffn = ffn_dense
+        if self.attn_type == "none":  # rwkv6: token-mix ~ 4*d*d + decay params
+            attn = 4 * d * d + 4 * d
+        per_layer = attn + ffn + 2 * d
+        layers = self.num_layers + self.encoder_layers
+        if self.cross_attn_every:
+            n_cross = self.num_layers // self.cross_attn_every
+            # cross-attn layers already included in num_layers; add their kv
+            per_cross = attn + ffn_dense + 2 * d
+            layers = self.num_layers - n_cross
+            return (
+                self.vocab_size * d
+                + layers * per_layer
+                + n_cross * per_cross
+                + (0 if self.tie_embeddings else self.vocab_size * d)
+            )
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return emb + layers * per_layer
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE uses top_k of num_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        n_ffn_mats = 3 if self.ffn_activation == "swiglu" else 2
+        ffn_dense = n_ffn_mats * d * self.d_ff
+        total = self.param_count()
+        inactive = (self.num_experts - self.top_k) * ffn_dense * self.num_layers
+        return total - inactive
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Family-preserving smoke-test reduction (small widths, CPU-runnable)."""
+    small = dict(
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2)),
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4) if cfg.is_moe else 0,
+        top_k=min(cfg.top_k, 2) if cfg.is_moe else 0,
+        encoder_layers=2 if cfg.is_encdec else 0,
+        cross_attn_every=2 if cfg.cross_attn_every else 0,
+        num_vision_tokens=16 if cfg.cross_attn_every else 0,
+        ssm_state=min(cfg.ssm_state, 8) if cfg.ssm_state else 0,
+        sliding_window=64 if cfg.sliding_window else None,
+        sparse_block=(32, 32),
+        dtype="f32",
+        tp_shards=1,
+        fsdp=False,
+        remat=False,
+        scan_layers=cfg.scan_layers,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,19 @@
+"""Hymba 1.5B — hybrid: parallel attention + Mamba(SSM) heads in each layer,
+GQA kv=5, sliding-window on most attention layers. [arXiv:2411.13676; hf]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ffn_activation="swiglu",
+    ssm_state=16,
+    sliding_window=1024,
+)

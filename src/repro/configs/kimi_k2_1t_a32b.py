@@ -1,0 +1,22 @@
+"""Kimi K2 — trillion-param fine-grained MoE, 384 experts top-8, GQA kv=8.
+[arXiv:2501.kimi2; unverified paper-table config]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=112,  # d_model / num_heads per the assigned table
+    d_ff=2048,  # per-expert FFN width (fine-grained MoE)
+    vocab_size=163840,
+    ffn_activation="swiglu",
+    num_experts=384,
+    top_k=8,
+    expert_partition="expert",  # 384 experts / 16 shards = 24 per shard (EP)
+    rope_theta=5e6,
+    fsdp=True,  # 1T params: shard params over data axis too
+)

@@ -1,0 +1,22 @@
+"""Llama 3.2 Vision 90B backbone — 100 layers with cross-attention image
+layers every 5th layer; vision frontend is a stub supplying precomputed
+patch embeddings. [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    ffn_activation="swiglu",
+    cross_attn_every=5,  # 20 of 100 layers are cross-attention layers
+    num_vision_tokens=4096,  # stubbed patch-embedding count
+    rope_theta=5e5,
+    fsdp=True,
+)

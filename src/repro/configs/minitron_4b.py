@@ -1,0 +1,17 @@
+"""Minitron 4B — width/depth-pruned Nemotron-4, squared-ReLU MLP, GQA kv=8.
+[arXiv:2407.14679; hf]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256000,
+    ffn_activation="sq_relu",
+)

@@ -1,0 +1,22 @@
+"""Mixtral 8x22B — MoE, 8 experts top-2, GQA kv=8, SWA. [arXiv:2401.04088; hf]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    ffn_activation="swiglu",
+    num_experts=8,
+    top_k=2,
+    # 8 experts < 16 model shards: TP inside each expert (DESIGN.md §6)
+    expert_partition="ffn",
+    sliding_window=4096,
+    rope_theta=1e6,
+)

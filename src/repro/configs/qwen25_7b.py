@@ -1,0 +1,18 @@
+"""Qwen2.5-7B — the paper's §IV-D case-study model (28L, h=3584, SwiGLU
+d_ff=18944; gate/up/down all divisible by the 128x128 block)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    ffn_activation="swiglu",
+    rope_theta=1e6,
+)

@@ -1,0 +1,19 @@
+"""RWKV-6 (Finch) 1.6B — attention-free, data-dependent decay token mixing.
+[arXiv:2404.05892; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,  # wkv heads of size 64
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    attn_type="none",
+    ffn_activation="relu",  # rwkv channel-mix uses relu^2; see models/ssm.py
+    ssm_state=64,
+)

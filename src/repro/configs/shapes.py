@@ -1,0 +1,35 @@
+"""Assigned input shapes. ``decode_*``/``long_*`` lower ``serve_step``
+(single new token against a KV cache of ``seq_len``); others lower
+``train_step``."""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["InputShape", "SHAPES", "shape_applicable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg, shape: InputShape) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; reason if skipped (DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (see DESIGN.md §8)"
+        )
+    return True, ""

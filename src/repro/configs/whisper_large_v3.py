@@ -1,0 +1,21 @@
+"""Whisper large-v3 backbone — encoder-decoder, MHA (kv=20), GELU MLP.
+The conv/mel frontend is a stub: ``input_specs`` feeds precomputed frame
+embeddings to the encoder (per the assignment note). Positional encoding is
+RoPE-adapted (deviation from learned absolute positions, noted in DESIGN.md).
+[arXiv:2212.04356; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,  # decoder layers
+    encoder_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,  # MHA
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    ffn_activation="gelu",
+)

@@ -1,0 +1,162 @@
+"""MInference-lite: offline per-head block-sparse attention pattern selection.
+
+The paper (§IV-D) integrates MInference, which "profiles heads offline to
+identify dominant block-sparse patterns and dynamically applies the
+best-fitting pattern at inference time". We reproduce the offline part:
+
+* ``local_sink_mask``      — "A-shape": sliding window + attention-sink
+                              blocks (StreamingLLM-style).
+* ``vertical_slash_mask``  — top-k vertical (column) blocks + top-k slash
+                              (diagonal) blocks from profiled scores.
+* ``block_topk_mask``      — per-q-block top-k k-blocks by attention mass.
+* ``select_patterns``      — per-head: pick the pattern maximizing retained
+                              attention mass (recall) at a block budget.
+
+All outputs are host-side boolean masks [H, nqb, nkb] consumed by
+``kernels.block_attn`` (static structure, CSR-encoded for scalar prefetch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "local_sink_mask",
+    "vertical_slash_mask",
+    "block_topk_mask",
+    "profile_block_scores",
+    "select_patterns",
+    "causal_block_mask",
+    "mask_density",
+]
+
+
+def causal_block_mask(nqb: int, nkb: int) -> np.ndarray:
+    return np.tril(np.ones((nqb, nkb), bool))
+
+
+def local_sink_mask(
+    nqb: int, nkb: int, window_blocks: int, sink_blocks: int = 1
+) -> np.ndarray:
+    q = np.arange(nqb)[:, None]
+    k = np.arange(nkb)[None, :]
+    local = (k <= q) & (k > q - window_blocks)
+    sink = (k < sink_blocks) & (k <= q)
+    return local | sink
+
+
+def profile_block_scores(
+    q: jax.Array, k: jax.Array, block: int, causal: bool = True
+) -> np.ndarray:
+    """[H, nqb, nkb] mean attention probability per block (offline profile).
+
+    q: [B, H, S, D], k: [B, KVH, S, D] (kv repeated as needed).
+    Computed in f32; block-averaged post-softmax, averaged over batch.
+    """
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    kk = jnp.repeat(k, h // kvh, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    if causal:
+        tri = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(tri[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    nqb, nkb = s // block, s // block
+    pb = probs.reshape(b, h, nqb, block, nkb, block).sum(axis=(3, 5)) / block
+    return np.asarray(jax.device_get(pb.mean(axis=0)))
+
+
+def vertical_slash_mask(
+    block_scores: np.ndarray, top_vertical: int, top_slash: int
+) -> np.ndarray:
+    """Per head: keep top columns (vertical) + top diagonals (slash)."""
+    h, nqb, nkb = block_scores.shape
+    out = np.zeros((h, nqb, nkb), bool)
+    causal = causal_block_mask(nqb, nkb)
+    for i in range(h):
+        s = block_scores[i]
+        col_mass = s.sum(axis=0)
+        vcols = np.argsort(col_mass)[::-1][:top_vertical]
+        out[i][:, vcols] = True
+        diag_mass = np.array(
+            [np.trace(s, offset=-o) for o in range(nqb)]
+        )  # causal offsets only
+        slashes = np.argsort(diag_mass)[::-1][:top_slash]
+        for o in slashes:
+            idx = np.arange(nqb - o)
+            out[i][idx + o, idx] = True
+        out[i] &= causal
+        np.fill_diagonal(out[i], True)  # always keep the diagonal
+    return out
+
+
+def block_topk_mask(block_scores: np.ndarray, budget_per_row: int) -> np.ndarray:
+    """Per (head, q-block): top ``budget_per_row`` k-blocks by mass."""
+    h, nqb, nkb = block_scores.shape
+    out = np.zeros((h, nqb, nkb), bool)
+    causal = causal_block_mask(nqb, nkb)
+    for i in range(h):
+        s = np.where(causal, block_scores[i], -np.inf)
+        for qb in range(nqb):
+            kmax = min(budget_per_row, qb + 1)
+            keep = np.argsort(s[qb])[::-1][:kmax]
+            out[i, qb, keep] = True
+        np.fill_diagonal(out[i], True)
+    return out
+
+
+@dataclasses.dataclass
+class PatternChoice:
+    name: str
+    mask: np.ndarray  # [nqb, nkb]
+    recall: float
+    density: float
+
+
+def mask_density(mask: np.ndarray) -> float:
+    nqb, nkb = mask.shape[-2:]
+    causal = causal_block_mask(nqb, nkb)
+    return float(np.logical_and(mask, causal).sum() / causal.sum())
+
+
+def select_patterns(
+    block_scores: np.ndarray, budget: float = 0.25
+) -> Tuple[np.ndarray, list]:
+    """Per head, pick the pattern with the best retained-attention recall at
+    roughly the given causal-density budget. Returns ([H,nqb,nkb], choices)."""
+    h, nqb, nkb = block_scores.shape
+    wb = max(1, int(round(budget * nkb / 2)))
+    cands_global = {
+        "local_sink": local_sink_mask(nqb, nkb, window_blocks=wb, sink_blocks=1),
+    }
+    vs = vertical_slash_mask(
+        block_scores, top_vertical=max(1, wb), top_slash=max(1, wb)
+    )
+    tk = block_topk_mask(block_scores, budget_per_row=max(1, int(budget * nkb)))
+    out = np.zeros((h, nqb, nkb), bool)
+    choices = []
+    causal = causal_block_mask(nqb, nkb)
+    for i in range(h):
+        total = block_scores[i][causal].sum()
+        best = None
+        for name, m in list(cands_global.items()) + [
+            ("vertical_slash", vs[i]),
+            ("block_topk", tk[i]),
+        ]:
+            mm = m & causal
+            recall = float(block_scores[i][mm].sum() / max(total, 1e-9))
+            c = PatternChoice(name, mm, recall, mask_density(mm))
+            # prefer higher recall; break ties toward lower density
+            if best is None or (c.recall - 0.02 * c.density) > (
+                best.recall - 0.02 * best.density
+            ):
+                best = c
+        out[i] = best.mask
+        choices.append(best)
+    return out, choices

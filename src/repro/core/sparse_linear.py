@@ -1,0 +1,82 @@
+"""Block-sparse linear layer — the paper's technique as a first-class module.
+
+``SparseLinear`` is the single-device / serving form: static BCSR structure
+(host-side), trainable block values, forward via the Pallas BCSR kernel (or
+jnp reference), backward via SDDMM + transposed SpMM (``bcsr_matmul``).
+
+The SPMD training form used by the model zoo (runtime index arrays so the
+layer traces once under shard_map) lives in ``repro.models.ffn``.
+
+Computes ``y = x @ W^T`` for ``W: [out_dim, in_dim]`` block-sparse — i.e.
+the paper's FFN orientation ``C = W_sparse @ X^T`` (§IV-D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BCSR
+from repro.core.sparsify import sparsify_to_bcsr
+from repro.kernels.bcsr.ops import BCSRStructure, bcsr_matmul, structure_of
+
+__all__ = ["SparseLinearSpec", "SparseLinear", "sparse_linear_from_dense"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinearSpec:
+    in_dim: int
+    out_dim: int
+    sparsity: float
+    block: Tuple[int, int] = (128, 128)
+    method: str = "magnitude"  # or "random" (the paper's §IV-D setting)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SparseLinear:
+    """values: [nnz, bm, bk] trainable; structure: static host-side."""
+
+    values: jax.Array
+    structure: BCSRStructure
+
+    def __call__(self, x: jax.Array, impl: str = "auto") -> jax.Array:
+        # y^T = W @ x^T;  x: [..., in_dim] -> y: [..., out_dim]
+        lead = x.shape[:-1]
+        xt = x.reshape(-1, x.shape[-1]).T  # [in, tokens]
+        yt = bcsr_matmul(self.values, xt, self.structure, impl)  # [out, tokens]
+        return yt.T.reshape(*lead, self.structure.shape[0])
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.structure.shape
+
+    def to_bcsr(self) -> BCSR:
+        from repro.kernels.bcsr.ops import _as_bcsr
+
+        return _as_bcsr(self.values, self.structure)
+
+
+def sparse_linear_from_dense(
+    w: np.ndarray, spec: SparseLinearSpec, pad_to: int | None = None
+) -> SparseLinear:
+    a = sparsify_to_bcsr(
+        w, spec.block, spec.sparsity, method=spec.method, seed=spec.seed,
+        pad_to=pad_to,
+    )
+    return SparseLinear(values=a.blocks, structure=structure_of(a))
+
+
+def init_sparse_linear(key: jax.Array, spec: SparseLinearSpec) -> SparseLinear:
+    """Random init + random block structure (training-from-scratch path)."""
+    scale = 1.0 / np.sqrt(spec.in_dim)
+    w = scale * np.asarray(
+        jax.random.normal(key, (spec.out_dim, spec.in_dim), jnp.float32)
+    )
+    return sparse_linear_from_dense(
+        w, dataclasses.replace(spec, method="random")
+    )

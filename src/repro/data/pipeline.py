@@ -1,0 +1,60 @@
+"""Host-side input pipeline: background prefetch thread + shard-aware
+iteration. The prefetcher keeps ``depth`` batches ready so host data
+generation overlaps device compute (the async input trick at scale)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+__all__ = ["Prefetcher", "make_train_iterator"]
+
+
+class Prefetcher:
+    def __init__(self, make_batch: Callable[[int], dict], start_step: int = 0,
+                 depth: int = 2):
+        self._make = make_batch
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                batch = self._make(step)
+            except Exception:  # surface errors on get()
+                self._q.put(None)
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def get(self):
+        item = self._q.get()
+        if item is None:
+            raise RuntimeError("data pipeline thread failed")
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+
+def make_train_iterator(dataset, batch: int, seq: int, start_step: int = 0,
+                        depth: int = 2) -> Prefetcher:
+    return Prefetcher(
+        lambda step: dataset.batch(step, batch, seq), start_step, depth
+    )

@@ -1,0 +1,2 @@
+from repro.kernels.bcsr.ops import bcsr_spmm, bcsr_matmul
+from repro.kernels.bcsr.ref import bcsr_spmm_ref

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for BCSR SpMM: C[m,n] = A_bcsr[m,k] @ B[k,n].
+
+This is also the "dense-compute path" used by the distributed models in the
+dry-run: gather B tiles by block column, batched micro-GEMM, segment-sum by
+block row. Its FLOP/byte footprint matches the Pallas kernel's, so roofline
+terms derived from it are representative of the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BCSR
+
+
+def bcsr_spmm_ref(a: BCSR, b: jax.Array, out_dtype=None) -> jax.Array:
+    """Reference SpMM via gather + einsum + segment-sum."""
+    m, k = a.shape
+    if b.shape[0] != k:
+        raise ValueError(f"A {a.shape} @ B {b.shape}: inner dims differ")
+    n = b.shape[1]
+    bm, bk = a.block
+    mb = m // bm
+    out_dtype = out_dtype or b.dtype
+    b_tiles = b.reshape(k // bk, bk, n)[a.block_cols]  # [nnz_p, bk, n]
+    partial = jnp.einsum(
+        "zij,zjn->zin", a.blocks, b_tiles, preferred_element_type=jnp.float32
+    )  # [nnz_p, bm, n]
+    out = jax.ops.segment_sum(partial, a.block_rows, num_segments=mb)
+    return out.reshape(m, n).astype(out_dtype)
+
+
+def bcsr_spmm_dense_ref(a: BCSR, b: jax.Array, out_dtype=None) -> jax.Array:
+    """Second, independent oracle: densify then matmul."""
+    from repro.core.formats import bcsr_to_dense
+
+    dense = bcsr_to_dense(a)
+    out = jnp.dot(dense, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or b.dtype)
+
+
+def sddmm_ref(
+    dc: jax.Array, b: jax.Array, a_struct: BCSR, out_dtype=None
+) -> jax.Array:
+    """Sampled dense-dense: dA_blocks[i] = dC[rows_i-tile] @ B[cols_i-tile]^T.
+
+    Used for the weight gradient of block-sparse layers. Returns
+    [nnz_padded, bm, bk] block values matching ``a_struct``'s layout.
+    """
+    m, n = dc.shape
+    bm, bk = a_struct.block
+    dc_tiles = dc.reshape(m // bm, bm, n)[a_struct.block_rows]  # [nnz_p, bm, n]
+    b_tiles = b.reshape(b.shape[0] // bk, bk, n)[a_struct.block_cols]
+    out = jnp.einsum(
+        "zin,zjn->zij", dc_tiles, b_tiles, preferred_element_type=jnp.float32
+    )
+    # zero the padding entries so they never leak into parameter updates
+    nnz = a_struct.nnz_blocks
+    valid = (jnp.arange(a_struct.nnz_padded) < nnz)[:, None, None]
+    out = jnp.where(valid, out, 0)
+    return out.astype(out_dtype or dc.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.block_attn.ops import block_sparse_attention
+from repro.kernels.block_attn.ref import block_sparse_attention_ref

@@ -1,0 +1,180 @@
+"""Pallas TPU block-sparse flash attention (MInference-analogue, paper §IV-D).
+
+Per (head, q-block) the set of active k-blocks is CSR-encoded and scalar-
+prefetched; the K/V BlockSpec index_maps chase the active list so *only
+active blocks are DMA'd* — the TPU equivalent of MInference's Triton kernel
+computing "only the dynamically selected sparse subset of query-key blocks".
+Online softmax runs in VMEM scratch across the active-block grid dimension.
+
+Grid = (B*H, num_q_blocks, max_active_kblocks); padding steps (j >= the
+q-block's active count) re-DMA the last active block and are compute-masked.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    ptr_ref,  # [H*nqb + 1] i32 CSR pointers into kcols
+    kcols_ref,  # [total_active] i32 active k-block indices
+    q_ref,  # [1, bq, d]
+    k_ref,  # [1, bk, d]
+    v_ref,  # [1, bk, d]
+    o_ref,  # [1, bq, d]
+    m_ref,  # [bq, 128] f32 running max
+    l_ref,  # [bq, 128] f32 running denominator
+    acc_ref,  # [bq, d] f32 running numerator
+    *,
+    bq: int,
+    bk: int,
+    max_active: int,
+    heads: int,
+    nqb: int,
+    causal: bool,
+    scale: float,
+):
+    bh = pl.program_id(0)
+    qb = pl.program_id(1)
+    j = pl.program_id(2)
+    h = bh % heads
+    base = ptr_ref[h * nqb + qb]
+    count = ptr_ref[h * nqb + qb + 1] - base
+    active = j < count
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(active)
+    def _step():
+        kidx = kcols_ref[base + jnp.minimum(j, count - 1)]
+        s = (
+            jax.lax.dot_general(
+                q_ref[0],
+                k_ref[0],
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )  # [bq, bk]
+        if causal:
+            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kidx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[:, :1]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        # rows that are still fully masked keep exp(NEG_INF - NEG_INF) = 1
+        # on masked lanes; kill them explicitly
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == max_active - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        norm = jnp.where(l > 0, 1.0 / jnp.where(l > 0, l, 1.0), 0.0)
+        o_ref[0] = (acc_ref[...] * norm).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "heads",
+        "kv_heads",
+        "block_q",
+        "block_k",
+        "max_active",
+        "causal",
+        "scale",
+        "interpret",
+    ),
+)
+def block_sparse_attention_kernel(
+    ptr: jax.Array,  # [H*nqb + 1] i32
+    kcols: jax.Array,  # [total_active] i32
+    q: jax.Array,  # [B*H, S, D]
+    k: jax.Array,  # [B*KVH, S, D]
+    v: jax.Array,  # [B*KVH, S, D]
+    *,
+    heads: int,
+    kv_heads: int,
+    block_q: int,
+    block_k: int,
+    max_active: int,
+    causal: bool,
+    scale: float,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, d = q.shape
+    nqb = s // block_q
+    group = heads // kv_heads
+    grid = (bh, nqb, max_active)
+    kv_index = lambda b, qb, j, ptr, kcols: (
+        # kv row for this q head; padding steps clamp to the last active block
+        (b // heads) * kv_heads + (b % heads) // group,
+        kcols[
+            ptr[(b % heads) * nqb + qb]
+            + jnp.minimum(
+                j,
+                jnp.maximum(
+                    ptr[(b % heads) * nqb + qb + 1]
+                    - ptr[(b % heads) * nqb + qb]
+                    - 1,
+                    0,
+                ),
+            )
+        ],
+        0,
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel,
+            bq=block_q,
+            bk=block_k,
+            max_active=max_active,
+            heads=heads,
+            nqb=nqb,
+            causal=causal,
+            scale=scale,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0)),
+                pl.BlockSpec((1, block_k, d), kv_index),
+                pl.BlockSpec((1, block_k, d), kv_index),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 128), jnp.float32),
+                pltpu.VMEM((block_q, 128), jnp.float32),
+                pltpu.VMEM((block_q, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ptr, kcols, q, k, v)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for block-sparse attention.
+
+Dense attention with -inf applied outside the allowed (q-block, k-block)
+pairs, plus optional causal masking. The block mask is per *kv-head group*
+(MInference selects patterns per head).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_sparse_attention_ref(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, KVH, S, D]
+    v: jax.Array,  # [B, KVH, S, D]
+    block_mask: np.ndarray,  # [H, nqb, nkb] bool
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, kk, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.asarray(np.asarray(block_mask, bool))
+    mask_el = jnp.repeat(jnp.repeat(mask, block_q, axis=1), block_k, axis=2)
+    mask_el = mask_el[:, :s, :s]
+    if causal:
+        tri = jnp.tril(jnp.ones((s, s), bool))
+        mask_el = jnp.logical_and(mask_el, tri[None])
+    scores = jnp.where(mask_el[None], scores, -jnp.inf)
+    # rows with no allowed key at all produce zeros, not NaNs
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

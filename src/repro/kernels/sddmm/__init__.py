@@ -1,0 +1,2 @@
+from repro.kernels.sddmm.ops import sddmm
+from repro.kernels.sddmm.ref import sddmm_ref

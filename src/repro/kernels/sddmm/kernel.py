@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for block-sampled SDDMM (weight grad of BCSR layers).
+
+Grid = (nnz_padded, n_tiles), n innermost: each stored block (r, c)
+accumulates dC[r-tile, n-slice] @ B[c-tile, n-slice]^T over the n slices in a
+VMEM accumulator, then stores its [bm, bk] block. Both operand streams are
+BlockSpec-driven (scalar-prefetched block indices), double-buffered by
+Mosaic — the same TMA-analogue machinery as the forward kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
+    del rows_ref, cols_ref
+    nt = pl.program_id(1)
+    i = pl.program_id(0)
+
+    @pl.when(nt == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        dc_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(nt == n_tiles - 1)
+    def _store():
+        valid = i < nnz  # padding blocks must not produce gradient
+        o_ref[0] = jnp.where(valid, acc_ref[...], 0).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "nnz", "bn", "out_dtype", "interpret")
+)
+def sddmm_kernel(
+    block_rows: jax.Array,
+    block_cols: jax.Array,
+    dc: jax.Array,  # [m, n]
+    b: jax.Array,  # [k, n]
+    *,
+    block: tuple,
+    nnz: int,
+    bn: int = 512,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    bm, bk = block
+    nnz_p = block_rows.shape[0]
+    m, n = dc.shape
+    if n % bn:
+        raise ValueError(f"n={n} must be a multiple of bn={bn}")
+    n_tiles = n // bn
+    out_dtype = out_dtype or dc.dtype
+    return pl.pallas_call(
+        functools.partial(_kernel, n_tiles=n_tiles, nnz=nnz),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nnz_p, n_tiles),
+            in_specs=[
+                pl.BlockSpec((bm, bn), lambda i, nt, rows, cols: (rows[i], nt)),
+                pl.BlockSpec((bk, bn), lambda i, nt, rows, cols: (cols[i], nt)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bk), lambda i, nt, rows, cols: (i, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((nnz_p, bm, bk), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_rows, block_cols, dc, b)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for block-sampled dense-dense matmul (SDDMM).
+
+dA_blocks[i] = dC[rows_i * bm : (rows_i+1) * bm, :] @ B[cols_i * bk :, :]^T
+
+This is the weight-gradient op for block-sparse layers: only the stored
+blocks of the sparse weight receive gradient.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BCSR
+
+
+def sddmm_ref(dc: jax.Array, b: jax.Array, a_struct: BCSR, out_dtype=None):
+    m, n = dc.shape
+    bm, bk = a_struct.block
+    dc_tiles = dc.reshape(m // bm, bm, n)[a_struct.block_rows]  # [nnz_p, bm, n]
+    b_tiles = b.reshape(b.shape[0] // bk, bk, n)[a_struct.block_cols]
+    out = jnp.einsum(
+        "zin,zjn->zij", dc_tiles, b_tiles, preferred_element_type=jnp.float32
+    )
+    nnz = a_struct.nnz_blocks
+    valid = (jnp.arange(a_struct.nnz_padded) < nnz)[:, None, None]
+    out = jnp.where(valid, out, 0)
+    return out.astype(out_dtype or dc.dtype)

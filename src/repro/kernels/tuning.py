@@ -1,0 +1,59 @@
+"""Tile-size selection (paper §IV-C, adapted to TPU).
+
+The paper's free parameter WGMMA_N (-> BN = 2*WGMMA_N) maps to our kernel's
+``bn`` (output-tile width). The paper's §IV-C findings transfer directly:
+
+* larger bn amortizes per-step DMA + grid overhead and raises useful work
+  per loaded A block;
+* bn that doesn't divide N forces zero-padding waste proportional to
+  (ceil(N/bn)*bn - N)/N;
+* the resource ceiling is VMEM (their register/SMEM occupancy analogue):
+  Q-stage double buffers of the A block and B tile plus the f32 accumulator
+  must fit.
+
+``select_bn`` implements the paper's final policy: the largest candidate
+that divides N, subject to the VMEM budget; otherwise minimize padding waste.
+"""
+
+from __future__ import annotations
+
+VMEM_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+DEFAULT_STAGES = 2  # Mosaic double buffering
+
+
+def vmem_usage(bm: int, bk: int, bn: int, dtype_bytes: int = 2,
+               stages: int = DEFAULT_STAGES) -> int:
+    a = stages * bm * bk * dtype_bytes
+    b = stages * bk * bn * dtype_bytes
+    acc = bm * bn * 4
+    out = bm * bn * dtype_bytes
+    return a + b + acc + out
+
+
+def padding_waste(n: int, bn: int) -> float:
+    padded = -(-n // bn) * bn
+    return (padded - n) / padded
+
+
+def select_bn(
+    n: int,
+    bm: int = 128,
+    bk: int = 128,
+    dtype_bytes: int = 2,
+    candidates=(1024, 512, 384, 256, 128),
+    vmem_budget: int = VMEM_BYTES,
+) -> int:
+    """Paper §IV-C policy: max bn dividing N within the VMEM budget."""
+    fitting = [
+        c
+        for c in candidates
+        if vmem_usage(bm, bk, c, dtype_bytes) <= vmem_budget and c <= max(n, 128)
+    ]
+    if not fitting:
+        return 128
+    divisors = [c for c in fitting if n % c == 0]
+    if divisors:
+        return max(divisors)
+    # no exact divisor: pick the candidate minimizing padding waste, ties to
+    # the larger tile (amortization wins, §IV-C Fig. 7)
+    return min(fitting, key=lambda c: (padding_waste(n, c), -c))

@@ -1,0 +1,2 @@
+from repro.kernels.wcsr.ops import wcsr_spmm
+from repro.kernels.wcsr.ref import wcsr_spmm_ref

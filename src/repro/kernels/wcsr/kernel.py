@@ -1,0 +1,255 @@
+"""Pallas TPU kernel for WCSR SpMM (paper §III-B/C, TPU-native).
+
+The defining constraint of WCSR (paper §III-B): the packed A values are
+contiguous (bulk-DMA-able, like TMA), but the matching B rows are *indirect*
+through ``col_idx`` — an access TMA cannot express, and neither can a
+BlockSpec. The paper falls back to a cooperative thread gather; the TPU
+analogue implemented here is a **scalar-core-driven row gather**: per packed
+column, a ``pltpu.make_async_copy`` DMA from the HBM-resident B (ANY memory
+space) into a VMEM scratch, indexed by the scalar-prefetched ``col_idx``.
+Like the paper's WCSR kernel, each iteration is load-then-compute within a
+single "warpgroup" (no producer/consumer split — §III-C explains why that
+does not pay off when the gather occupies all lanes); the contiguous A
+stream is still pipelined by Mosaic.
+
+Load balancing (paper §III-C): windows are pre-split into fixed-size tasks of
+at most ``chunks_per_task`` packed-column chunks; ``program_id(0)`` indexes
+*tasks*, not windows. Partial window outputs land in a [num_tasks, b_row, bn]
+buffer and are segment-summed into windows by the wrapper — the deterministic
+TPU replacement for the paper's atomicAdd combine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    # scalar prefetch
+    task_start_ref,  # [T] i32 chunk offset (in b_col units) of each task
+    task_nchunks_ref,  # [T] i32 number of active chunks of each task
+    col_idx_ref,  # [C] i32 original B row per packed column (-1 pad)
+    # operands
+    a_ref,  # [b_row, b_col] current packed-value chunk (VMEM)
+    b_hbm_ref,  # [k, n] dense B (ANY/HBM — indirectly gathered)
+    # output
+    o_ref,  # [1, b_row, bn] partial output tile of this task
+    # scratch
+    gather_ref,  # [b_col, bn] VMEM gather buffer for B rows
+    sem,  # DMA semaphore
+    acc_ref,  # [b_row, bn] f32 accumulator
+    *,
+    b_col: int,
+    bn: int,
+    chunks_per_task: int,
+):
+    g = pl.program_id(2)
+    nt = pl.program_id(1)
+    t = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    active = g < task_nchunks_ref[t]
+
+    @pl.when(active)
+    def _gather_and_mac():
+        # --- load phase: gather b_col rows of B (cooperative gather analogue)
+        base = (task_start_ref[t] + g) * b_col
+        copies = []
+        for j in range(b_col):  # static unroll: one row DMA per packed column
+            src_row = jnp.maximum(col_idx_ref[base + j], 0)
+            cp = pltpu.make_async_copy(
+                b_hbm_ref.at[pl.ds(src_row, 1), pl.ds(nt * bn, bn)],
+                gather_ref.at[pl.ds(j, 1), :],
+                sem,
+            )
+            cp.start()
+            copies.append(cp)
+        for cp in copies:  # barrier: wait for the whole chunk
+            cp.wait()
+        # --- compute phase: micro-GEMM on the MXU (WGMMA analogue)
+        acc_ref[...] += jnp.dot(
+            a_ref[...], gather_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(g == chunks_per_task - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _kernel_db(
+    task_start_ref,
+    task_nchunks_ref,
+    col_idx_ref,
+    a_ref,
+    b_hbm_ref,
+    o_ref,
+    gather0_ref,  # double-buffered gather scratch, slot 0
+    gather1_ref,  # slot 1
+    sem0,
+    sem1,
+    acc_ref,
+    *,
+    b_col: int,
+    bn: int,
+    chunks_per_task: int,
+):
+    """Beyond-paper variant (EXPERIMENTS.md §Perf): double-buffered gather.
+
+    The paper's WCSR kernel serializes gather -> matmul within each
+    iteration (§III-C). On TPU the gather is issued by the single scalar
+    core, so serialization costs ~30ns x b_col per chunk. Here chunk g+1's
+    row DMAs are issued *before* computing chunk g, overlapping the gather
+    with the MXU — the producer/consumer idea of the paper's BCSR pipeline
+    applied to the indirect operand.
+    """
+    g = pl.program_id(2)
+    nt = pl.program_id(1)
+    t = pl.program_id(0)
+    nchunks = task_nchunks_ref[t]
+
+    def copies_for(chunk, buf, sem):
+        base = (task_start_ref[t] + chunk) * b_col
+        out = []
+        for j in range(b_col):
+            src_row = jnp.maximum(col_idx_ref[base + j], 0)
+            out.append(pltpu.make_async_copy(
+                b_hbm_ref.at[pl.ds(src_row, 1), pl.ds(nt * bn, bn)],
+                buf.at[pl.ds(j, 1), :],
+                sem,
+            ))
+        return out
+
+    @pl.when(g == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(g == 0, nchunks > 0))
+    def _prime():  # issue chunk 0's gather (slot 0)
+        for cp in copies_for(0, gather0_ref, sem0):
+            cp.start()
+
+    active = g < nchunks
+    even = (g % 2) == 0
+
+    # producer: issue chunk g+1 into the other slot while g is in flight
+    @pl.when(jnp.logical_and(active, jnp.logical_and(g + 1 < nchunks, even)))
+    def _prefetch_odd():
+        for cp in copies_for(g + 1, gather1_ref, sem1):
+            cp.start()
+
+    @pl.when(jnp.logical_and(active,
+                             jnp.logical_and(g + 1 < nchunks,
+                                             jnp.logical_not(even))))
+    def _prefetch_even():
+        for cp in copies_for(g + 1, gather0_ref, sem0):
+            cp.start()
+
+    # consumer: wait for chunk g's slot, then MXU
+    @pl.when(jnp.logical_and(active, even))
+    def _consume_even():
+        for cp in copies_for(g, gather0_ref, sem0):
+            cp.wait()
+        acc_ref[...] += jnp.dot(
+            a_ref[...], gather0_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(active, jnp.logical_not(even)))
+    def _consume_odd():
+        for cp in copies_for(g, gather1_ref, sem1):
+            cp.wait()
+        acc_ref[...] += jnp.dot(
+            a_ref[...], gather1_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(g == chunks_per_task - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b_row",
+        "b_col",
+        "bn",
+        "chunks_per_task",
+        "out_dtype",
+        "interpret",
+        "pipeline_gather",
+    ),
+)
+def wcsr_spmm_kernel(
+    task_start: jax.Array,  # [T] i32
+    task_nchunks: jax.Array,  # [T] i32
+    col_idx: jax.Array,  # [C] i32
+    values: jax.Array,  # [b_row, C]
+    b: jax.Array,  # [k, n], n multiple of bn
+    *,
+    b_row: int,
+    b_col: int,
+    bn: int,
+    chunks_per_task: int,
+    out_dtype=None,
+    interpret: bool = True,
+    pipeline_gather: bool = False,
+) -> jax.Array:
+    num_tasks = task_start.shape[0]
+    k, n = b.shape
+    if n % bn:
+        raise ValueError(f"n={n} must be a multiple of bn={bn}")
+    out_dtype = out_dtype or b.dtype
+    grid = (num_tasks, n // bn, chunks_per_task)
+    if pipeline_gather:
+        body = functools.partial(
+            _kernel_db, b_col=b_col, bn=bn, chunks_per_task=chunks_per_task)
+        scratch = [
+            pltpu.VMEM((b_col, bn), b.dtype),
+            pltpu.VMEM((b_col, bn), b.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((b_row, bn), jnp.float32),
+        ]
+    else:
+        body = functools.partial(
+            _kernel, b_col=b_col, bn=bn, chunks_per_task=chunks_per_task)
+        scratch = [
+            pltpu.VMEM((b_col, bn), b.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((b_row, bn), jnp.float32),
+        ]
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                # contiguous packed-value chunk: TMA-analogue BlockSpec stream.
+                # Clamped so inactive tail chunks (g >= nchunks, compute
+                # masked) never index past the packed array.
+                pl.BlockSpec(
+                    (b_row, b_col),
+                    lambda t, nt, g, ts, tn, ci: (
+                        0,
+                        jnp.minimum(ts[t] + g, values.shape[1] // b_col - 1),
+                    ),
+                ),
+                # B stays in HBM; gathered manually inside the kernel
+                pl.BlockSpec(memory_space=pl.ANY),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, b_row, bn), lambda t, nt, g, ts, tn, ci: (t, 0, nt)
+            ),
+            scratch_shapes=scratch,
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_tasks, b_row, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(task_start, task_nchunks, col_idx, values, b)

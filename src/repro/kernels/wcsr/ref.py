@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for WCSR SpMM: C = A_wcsr @ B.
+
+Gather the B rows named by ``col_idx`` (clamped; padding columns have zero
+values so their contribution vanishes), multiply with the packed column
+vectors, segment-sum packed columns into their windows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import WCSR
+
+
+def wcsr_spmm_ref(a: WCSR, b: jax.Array, out_dtype=None) -> jax.Array:
+    m, k = a.shape
+    if b.shape[0] != k:
+        raise ValueError(f"A {a.shape} @ B {b.shape}: inner dims differ")
+    n = b.shape[1]
+    out_dtype = out_dtype or b.dtype
+    idx = jnp.maximum(a.col_idx, 0)  # padding cols gather row 0, values are 0
+    b_rows = b[idx]  # [C, n]
+    # window of each packed column
+    win = jnp.searchsorted(a.window_ptr, jnp.arange(a.padded_cols), side="right") - 1
+    win = jnp.clip(win, 0, a.num_windows - 1)
+    # per-column outer products summed per window:
+    # out[w, r, n] = sum_{c in w} values[r, c] * b_rows[c, n]
+    contrib = jnp.einsum(
+        "rc,cn->crn", a.values, b_rows, preferred_element_type=jnp.float32
+    )
+    out = jax.ops.segment_sum(contrib, win, num_segments=a.num_windows)
+    return out.reshape(m, n).astype(out_dtype)
+
+
+def wcsr_spmm_dense_ref(a: WCSR, b: jax.Array, out_dtype=None) -> jax.Array:
+    """Second, independent oracle: densify then matmul."""
+    from repro.core.formats import wcsr_to_dense
+
+    dense = wcsr_to_dense(a)
+    return jnp.dot(dense, b, preferred_element_type=jnp.float32).astype(
+        out_dtype or b.dtype
+    )

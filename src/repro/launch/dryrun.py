@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For train/prefill shapes this lowers ``train_step`` (prefill lowers the
+forward); decode shapes lower ``serve_step`` (one token vs a seq_len cache).
+Prints ``memory_analysis()`` (fit proof) and ``cost_analysis()`` (FLOPs /
+bytes) per cell and appends a JSON record consumed by
+``analysis/roofline`` + EXPERIMENTS.md.
+
+Cost accounting: XLA counts ``lax.scan`` bodies once, so the scanned-layer
+module under-reports per-layer FLOPs/bytes/collectives. The dry-run
+therefore compiles two small **probe** modules per cell (layers unrolled,
+attention q-chunks unrolled, single-chunk loss) at 2 and 4 layer-units and
+extrapolates terms(L) = a + b*L to the full depth — exact for everything
+linear in depth (everything except the rwkv/mamba time recurrences, whose
+inner-scan cost is small and noted in EXPERIMENTS.md). The scanned compile
+still provides the fit proof (memory_analysis) and the multi-pod success
+proof.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      [--arch all|<id>[,<id>..]] [--shape all|<name>] [--mesh both|single|multi]
+      [--out results/dryrun.jsonl] [--sparse 0.9] [--optimizer auto]
+      [--no-probe] [--skip-done]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.flops import attention_flops, model_flops
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     analyze_compiled)
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import mesh_context
+from repro.models.registry import build_model
+from repro.parallel.sharding import (batch_shardings, make_mesh_rules,
+                                     param_shardings)
+from repro.serve.step import decode_cache_axes, make_serve_step
+from repro.train.step import init_train_state, make_train_step
+from repro.optim import adamw, adafactor
+
+# v5e per-chip HBM budget the fit check reports against
+HBM_PER_CHIP = 16 * 1024**3
+
+
+def _opt_for(cfg: ModelConfig, override: str) -> str:
+    if override != "auto":
+        return override
+    # Adafactor above 30B params (DESIGN.md §6)
+    return "adafactor" if cfg.param_count() > 30e9 else "adamw"
+
+
+def _opt_state_axes(params_axes, optimizer: str):
+    """Optimizer-state axes mirror the param axes (scalar sentinels -> ())."""
+    if optimizer == "adamw":
+        return adamw.AdamWState(step=(), mu=params_axes, nu=params_axes)
+    return adafactor.AdafactorState(step=(), vr=params_axes, vc=params_axes)
+
+
+def lower_cell(cfg: ModelConfig, shape, mesh, optimizer: str = "auto"):
+    """Lower the cell's step function with full shardings; returns lowered."""
+    model = build_model(cfg)
+    rules = make_mesh_rules(mesh, fsdp=cfg.fsdp)
+    opt = _opt_for(cfg, optimizer)
+    key = jax.random.PRNGKey(0)
+
+    with mesh_context(mesh, rules):
+        params_struct = jax.eval_shape(model.init, key)
+        axes = model.param_axes()
+        params_sh = param_shardings(mesh, params_struct, axes, rules)
+
+        if shape.kind == "train":
+            step_fn = make_train_step(model, optimizer=opt)
+            state_struct = jax.eval_shape(
+                lambda p: init_train_state(p, opt), params_struct)
+            opt_axes = _opt_state_axes(axes, opt)
+            opt_sh = param_shardings(mesh, state_struct.opt, opt_axes, rules)
+            state_sh = type(state_struct)(params=params_sh, opt=opt_sh)
+            batch_struct = model.input_spec(shape)
+            batch_sh = batch_shardings(mesh, batch_struct, rules)
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+            ).lower(state_struct, batch_struct)
+        elif shape.kind == "prefill":
+            fwd = lambda p, b: model.forward(p, b)
+            batch_struct = model.input_spec(shape)
+            batch_sh = batch_shardings(mesh, batch_struct, rules)
+            lowered = jax.jit(
+                fwd, in_shardings=(params_sh, batch_sh)
+            ).lower(params_struct, batch_struct)
+        else:  # decode
+            b = shape.global_batch
+            front = {}
+            if cfg.cross_attn_every:
+                front["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+            elif cfg.is_encdec:
+                front["enc_states"] = jax.ShapeDtypeStruct(
+                    (b, min(shape.seq_len, 4096), cfg.d_model), jnp.bfloat16)
+            cache_struct = jax.eval_shape(
+                lambda: model.init_decode_cache(b, shape.seq_len,
+                                                *front.values()))
+            cache_axes = decode_cache_axes(cfg)
+            cache_sh = param_shardings(mesh, cache_struct, cache_axes, rules)
+            serve = make_serve_step(model)
+            tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+            tok_sh = batch_shardings(mesh, tok, rules)
+            lowered = jax.jit(
+                serve,
+                in_shardings=(params_sh, cache_sh, tok_sh, tok_sh),
+                donate_argnums=(1,),
+            ).lower(params_struct, cache_struct, tok, tok)
+    return lowered, opt
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: unrolled small-depth compiles, extrapolated linearly in depth
+# ---------------------------------------------------------------------------
+
+
+def _probe_cfg(cfg: ModelConfig, units: int) -> ModelConfig:
+    over = dict(scan_layers=False, attn_unroll=True, loss_chunk=1 << 30,
+                remat=True)
+    if cfg.cross_attn_every:
+        over["num_layers"] = units * cfg.cross_attn_every
+    elif cfg.is_encdec:
+        over["num_layers"] = units
+        over["encoder_layers"] = units
+    else:
+        over["num_layers"] = units
+    return dataclasses.replace(cfg, **over)
+
+
+def _full_units(cfg: ModelConfig) -> int:
+    if cfg.cross_attn_every:
+        return cfg.num_layers // cfg.cross_attn_every
+    return cfg.num_layers
+
+
+def probe_terms(cfg: ModelConfig, shape, mesh, optimizer: str):
+    """(flops, hbm_bytes, coll_bytes) per device, extrapolated to full depth."""
+    u1, u2 = (1, 2) if cfg.cross_attn_every else (2, 4)
+    vals = []
+    for u in (u1, u2):
+        pc = _probe_cfg(cfg, u)
+        lowered, _ = lower_cell(pc, shape, mesh, optimizer)
+        compiled = lowered.compile()
+        r = analyze_compiled(compiled, mesh.devices.size)
+        vals.append((r.flops_per_device, r.hbm_bytes_per_device,
+                     r.coll_bytes_per_device))
+        del compiled, lowered
+    full = _full_units(cfg)
+    out = []
+    for v1, v2 in zip(*vals):
+        b = (v2 - v1) / (u2 - u1)
+        a = v1 - b * u1
+        out.append(max(a + b * full, 0.0))
+    return tuple(out)
+
+
+def dryrun_cell(cfg: ModelConfig, shape, mesh, *, optimizer="auto",
+                sparse: float = 0.0, probe: bool = True, verbose=True):
+    n_chips = mesh.devices.size
+    cfg = dataclasses.replace(
+        cfg,
+        tp_shards=mesh.shape["model"],
+        ffn_sparsity=sparse if sparse > 0 else cfg.ffn_sparsity,
+    )
+    t0 = time.time()
+    lowered, opt = lower_cell(cfg, shape, mesh, optimizer)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mf = model_flops(cfg, shape) + attention_flops(cfg, shape)
+    report = analyze_compiled(compiled, n_chips, model_flops_total=mf)
+    ma = compiled.memory_analysis()
+    per_chip = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+    fits = per_chip <= HBM_PER_CHIP
+
+    rec = report.to_dict()
+    if probe:
+        pf, pm, pc = probe_terms(cfg, shape, mesh, optimizer)
+        rec.update(
+            flops_per_device=pf, hbm_bytes_per_device=pm,
+            coll_bytes_per_device=pc,
+            compute_s=pf / PEAK_FLOPS, memory_s=pm / HBM_BW,
+            collective_s=pc / ICI_BW,
+        )
+        terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+                 "collective": rec["collective_s"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["dominant_time_s"] = max(terms.values())
+        rec["useful_fraction"] = mf / (pf * n_chips) if pf else None
+        rec["roofline_fraction"] = (
+            (mf / n_chips) / (rec["dominant_time_s"] * PEAK_FLOPS)
+            if rec["dominant_time_s"] > 0 else None)
+
+    if verbose:
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/1e9:.2f}GB "
+              f"out={ma.output_size_in_bytes/1e9:.2f}GB "
+              f"temp={ma.temp_size_in_bytes/1e9:.2f}GB "
+              f"alias={ma.alias_size_in_bytes/1e9:.2f}GB "
+              f"-> {per_chip/1e9:.2f}GB/chip (fits={fits})")
+        print(f"  cost_analysis: flops/dev={rec['flops_per_device']:.3e} "
+              f"hbm/dev={rec['hbm_bytes_per_device']:.3e} "
+              f"coll/dev={rec['coll_bytes_per_device']:.3e}"
+              + (" [probe-extrapolated]" if probe else " [scan-raw]"))
+        print(f"  roofline: compute={rec['compute_s']*1e3:.2f}ms "
+              f"memory={rec['memory_s']*1e3:.2f}ms "
+              f"collective={rec['collective_s']*1e3:.2f}ms "
+              f"bottleneck={rec['bottleneck']} "
+              f"useful={rec['useful_fraction'] and round(rec['useful_fraction'], 3)}")
+    rec.update(
+        arch=cfg.name, shape=shape.name,
+        mesh="x".join(map(str, mesh.devices.shape)),
+        n_chips=n_chips, optimizer=opt, sparse=cfg.ffn_sparsity,
+        per_chip_bytes=per_chip, fits=bool(fits), compile_s=compile_s,
+        kind=shape.kind, probed=probe,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["both", "single", "multi"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--sparse", type=float, default=0.0)
+    ap.add_argument("--optimizer", default="auto")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              round(r.get("sparse", 0.0), 4)))
+                except Exception:
+                    pass
+
+    failures = 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "x".join(map(str, mesh.devices.shape))
+        # probes (roofline) only on the single-pod mesh, per the spec
+        probe = (not args.no_probe) and not multi
+        for an in archs:
+            cfg = ARCHS[an]
+            for sn in shapes:
+                shape = SHAPES[sn]
+                ok, why = shape_applicable(cfg, shape)
+                if not ok:
+                    print(f"[skip] {an} x {sn} x {mesh_name}: {why}")
+                    continue
+                if (an, sn, mesh_name, round(args.sparse, 4)) in done:
+                    print(f"[done] {an} x {sn} x {mesh_name}")
+                    continue
+                print(f"[cell] {an} x {sn} x {mesh_name} ...", flush=True)
+                try:
+                    t0 = time.time()
+                    rec = dryrun_cell(cfg, shape, mesh, sparse=args.sparse,
+                                      optimizer=args.optimizer, probe=probe)
+                    rec["wall_s"] = time.time() - t0
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                except Exception as e:
+                    failures += 1
+                    print(f"  FAILED: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+    print(f"dry-run complete; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import ARCHS, reduced_config
+from repro.models.registry import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--sparse", type=float, default=0.0)
+    args = ap.parse_args()
+
+    over = {}
+    if args.sparse > 0:
+        over = dict(ffn_sparsity=args.sparse, sparse_block=(32, 32))
+    cfg = reduced_config(ARCHS[args.arch], **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    engine = ServeEngine(model, params, slots=args.slots, max_len=256)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (3 + i % 5,)),
+                max_new_tokens=args.max_new)
+        for i in range(args.requests)
+    ]
+    t0 = time.perf_counter()
+    engine.run(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"{len(reqs)} requests, {toks} new tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains reduced configs; on a real TPU slice the
+same entry point builds the production mesh and shards everything through
+``parallel.sharding`` (the dry-run proves those programs compile).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced_config
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--sparse", type=float, default=0.0)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced config (CPU container default)")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        over = {}
+        if args.sparse > 0:
+            over = dict(ffn_sparsity=args.sparse, sparse_block=(32, 32))
+        cfg = reduced_config(cfg, **over)
+    model = build_model(cfg)
+    data = SyntheticLM(cfg.vocab_size, seed=0)
+
+    def batch_fn(step):
+        nb = data.batch(step, args.batch, args.seq)
+        out = {k: jnp.asarray(v) for k, v in nb.items()}
+        if cfg.cross_attn_every:
+            out["vision_embeds"] = jnp.zeros(
+                (args.batch, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
+        if cfg.is_encdec:
+            out["frames"] = jnp.zeros(
+                (args.batch, args.seq, cfg.d_model), jnp.float32)
+        return out
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+        ckpt_dir=args.ckpt_dir, peak_lr=args.lr, optimizer=args.optimizer,
+        microbatches=args.microbatches,
+    )
+    trainer = Trainer(model, tcfg)
+    state, start = trainer.init_or_restore(jax.random.PRNGKey(0))
+
+    def on_step(step, metrics):
+        if step % 10 == 0:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f}")
+
+    trainer.run(state, batch_fn, start_step=start, on_step=on_step)
+    print(f"done; stragglers={trainer.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+"""GQA attention: training/prefill (chunked online-softmax), decode (KV cache,
+ring buffer for sliding-window archs), cross-attention (VLM/enc-dec), and the
+block-sparse prefill path (the paper's §IV-D MInference integration).
+
+The chunked implementation is a pure-JAX flash-attention analogue: a scan
+over query chunks bounds the live score tensor to [bq, kv_span] instead of
+[S, S]. Sliding-window archs additionally restrict kv_span to a static band
+(window + bq), making SWA attention linear in S — this is what makes very
+long contexts feasible and is exactly the sub-quadratic structure the paper
+exploits with block-sparse attention.
+
+GQA is computed natively (q reshaped to [.., kv_heads, group, d]) so K/V are
+never materialized at q-head width — an 8x activation-memory saving for the
+kv=8 archs at 32k context.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import apply_rope, dense_init, shard_by
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+
+
+def attention_axes(cfg):
+    del cfg
+    return {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product paths (GQA-native einsums)
+# ---------------------------------------------------------------------------
+
+
+def _sdpa_block(qc, kc, vc, mask, scale):
+    """qc: [B,bq,KV,G,D], kc/vc: [B,span,KV,D], mask: [bq,span] or None.
+
+    §Perf iterations (granite train_4k, memory-bound on the [bq, span] f32
+    score tensor):
+      * the softmax scale folds into q (a [bq, D] tensor) instead of a full
+        multiply pass over the scores;
+      * normalization divides the [bq, D] *output* by the softmax denominator
+        instead of the [bq, span] probability tensor (flash-style deferred
+        normalization) — one fewer read+write pass over the scores.
+    (A jax.nn.softmax(where=...) variant was tried and REFUTED: +7.7% HBM
+    bytes; see EXPERIMENTS.md §Perf.)
+    """
+    qs = (qc.astype(jnp.float32) * scale).astype(qc.dtype)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qs, kc,
+                        preferred_element_type=jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - jax.lax.stop_gradient(m))
+    denom = jnp.sum(p, axis=-1, keepdims=True)  # [B,KV,G,bq,1]
+    oc = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    # deferred normalization on the small output tensor
+    inv = 1.0 / jnp.maximum(denom, 1e-30)
+    oc = oc * jnp.moveaxis(inv, 3, 1)[..., 0][..., None]
+    return oc.astype(qc.dtype)
+
+
+def _chunked_sdpa(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, Skv, KV, D]
+    v: jax.Array,  # [B, Skv, KV, D]
+    *,
+    causal: bool,
+    window: Optional[int],
+    block_q: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(d)
+    bq = min(block_q, s)
+    nq = s // bq
+    assert s % bq == 0, (s, bq)
+    q5 = q.reshape(b, s, kvh, group, d)
+
+    banded = window is not None and (window + bq) < skv and skv == s
+
+    if banded:
+        # static chunk-diagonal banding: q chunk i attends kv chunks
+        # [i - wc, i] via wc+1 *statically shifted* chunk pairings. No
+        # dynamic_slice with a traced start — which GSPMD can only partition
+        # by replicating the whole kv tensor ("involuntary full
+        # rematerialization"); see EXPERIMENTS.md §Perf qwen_it2/it3.
+        wc = -(-window // bq)  # kv chunks back from the diagonal
+        q6 = q5.reshape(b, nq, bq, kvh, group, d)
+        k6 = k.reshape(b, nq, bq, kvh, d)
+        v6 = v.reshape(b, nq, bq, kvh, d)
+        acc = None
+        denom_parts = []
+        # offset j: q chunk i vs kv chunk i-j (static slices of the chunk dim)
+        qpos_in = jnp.arange(bq)[:, None]
+        kpos_in = jnp.arange(bq)[None, :]
+        outs = jnp.zeros((b, nq, bq, kvh, group, d), jnp.float32)
+        denom = jnp.zeros((b, nq, bq, kvh, group), jnp.float32)
+        mx = jnp.full((b, nq, bq, kvh, group), NEG_INF, jnp.float32)
+        # two-pass (max then exp-sum) per offset would re-read scores; with
+        # window <= a few chunks we instead accumulate unnormalized per
+        # offset with a shared running max computed from the diagonal chunk
+        # (scores are scale*q.k with bounded magnitude; diagonal max is the
+        # standard stable reference for banded softmax)
+        contribs = []
+        for j in range(wc + 1):
+            qs = q6[:, j:] if j else q6  # chunks i >= j
+            ks = k6[:, : nq - j] if j else k6
+            sc = jnp.einsum("bnqhgd,bnkhd->bnhgqk",
+                            (qs.astype(jnp.float32) * scale).astype(qs.dtype),
+                            ks, preferred_element_type=jnp.float32)
+            dist = j * bq + qpos_in - kpos_in  # q_global - k_global
+            m = (dist >= 0) if causal else (dist > -(1 << 30))
+            m = jnp.logical_and(m, dist < window)
+            sc = jnp.where(m[None, None, None, None], sc, NEG_INF)
+            contribs.append(sc)
+        # running max across offsets per q row
+        mxs = [jnp.max(c, axis=-1) for c in contribs]  # [b, nq-j, h, g, q]
+        for j, mm in enumerate(mxs):
+            pad = jnp.full((b, j, kvh, group, bq), NEG_INF)
+            mm = jnp.moveaxis(mm, -1, -1)  # [b, nq-j, h, g, q]
+            mm = jnp.concatenate([pad, mm], axis=1) if j else mm
+            mx = jnp.maximum(mx, jnp.moveaxis(mm, [2, 3, 4], [3, 4, 2]))
+        for j, sc in enumerate(contribs):
+            mref = mx[:, j:] if j else mx  # [b, nq-j, q, h, g]
+            mref = jnp.moveaxis(mref, [2, 3, 4], [4, 2, 3])[..., None]
+            p = jnp.exp(sc - mref)
+            vs = v6[:, : nq - j] if j else v6
+            oc = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p.astype(vs.dtype), vs,
+                            preferred_element_type=jnp.float32)
+            dn = jnp.sum(p, axis=-1)  # [b, nq-j, h, g, q]
+            dn = jnp.moveaxis(dn, [2, 3, 4], [3, 4, 2])  # [b, nq-j, q, h, g]
+            if j:
+                zpad_o = jnp.zeros((b, j) + oc.shape[2:], jnp.float32)
+                oc = jnp.concatenate([zpad_o, oc], axis=1)
+                zpad_d = jnp.zeros((b, j) + dn.shape[2:], jnp.float32)
+                dn = jnp.concatenate([zpad_d, dn], axis=1)
+            outs = outs + oc
+            denom = denom + dn
+        outs = outs / jnp.maximum(denom, 1e-30)[..., None]
+        return outs.astype(q.dtype).reshape(b, s, h, d)
+
+    if False:
+        pass
+    else:
+
+        def body(carry, qi):
+            q_start = qi * bq
+            qc = jax.lax.dynamic_slice_in_dim(q5, q_start, bq, axis=1)
+            qpos = q_start + jnp.arange(bq)[:, None]
+            kpos = jnp.arange(skv)[None, :]
+            m = None
+            if causal:
+                m = kpos <= qpos
+            if window is not None:
+                mm = qpos - kpos < window
+                m = mm if m is None else jnp.logical_and(m, mm)
+            return carry, _sdpa_block(qc, k, v, m, scale)
+
+    if nq == 1:
+        _, oc = body(None, jnp.asarray(0))
+        return oc.reshape(b, s, h, d)
+    if unroll:  # cost probes: every chunk visible to cost_analysis
+        chunks = jnp.stack([body(None, jnp.asarray(i))[1] for i in range(nq)])
+    else:
+        # re-materialize per chunk in backward: without this the scan saves
+        # every chunk's f32 score tensor as residuals (tens of GB at 4k+ seq)
+        _, chunks = jax.lax.scan(
+            jax.checkpoint(body, prevent_cse=False), None, jnp.arange(nq))
+    # chunks: [nq, B, bq, KV, G, D] -> [B, S, H, D]
+    return jnp.moveaxis(chunks, 0, 1).reshape(b, s, h, d)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Ring-buffered KV cache. ``cache_len`` == window for SWA archs, else
+    the full max context. ``k``/``v``: [B, cache_len, KV, D]; ``pos``:
+    [B, cache_len] absolute position per slot (-1 = empty)."""
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+
+def init_kv_cache(batch, cache_len, kv_heads, head_dim, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        pos=jnp.full((batch, cache_len), -1, jnp.int32),
+    )
+
+
+def decode_sdpa(
+    q: jax.Array,  # [B, 1, H, D] (already roped)
+    cache: KVCache,
+    cur_pos: jax.Array,  # [B] absolute position of the new token
+    window: Optional[int],
+) -> jax.Array:
+    b, _, h, d = q.shape
+    kvh = cache.k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(d)
+    q5 = q.reshape(b, 1, kvh, group, d)
+    scores = (
+        jnp.einsum("bqhgd,bkhd->bhgqk", q5, cache.k,
+                   preferred_element_type=jnp.float32) * scale
+    )  # [B, KV, G, 1, L]
+    valid = jnp.logical_and(cache.pos >= 0, cache.pos <= cur_pos[:, None])
+    if window is not None:
+        valid = jnp.logical_and(valid, cur_pos[:, None] - cache.pos < window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype).reshape(b, 1, h, d)
+
+
+def cache_update(cache: KVCache, k_new, v_new, cur_pos) -> KVCache:
+    """Insert one roped (k, v) token per batch element at slot pos % len."""
+    cache_len = cache.k.shape[1]
+    slot = (cur_pos % cache_len).astype(jnp.int32)  # [B]
+    bidx = jnp.arange(cache.k.shape[0])
+    k = cache.k.at[bidx, slot].set(k_new[:, 0])
+    v = cache.v.at[bidx, slot].set(v_new[:, 0])
+    pos = cache.pos.at[bidx, slot].set(cur_pos.astype(jnp.int32))
+    return KVCache(k, v, pos)
+
+
+# ---------------------------------------------------------------------------
+# Full layers
+# ---------------------------------------------------------------------------
+
+
+def apply_attention(
+    params,
+    x: jax.Array,  # [B, S, d_model]
+    cfg,
+    *,
+    positions: Optional[jax.Array] = None,
+    block_mask: Optional[np.ndarray] = None,
+    attn_impl: str = "ref",
+) -> jax.Array:
+    """Training/prefill self-attention."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q = shard_by((x @ params["wq"]).reshape(b, s, h, hd), "batch", "seq", "heads", None)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if block_mask is not None:
+        from repro.kernels.block_attn.ops import block_sparse_attention
+
+        out = block_sparse_attention(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            block_mask,
+            causal=True,
+            impl=attn_impl,
+        ).transpose(0, 2, 1, 3)
+    else:
+        out = _chunked_sdpa(q, k, v, causal=True, window=cfg.sliding_window,
+                            block_q=cfg.attn_block_q, unroll=cfg.attn_unroll)
+    out = shard_by(out, "batch", "seq", "heads", None)
+    return out.reshape(b, s, h * hd) @ params["wo"]
+
+
+def apply_attention_decode(params, x, cfg, cache: KVCache, cur_pos):
+    """x: [B, 1, d_model]; returns (out [B,1,d_model], updated cache)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, 1, h, hd)
+    k = (x @ params["wk"]).reshape(b, 1, kv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, kv, hd)
+    pos2 = cur_pos[:, None]
+    q = apply_rope(q, pos2, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_theta)
+    cache = cache_update(cache, k, v, cur_pos)
+    out = decode_sdpa(q, cache, cur_pos, cfg.sliding_window)
+    return out.reshape(b, 1, h * hd) @ params["wo"], cache
+
+
+def init_cross_attention(key, cfg, dtype):
+    return init_attention(key, cfg, dtype)
+
+
+def apply_cross_attention(params, x, enc: jax.Array, cfg):
+    """x: [B, S, d]; enc: [B, S_enc, d] (no causal mask, no rope)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    se = enc.shape[1]
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (enc @ params["wk"]).reshape(b, se, kv, hd)
+    v = (enc @ params["wv"]).reshape(b, se, kv, hd)
+    out = _chunked_sdpa(q, k, v, causal=False, window=None,
+                        block_q=cfg.attn_block_q, unroll=cfg.attn_unroll)
+    return out.reshape(b, s, h * hd) @ params["wo"]

@@ -1,0 +1,154 @@
+"""Shared layer primitives + the logical-axis sharding context.
+
+Functional convention across the model zoo (no flax):
+  * params are nested dicts of jax.Arrays,
+  * every ``init_*`` has a twin ``*_axes`` returning the same-structure tree
+    of logical-axis tuples (consumed by ``repro.parallel.sharding``),
+  * activations are annotated in-line via ``shard_by(x, *logical_axes)``,
+    which is a no-op unless a mesh context is installed (so smoke tests and
+    kernels run unchanged on one device).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+_MESH_CTX = contextvars.ContextVar("repro_mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, rules: dict):
+    """Install (mesh, logical->mesh rules) for ``shard_by`` annotations."""
+    token = _MESH_CTX.set((mesh, dict(rules)))
+    try:
+        with jax.set_mesh(mesh):
+            yield
+    finally:
+        _MESH_CTX.reset(token)
+
+
+def current_mesh_rules():
+    return _MESH_CTX.get()
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: dict):
+    from jax.sharding import PartitionSpec as P
+
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard_by(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate activation sharding by logical axis names (no-op w/o mesh).
+    Axes whose mesh extent does not divide the dim are dropped, and a mesh
+    axis is never assigned twice (first dim wins)."""
+    ctx = _MESH_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = []
+    used = set()
+    for dim, a in zip(x.shape, tuple(axes) + (None,) * (len(x.shape) - len(axes))):
+        names = rules.get(a) if a is not None else None
+        if names is None:
+            spec.append(None)
+            continue
+        nn = names if isinstance(names, tuple) else (names,)
+        ext = 1
+        for n in nn:
+            ext *= mesh.shape[n]
+        if dim % ext or any(n in used for n in nn):
+            spec.append(None)
+            continue
+        used.update(nn)
+        spec.append(names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "swiglu_gate":  # applied to (gate, up) pair by the FFN
+        raise ValueError("handled inside ffn")
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "sq_relu": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron-4
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # [hd/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,s,1,hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (scale * jax.random.normal(key, (in_dim, out_dim), jnp.float32)).astype(
+        dtype
+    )
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

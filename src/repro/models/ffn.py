@@ -1,0 +1,202 @@
+"""FFN layers: dense (SwiGLU / squared-ReLU / GELU) and **block-sparse**
+(the paper's BCSR technique as a first-class, TP-sharded feature).
+
+Sharded-BCSR layout (DESIGN.md §6): the sparse weight is stored per
+TP shard with *balanced* nnz (equal stored-block count per shard, enforced at
+init), so a single SPMD program handles all shards:
+
+  gate/up  W: [f, d] sharded on f (block rows local, block cols global)
+  down     W: [d, f] sharded on f (block cols local, block rows global)
+             -> per-shard partial outputs, one psum over the model axis
+                (the Megatron row-parallel pattern).
+
+Index arrays are runtime tensors (not static) so the layer traces once under
+shard_map/pjit; values are the trainable leaves. The compute is the same
+gather + micro-GEMM + segment-sum dataflow as ``kernels/bcsr`` (on TPU the
+Pallas kernel replaces the inner dataflow 1:1).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsify import random_block_mask
+from repro.models.common import activation, current_mesh_rules, dense_init, shard_by
+
+# ---------------------------------------------------------------------------
+# Local (per-shard) sharded-BCSR primitive
+# ---------------------------------------------------------------------------
+
+
+def local_bcsr_matmul_t(values, rows, cols, x, mb: int):
+    """y^T [mb*bm, T] = W_local @ x^T for one shard's blocks.
+
+    values: [nnz, bm, bk]; rows/cols: [nnz] i32; x: [T, in] with in = kb*bk.
+    """
+    nnz, bm, bk = values.shape
+    t = x.shape[0]
+    xt = x.T.reshape(-1, bk, t)  # [kb, bk, T]
+    tiles = xt[cols]  # [nnz, bk, T]
+    part = jnp.einsum(
+        "nij,njt->nit", values, tiles, preferred_element_type=jnp.float32
+    )
+    y = jax.ops.segment_sum(part, rows, num_segments=mb)  # [mb, bm, T]
+    return y.reshape(mb * bm, t)
+
+
+def make_balanced_sparse(
+    key, out_dim: int, in_dim: int, shards: int, sparsity: float,
+    block, dtype, shard_axis: str, seed: int = 0, extra_lead: int = 1,
+):
+    """Balanced sharded-BCSR init.
+
+    shard_axis="out": shard block rows; "in": shard block cols.
+    Returns dict(values [L, S, nnz, bm, bk], rows [S, nnz], cols [S, nnz])
+    with L = extra_lead (1 for plain FFN; num_experts for MoE experts —
+    the structure is shared across the lead dim, values differ).
+    """
+    bm, bk = block
+    if shard_axis == "out":
+        local_shape = (out_dim // shards, in_dim)
+    else:
+        local_shape = (out_dim, in_dim // shards)
+    mb_l, kb_l = local_shape[0] // bm, local_shape[1] // bk
+    nblocks = mb_l * kb_l
+    keep = max(1, int(round((1.0 - sparsity) * nblocks)))
+    rows = np.zeros((shards, keep), np.int32)
+    cols = np.zeros((shards, keep), np.int32)
+    for s in range(shards):
+        mask = random_block_mask(local_shape, block, 1.0 - keep / nblocks,
+                                 seed=seed * 1000 + s)
+        r, c = np.nonzero(mask)
+        # exact balance: trim/pad deterministically to `keep`
+        r, c = r[:keep], c[:keep]
+        if len(r) < keep:
+            pad = keep - len(r)
+            r = np.concatenate([r, np.repeat(r[-1:], pad)])
+            c = np.concatenate([c, np.repeat(c[-1:], pad)])
+        rows[s], cols[s] = r, c
+    scale = 1.0 / np.sqrt(in_dim * (1.0 - sparsity))
+    values = scale * jax.random.normal(
+        key, (extra_lead, shards, keep, bm, bk), jnp.float32
+    )
+    return {
+        "values": values.astype(dtype),
+        "rows": jnp.asarray(rows),
+        "cols": jnp.asarray(cols),
+    }
+
+
+def sparse_proj_out_sharded(p, x, mb_local: int):
+    """[T, in] -> [S, out_local, T]: gate/up projection (block rows local)."""
+
+    def per_shard(values, rows, cols):
+        return local_bcsr_matmul_t(values, rows, cols, x, mb_local)
+
+    return jax.vmap(per_shard)(p["values"][0], p["rows"], p["cols"])
+
+
+def sparse_proj_in_sharded_partial(p, h_sharded, mb_global: int):
+    """h_sharded: [S, in_local, T] -> partial y^T [S, out, T] (sum -> y^T)."""
+
+    def per_shard(values, rows, cols, h_loc):
+        return local_bcsr_matmul_t(values, rows, cols, h_loc.T, mb_global)
+
+    return jax.vmap(per_shard)(p["values"][0], p["rows"], p["cols"], h_sharded)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    swiglu = cfg.ffn_activation == "swiglu"
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_sparsity > 0.0:
+        s = cfg.tp_shards
+        blk = cfg.sparse_block
+        p = {}
+        if swiglu:
+            p["gate"] = make_balanced_sparse(
+                ks[0], f, d, s, cfg.ffn_sparsity, blk, dtype, "out", seed=1)
+        p["up"] = make_balanced_sparse(
+            ks[1], f, d, s, cfg.ffn_sparsity, blk, dtype, "out", seed=2)
+        p["down"] = make_balanced_sparse(
+            ks[2], d, f, s, cfg.ffn_sparsity, blk, dtype, "in", seed=3)
+        return p
+    p = {
+        "w_up": dense_init(ks[1], d, f, dtype),
+        "w_down": dense_init(ks[2], f, d, dtype),
+    }
+    if swiglu:
+        p["w_gate"] = dense_init(ks[0], d, f, dtype)
+    return p
+
+
+def ffn_axes(cfg):
+    if cfg.ffn_sparsity > 0.0:
+        ax = {"values": ("expert_lead", "model_shard", None, None, None),
+              "rows": ("model_shard", None), "cols": ("model_shard", None)}
+        out = {"up": dict(ax), "down": dict(ax)}
+        if cfg.ffn_activation == "swiglu":
+            out["gate"] = dict(ax)
+        return out
+    out = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if cfg.ffn_activation == "swiglu":
+        out["w_gate"] = ("embed", "mlp")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def _act(cfg):
+    return activation("silu" if cfg.ffn_activation == "swiglu" else cfg.ffn_activation)
+
+
+def _dense_ffn(params, x, cfg):
+    h = x @ params["w_up"]
+    h = shard_by(h, "batch", "seq", "mlp")
+    if cfg.ffn_activation == "swiglu":
+        g = shard_by(x @ params["w_gate"], "batch", "seq", "mlp")
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = _act(cfg)(h.astype(jnp.float32)).astype(h.dtype)
+    return shard_by(h @ params["w_down"], "batch", "seq", "embed")
+
+
+def _sparse_ffn_local(params, x2, cfg):
+    """x2: [T, d] -> [T, d]. Runs per model-shard-group (vmap or shard_map)."""
+    d, f = cfg.d_model, cfg.d_ff
+    s = cfg.tp_shards
+    bm, bk = cfg.sparse_block
+    f_local = f // s
+    h = sparse_proj_out_sharded(params["up"], x2, f_local // bm)  # [S, f_loc, T]
+    h = shard_by(h, "model_shard", None, "tokens")
+    if cfg.ffn_activation == "swiglu":
+        g = sparse_proj_out_sharded(params["gate"], x2, f_local // bm)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = _act(cfg)(h.astype(jnp.float32)).astype(h.dtype)
+    # down: block rows global over d; block size of down is (bm, bk) too
+    yt_part = sparse_proj_in_sharded_partial(params["down"], h, d // bm)
+    yt = jnp.sum(yt_part, axis=0)  # [d, T]; GSPMD: all-reduce over model
+    return shard_by(yt, None, "tokens").T.astype(x2.dtype)
+
+
+def apply_ffn(params, x, cfg):
+    """x: [B, S, d] -> [B, S, d]."""
+    if cfg.ffn_sparsity <= 0.0:
+        return _dense_ffn(params, x, cfg)
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    y2 = _sparse_ffn_local(params, x2, cfg)
+    return shard_by(y2.reshape(b, s, d), "batch", "seq", "embed")

@@ -1,0 +1,345 @@
+"""Mixture-of-Experts layer with two partition strategies (DESIGN.md §6):
+
+* ``expert_partition="expert"`` (EP; Kimi-K2: 384 experts / 16 shards = 24
+  local experts): experts sharded over the model axis. Routing is computed
+  replicated on every model shard (router weights are replicated, activations
+  are model-replicated in the DP x TP layout), each shard dispatches only the
+  tokens routed to *its* experts, and a single psum over the model axis
+  combines expert outputs. No all-to-all needed in this layout; the psum is
+  the same collective as the dense-FFN TP all-reduce.
+
+* ``expert_partition="ffn"`` (Mixtral: 8 experts < 16 shards): every shard
+  holds all experts but only an f-slice of each expert's FFN (TP inside the
+  expert); the down-projection partial sums ride the same final psum.
+
+Dispatch is capacity-based (Switch-style cumsum ranking, deterministic,
+overflow drops) entirely in local shard code under ``shard_map``; without a
+mesh context the same code runs with the full arrays (smoke tests).
+
+Experts may themselves be **block-sparse** (the paper's technique applied to
+expert FFNs): values [E, S, nnz, bm, bk] in the sharded-BCSR layout of
+``models/ffn``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import current_mesh_rules, dense_init, shard_by
+from repro.models.ffn import local_bcsr_matmul_t, make_balanced_sparse
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": dense_init(ks[0], d, e, jnp.float32)}
+    sparse = cfg.ffn_sparsity > 0.0
+    shards = cfg.tp_shards if cfg.expert_partition == "ffn" else 1
+    if sparse:
+        blk = cfg.sparse_block
+        if cfg.ffn_activation == "swiglu":
+            p["gate"] = make_balanced_sparse(
+                ks[1], f, d, shards, cfg.ffn_sparsity, blk, dtype, "out",
+                seed=11, extra_lead=e)
+        p["up"] = make_balanced_sparse(
+            ks[2], f, d, shards, cfg.ffn_sparsity, blk, dtype, "out",
+            seed=12, extra_lead=e)
+        p["down"] = make_balanced_sparse(
+            ks[3], d, f, shards, cfg.ffn_sparsity, blk, dtype, "in",
+            seed=13, extra_lead=e)
+    else:
+        scale = 1.0 / np.sqrt(d)
+        if cfg.ffn_activation == "swiglu":
+            p["w_gate"] = (scale * jax.random.normal(ks[1], (e, d, f))).astype(dtype)
+        p["w_up"] = (scale * jax.random.normal(ks[2], (e, d, f))).astype(dtype)
+        p["w_down"] = (
+            (1.0 / np.sqrt(f)) * jax.random.normal(ks[3], (e, f, d))
+        ).astype(dtype)
+    return p
+
+
+def moe_axes(cfg):
+    ep = cfg.expert_partition == "expert"
+    sparse = cfg.ffn_sparsity > 0.0
+    ax = {"router": (None, None)}
+    if sparse:
+        # EP: experts over model, block values additionally FSDP-shardable
+        vax = ("expert", None, "fsdp", None, None) if ep else (
+            None, "model_shard", "fsdp", None, None)
+        iax = (None, None) if ep else ("model_shard", None)
+        for k in (["gate", "up", "down"] if cfg.ffn_activation == "swiglu"
+                  else ["up", "down"]):
+            ax[k] = {"values": vax, "rows": iax, "cols": iax}
+    elif cfg.expert_partition == "expert_data":
+        # serving layout (§Perf, kimi decode_32k): experts over *data*, FFN
+        # inner dim over *model* — weights fully sharded with zero gathers;
+        # tokens (small at decode) are all-gathered instead.
+        ax["w_up"] = ("expert_d", None, "mlp")
+        ax["w_down"] = ("expert_d", "mlp", None)
+        if cfg.ffn_activation == "swiglu":
+            ax["w_gate"] = ("expert_d", None, "mlp")
+        return ax
+    else:
+        if ep:
+            # d_model dim FSDP-shards over data ("embed" -> data under fsdp)
+            w = ("expert", "embed", None)
+            wd = ("expert", None, "embed")
+        else:
+            w = (None, "embed", "mlp")
+            wd = (None, "mlp", "embed")
+        if cfg.ffn_activation == "swiglu":
+            ax["w_gate"] = w
+        ax["w_up"] = w
+        ax["w_down"] = wd
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# Local shard computation
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn_dense(p, xe, cfg):
+    """xe: [E_loc, C, d] -> [E_loc, C, d] partial (f may be sharded)."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_up"],
+                   preferred_element_type=jnp.float32).astype(xe.dtype)
+    if cfg.ffn_activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * h.astype(jnp.float32)).astype(xe.dtype)
+    else:
+        from repro.models.common import activation
+
+        h = activation(cfg.ffn_activation)(h.astype(jnp.float32)).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                      preferred_element_type=jnp.float32).astype(xe.dtype)
+
+
+def _expert_ffn_sparse(p, xe, cfg):
+    """Sparse experts: vmap the sharded-BCSR dataflow over (E_loc, S_loc)."""
+    bm, _ = cfg.sparse_block
+    e_loc, c, d = xe.shape
+    s_loc = p["up"]["values"].shape[1]
+    f_loc = cfg.d_ff // cfg.tp_shards if cfg.expert_partition == "ffn" else cfg.d_ff
+    mb_up = f_loc // bm
+    mb_down = cfg.d_model // bm
+
+    def one(e_vals_up, e_vals_gate, e_vals_down, rows_up, cols_up,
+            rows_gate, cols_gate, rows_down, cols_down, x_e):
+        # vmap over the S_loc dim, summing down-proj partials
+        def per_shard(vu, vg, vd, ru, cu, rg, cg, rd, cd):
+            h = local_bcsr_matmul_t(vu, ru, cu, x_e, mb_up)  # [f_loc, C]
+            if vg is not None:
+                g = local_bcsr_matmul_t(vg, rg, cg, x_e, mb_up)
+                h = (jax.nn.silu(g.astype(jnp.float32))
+                     * h.astype(jnp.float32)).astype(x_e.dtype)
+            else:
+                from repro.models.common import activation
+
+                h = activation(cfg.ffn_activation)(
+                    h.astype(jnp.float32)).astype(x_e.dtype)
+            return local_bcsr_matmul_t(vd, rd, cd, h.T, mb_down)  # [d, C]
+
+        if e_vals_gate is None:
+            yt = jax.vmap(
+                lambda vu, vd, ru, cu, rd, cd: per_shard(
+                    vu, None, vd, ru, cu, None, None, rd, cd)
+            )(e_vals_up, e_vals_down, rows_up, cols_up, rows_down, cols_down)
+        else:
+            yt = jax.vmap(per_shard)(
+                e_vals_up, e_vals_gate, e_vals_down, rows_up, cols_up,
+                rows_gate, cols_gate, rows_down, cols_down)
+        return jnp.sum(yt, axis=0).T.astype(x_e.dtype)  # [C, d]
+
+    has_gate = "gate" in p
+    gate_vals = p["gate"]["values"] if has_gate else None
+    out = jax.vmap(
+        lambda vu, vg, vd, xe_: one(
+            vu, vg, vd, p["up"]["rows"], p["up"]["cols"],
+            p["gate"]["rows"] if has_gate else None,
+            p["gate"]["cols"] if has_gate else None,
+            p["down"]["rows"], p["down"]["cols"], xe_),
+        in_axes=(0, 0 if has_gate else None, 0, 0),
+    )(p["up"]["values"], gate_vals, p["down"]["values"], xe)
+    return out
+
+
+def _moe_shard(router_w, expert_p, x_loc, *, cfg, model_axis: Optional[str],
+               data_axis=None):
+    """Per-(data, model)-shard MoE. x_loc: [b_loc, s, d].
+
+    expert_partition="expert_data" (serving): experts live on *data* shards,
+    each expert's FFN is TP-sliced over *model*. Tokens are all-gathered over
+    data (tiny at decode), every (data, model) shard computes its experts'
+    f-slice contribution for all tokens, and one psum over both axes
+    combines. Weight movement per step: zero.
+    """
+    b, s, d = x_loc.shape
+    e_total, k = cfg.num_experts, cfg.top_k
+    ed = cfg.expert_partition == "expert_data"
+    da = None
+    if data_axis is not None:
+        da = data_axis if isinstance(data_axis, tuple) else (data_axis,)
+    if ed and da is not None:
+        x_loc = jax.lax.all_gather(x_loc, da, axis=0, tiled=True)
+        b = x_loc.shape[0]
+    t = b * s
+    x2 = x_loc.reshape(t, d)
+    ep = cfg.expert_partition == "expert"
+    if ep:
+        if model_axis is not None:
+            n_shards = jax.lax.axis_size(model_axis)
+            midx = jax.lax.axis_index(model_axis)
+        else:
+            n_shards, midx = 1, 0
+        e_loc = e_total // n_shards
+    elif ed:
+        if da is not None:
+            n_shards = 1
+            for a in da:
+                n_shards *= jax.lax.axis_size(a)
+            midx = jax.lax.axis_index(da)
+        else:
+            n_shards, midx = 1, 0
+        e_loc = e_total // n_shards
+    else:
+        e_loc, midx = e_total, 0
+
+    logits = (x2 @ router_w.astype(x2.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    gate, idx = jax.lax.top_k(probs, k)  # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(cfg.capacity_factor * t * k / e_total))
+    cap = max(1, min(cap, t * k))
+
+    e_off = midx * e_loc
+    sel = idx - e_off  # [T, K] local expert id or out of range
+    flat_sel = sel.reshape(t * k)
+    local = jnp.logical_and(flat_sel >= 0, flat_sel < e_loc)
+    onehot = jnp.logical_and(
+        flat_sel[:, None] == jnp.arange(e_loc)[None, :], local[:, None]
+    )  # [T*K, E_loc]
+    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    slot_pos = jnp.sum(jnp.where(onehot, pos, 0), axis=1)  # [T*K]
+    kept = jnp.logical_and(local, slot_pos < cap)
+    buf_idx = jnp.where(kept, jnp.clip(flat_sel, 0, e_loc - 1) * cap + slot_pos,
+                        e_loc * cap)  # OOB -> dropped by scatter
+    bi = buf_idx.reshape(t, k)
+    buf = jnp.zeros((e_loc * cap, d), x2.dtype)
+    for kk in range(k):  # per-choice scatter: avoids the [T*K, d] repeat
+        buf = buf.at[bi[:, kk]].add(x2)
+    xe = buf.reshape(e_loc, cap, d)
+
+    if cfg.ffn_sparsity > 0.0:
+        ye = _expert_ffn_sparse(expert_p, xe, cfg)
+    else:
+        ye = _expert_ffn_dense(expert_p, xe, cfg)
+
+    ye2 = ye.reshape(e_loc * cap, d)
+    kept2 = kept.reshape(t, k)
+    y2 = jnp.zeros((t, d), ye2.dtype)
+    for kk in range(k):  # per-choice gather + weighted combine
+        rows = ye2[jnp.clip(bi[:, kk], 0, e_loc * cap - 1)]
+        w_k = jnp.where(kept2[:, kk], gate[:, kk], 0.0).astype(rows.dtype)
+        y2 = y2 + rows * w_k[:, None]
+    if ed and da is not None:
+        # partial over experts (data axes) and over f slices (model axis)
+        axes = da + ((model_axis,) if model_axis is not None else ())
+        y2 = jax.lax.psum(y2, axes)
+        # back to this shard's tokens
+        n_d = 1
+        for a in da:
+            n_d *= jax.lax.axis_size(a)
+        b_loc = b // n_d
+        y2 = jax.lax.dynamic_slice_in_dim(
+            y2.reshape(b, s, d), midx * b_loc, b_loc, axis=0)
+        return y2
+    if model_axis is not None:
+        y2 = jax.lax.psum(y2, model_axis)
+    return y2.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Public apply
+# ---------------------------------------------------------------------------
+
+
+def _param_specs(cfg, rules):
+    """PartitionSpecs for the expert param tree (shard_map in_specs).
+
+    FSDP dims ("embed"/"fsdp" -> data) are deliberately mapped to None here:
+    weights are *stored* data-sharded but must be whole inside the MoE shard
+    body, so GSPMD all-gathers them at the shard_map boundary — exactly the
+    ZeRO-3 gather-for-compute pattern (the reverse reduce-scatter happens on
+    the gradients automatically)."""
+    from repro.models.common import logical_to_pspec
+
+    rules = dict(rules)
+    rules["embed"] = None
+    rules["fsdp"] = None
+    rules.setdefault("expert_d", "data")
+    ax = moe_axes(cfg)
+    specs = {}
+    for name, a in ax.items():
+        if name == "router":
+            continue
+        if isinstance(a, dict):
+            specs[name] = {kk: logical_to_pspec(vv, rules) for kk, vv in a.items()}
+        else:
+            specs[name] = logical_to_pspec(a, rules)
+    return specs
+
+
+def apply_moe(params, x, cfg):
+    """x: [B, S, d] -> (y [B, S, d], aux load-balance loss scalar)."""
+    router_w = params["router"]
+    expert_p = {k: v for k, v in params.items() if k != "router"}
+
+    # load-balance aux loss (Switch): computed on the pjit side, global.
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    logits = (x2 @ router_w.astype(x2.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.num_experts, dtype=jnp.float32), 0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = cfg.num_experts * jnp.sum(frac * mean_prob)
+
+    ctx = current_mesh_rules()
+    if ctx is None:
+        y = _moe_shard(router_w, expert_p, x, cfg=cfg, model_axis=None,
+                       data_axis=None)
+        return y, aux
+    mesh, rules = ctx
+    model_axis = rules.get("mlp")
+    batch_axes = rules.get("batch")
+    nn = batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)
+    ext = 1
+    for n in nn:
+        ext *= mesh.shape[n]
+    if x.shape[0] % ext:  # tiny batches (e.g. long_500k B=1): replicate
+        batch_axes = None
+    data_axis = None
+    if cfg.expert_partition == "expert_data":
+        # experts over the data axes (serving layout)
+        data_axis = batch_axes if batch_axes is not None else rules["batch"]
+    xspec = P(batch_axes, None, None)
+    in_specs = (P(None, None), _param_specs(cfg, rules), xspec)
+    fn = functools.partial(_moe_shard, cfg=cfg, model_axis=model_axis,
+                           data_axis=data_axis)
+    y = jax.shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=xspec, check_vma=False
+    )(router_w, expert_p, x)
+    return shard_by(y, "batch", "seq", "embed"), aux

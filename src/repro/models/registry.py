@@ -1,0 +1,165 @@
+"""Model registry: a uniform functional API over every architecture family.
+
+``build_model(cfg)`` returns a ``ModelApi`` with:
+  init(key) -> params
+  param_axes() -> logical-axis tree (same structure as params)
+  forward(params, batch) -> (logits [B,S,V], aux_loss)
+  loss(params, batch) -> scalar (causal LM xent + MoE aux)
+  input_spec(shape) -> dict of ShapeDtypeStructs for the dry-run
+  init_decode_cache(batch, max_len, **frontend) -> cache
+  decode_step(params, cache, token, pos) -> (logits [B,V], cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import encdec, transformer
+from repro.models.common import DTYPES
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    param_axes: Callable
+    forward: Callable
+    loss: Callable
+    input_spec: Callable
+    init_decode_cache: Callable
+    decode_step: Callable
+
+
+def _xent_chunk(x_c, labels_c, head, vocab_real):
+    """x_c: [B, S_c, d]; labels_c: [B, S_c]. Returns (nll_sum, count)."""
+    logits = jnp.einsum("bsd,vd->bsv", x_c, head,
+                        preferred_element_type=jnp.float32)
+    if head.shape[0] != vocab_real:  # mask vocab padding columns
+        logits = jnp.where(jnp.arange(head.shape[0]) < vocab_real, logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels_c, 0)[..., None], axis=-1)[..., 0]
+    mask = labels_c >= 0
+    nll = jnp.where(mask, logz - gold, 0.0)
+    return nll.sum(), mask.sum()
+
+
+def _chunked_lm_loss(hidden, labels, aux, head, cfg) -> jax.Array:
+    """Causal LM xent in f32, computed in sequence chunks so the [B, S, V]
+    logits tensor never materializes. Chunks slice the seq dim only —
+    flattening (b, s) would merge two differently-sharded dims and force
+    GSPMD to replicate the hidden states. + 0.01 * MoE load-balance aux."""
+    from repro.models.common import shard_by
+
+    b, s, d = hidden.shape
+    hidden = shard_by(hidden, "batch", None, "embed")  # seq whole per shard
+    # floor of 256 seq positions per chunk: bounds how often the [V, d] head
+    # weights are re-read from HBM (§Perf iteration, granite train_4k)
+    chunk = max(1, min(max(cfg.loss_chunk // max(b, 1), 256), s))
+    if s % chunk:
+        chunk = s  # fall back to single chunk for odd tiny shapes
+    n = s // chunk
+    if n == 1:
+        nll, cnt = _xent_chunk(hidden, labels, head, cfg.vocab_size)
+        return nll / jnp.maximum(cnt, 1) + 0.01 * aux
+
+    def body(carry, i):
+        nll_a, cnt_a = carry
+        x_c = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, 1)
+        l_c = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        nll, cnt = _xent_chunk(x_c, l_c, head, cfg.vocab_size)
+        return (nll_a + nll, cnt_a + cnt), None
+
+    # checkpoint: recompute each chunk's logits in backward instead of
+    # saving [B, chunk, V] f32 residuals for every chunk
+    (nll, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        (jnp.zeros(()), jnp.zeros((), jnp.int32)), jnp.arange(n))
+    return nll / jnp.maximum(cnt, 1) + 0.01 * aux
+
+
+def build_model(cfg: ModelConfig, block_mask=None) -> ModelApi:
+    dtype = DTYPES[cfg.dtype]
+
+    if cfg.is_encdec:
+        mod = encdec
+
+        def forward(params, batch):
+            return encdec.forward(params, batch, cfg, block_mask=block_mask)
+
+        def input_spec(shape: InputShape) -> Dict[str, Any]:
+            b = shape.global_batch
+            if shape.kind == "train":
+                # encoder frames : decoder tokens at 1:1 for the dry-run
+                return {
+                    "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+                    "frames": jax.ShapeDtypeStruct(
+                        (b, shape.seq_len, cfg.d_model), dtype),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+                "frames": jax.ShapeDtypeStruct(
+                    (b, shape.seq_len, cfg.d_model), dtype),
+            }
+
+        def init_cache(batch, max_len, enc_states=None):
+            return encdec.init_decode_cache(cfg, batch, max_len, enc_states)
+
+        def decode_step(params, cache, token, pos):
+            return encdec.decode_step(params, cache, token, pos, cfg)
+
+    else:
+        mod = transformer
+
+        def forward(params, batch):
+            return transformer.forward(params, batch, cfg, block_mask=block_mask)
+
+        def input_spec(shape: InputShape) -> Dict[str, Any]:
+            b = shape.global_batch
+            spec = {
+                "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+            }
+            if shape.kind == "train":
+                spec["labels"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+            if cfg.cross_attn_every:
+                spec["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_vision_tokens, cfg.d_model), dtype)
+            return spec
+
+        def init_cache(batch, max_len, vision_embeds=None):
+            return transformer.init_decode_cache(cfg, batch, max_len,
+                                                 vision_embeds)
+
+        def decode_step(params, cache, token, pos):
+            return transformer.decode_step(params, cache, token, pos, cfg)
+
+    def loss(params, batch):
+        if cfg.is_encdec:
+            hidden, aux = encdec.forward(params, batch, cfg,
+                                         block_mask=block_mask,
+                                         return_hidden=True)
+            head = encdec.lm_head_weights(params, cfg)
+        else:
+            hidden, aux = transformer.forward(params, batch, cfg,
+                                              block_mask=block_mask,
+                                              return_hidden=True)
+            head = transformer.lm_head_weights(params, cfg)
+        return _chunked_lm_loss(hidden, batch["labels"], aux, head, cfg)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: mod.init_model(key, cfg),
+        param_axes=lambda: mod.model_axes(cfg),
+        forward=forward,
+        loss=loss,
+        input_spec=input_spec,
+        init_decode_cache=init_cache,
+        decode_step=decode_step,
+    )

@@ -1,0 +1,267 @@
+"""Attention-free token mixing: RWKV-6 (Finch) and a Mamba-style selective
+SSM head (used by the Hymba hybrid).
+
+RWKV-6 layer = time-mix (data-dependent per-channel decay, matrix-valued
+state [H, N, N]) + channel-mix (relu^2 MLP — this is where the paper's BCSR
+block sparsity applies for the ssm arch, see DESIGN.md §8).
+
+Recurrences run as ``lax.scan`` over time in f32 state (prefill/train) and as
+a single step against a state cache (decode) — states are O(1) in sequence
+length, which is what makes ``long_500k`` viable for these archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, shard_by
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_tmix(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    n = d // h  # head size
+    ks = jax.random.split(key, 7)
+    return {
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        "w_decay": dense_init(ks[5], d, d, dtype),  # data-dependent decay proj
+        "decay_bias": jnp.full((d,), -4.0, jnp.float32),
+        "bonus": (0.5 * jax.random.normal(ks[6], (h, n), jnp.float32)),
+        "mix": (0.5 * jnp.ones((5, d), jnp.float32)),  # token-shift lerp coefs
+    }
+
+
+def rwkv_tmix_axes(cfg):
+    del cfg
+    return {
+        "wr": ("embed", "heads"), "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"), "wg": ("embed", "heads"),
+        "wo": ("heads", "embed"), "w_decay": ("embed", "heads"),
+        "decay_bias": (None,), "bonus": (None, None), "mix": (None, None),
+    }
+
+
+def _token_shift(x):
+    """x_{t-1} (zeros at t=0): [B, S, d]."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+RECURRENCE_CHUNK = 128
+
+
+def _chunked_recurrence(step, state, xs, s: int):
+    """Two-level scan with a remat'ed inner chunk.
+
+    A flat length-S scan saves every step's state as a backward residual
+    (O(S) x state bytes — 100+GB/chip for rwkv at 4k x batch 256). Chunking
+    saves only the chunk-boundary states (S/C of them) and recomputes the
+    inner steps in backward — the standard memory fix for long recurrences.
+    """
+    c = RECURRENCE_CHUNK
+    if s <= c or s % c:
+        return jax.lax.scan(step, state, xs)
+
+    def chunk_body(st, chunk_xs):
+        st, outs = jax.lax.scan(step, st, chunk_xs)
+        return st, outs
+
+    chunked = jax.tree.map(lambda t: t.reshape(s // c, c, *t.shape[1:]), xs)
+    state, outs = jax.lax.scan(
+        jax.checkpoint(chunk_body, prevent_cse=False), state, chunked)
+    outs = jax.tree.map(lambda t: t.reshape(s, *t.shape[2:]), outs)
+    return state, outs
+
+
+def _rwkv_projections(p, x, prev):
+    """Compute r,k,v,g,w for a block of tokens. prev: x_{t-1} per token."""
+    mix = p["mix"].astype(x.dtype)
+    xr = x + (prev - x) * mix[0]
+    xk = x + (prev - x) * mix[1]
+    xv = x + (prev - x) * mix[2]
+    xg = x + (prev - x) * mix[3]
+    xw = x + (prev - x) * mix[4]
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    w = jnp.exp(
+        -jnp.exp(
+            (xw @ p["w_decay"]).astype(jnp.float32) + p["decay_bias"]
+        )
+    )  # in (0, 1), data-dependent per channel
+    return r, k, v, g, w
+
+
+def apply_rwkv_tmix(p, x, cfg, state=None, prev_x=None):
+    """x: [B, S, d]. Returns (y, (state, last_x)).
+
+    state: [B, H, N, N] f32 matrix-valued wkv state (None -> zeros).
+    prev_x: [B, d] last token of the previous segment (decode continuation).
+    """
+    b, s, d = x.shape
+    h = cfg.num_heads
+    n = d // h
+    prev = _token_shift(x)
+    if prev_x is not None:
+        prev = prev.at[:, 0].set(prev_x.astype(x.dtype))
+    r, k, v, g, w = _rwkv_projections(p, x, prev)
+    rh = r.reshape(b, s, h, n).astype(jnp.float32)
+    kh = k.reshape(b, s, h, n).astype(jnp.float32)
+    vh = v.reshape(b, s, h, n).astype(jnp.float32)
+    wh = w.reshape(b, s, h, n)
+    u = p["bonus"]  # [H, N]
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp  # [B, H, N] each
+        kv = kt[..., :, None] * vt[..., None, :]  # [B, H, N, N]
+        out = jnp.einsum("bhn,bhnm->bhm", rt, st + u[None, :, :, None] * kv)
+        st = st * wt[..., :, None] + kv
+        return st, out
+
+    xs = (
+        jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+        jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0),
+    )
+    state, outs = _chunked_recurrence(step, state, xs, s)  # [S, B, H, N]
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)
+    y = (g * y).astype(x.dtype) @ p["wo"]
+    return shard_by(y, "batch", "seq", "embed"), (state, x[:, -1])
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 channel mix (relu^2 MLP with token shift)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_cmix(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wr": dense_init(ks[0], d, d, dtype),
+        "mix": (0.5 * jnp.ones((2, d), jnp.float32)),
+    }
+    if cfg.ffn_sparsity > 0.0:
+        from repro.models.ffn import make_balanced_sparse
+
+        blk = cfg.sparse_block
+        p["k"] = make_balanced_sparse(
+            ks[1], f, d, cfg.tp_shards, cfg.ffn_sparsity, blk, dtype, "out", seed=21)
+        p["v"] = make_balanced_sparse(
+            ks[2], d, f, cfg.tp_shards, cfg.ffn_sparsity, blk, dtype, "in", seed=22)
+    else:
+        p["wk"] = dense_init(ks[1], d, f, dtype)
+        p["wv"] = dense_init(ks[2], f, d, dtype)
+    return p
+
+
+def rwkv_cmix_axes(cfg):
+    ax = {"wr": ("embed", "embed"), "mix": (None, None)}
+    if cfg.ffn_sparsity > 0.0:
+        sax = {"values": ("expert_lead", "model_shard", None, None, None),
+               "rows": ("model_shard", None), "cols": ("model_shard", None)}
+        ax["k"] = dict(sax)
+        ax["v"] = dict(sax)
+    else:
+        ax["wk"] = ("embed", "mlp")
+        ax["wv"] = ("mlp", "embed")
+    return ax
+
+
+def apply_rwkv_cmix(p, x, cfg, prev_x=None):
+    b, s, d = x.shape
+    prev = _token_shift(x)
+    if prev_x is not None:
+        prev = prev.at[:, 0].set(prev_x.astype(x.dtype))
+    mix = p["mix"].astype(x.dtype)
+    xk = x + (prev - x) * mix[0]
+    xr = x + (prev - x) * mix[1]
+    r = jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32))
+    if cfg.ffn_sparsity > 0.0:
+        from repro.models.ffn import (
+            sparse_proj_in_sharded_partial, sparse_proj_out_sharded)
+
+        bm, _ = cfg.sparse_block
+        x2 = xk.reshape(b * s, d)
+        f_loc = cfg.d_ff // cfg.tp_shards
+        kk = sparse_proj_out_sharded(p["k"], x2, f_loc // bm)  # [S, f_loc, T]
+        kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+        vt = sparse_proj_in_sharded_partial(p["v"], kk, d // bm)
+        y = jnp.sum(vt, axis=0).T.reshape(b, s, d)
+    else:
+        kk = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(jnp.float32)))
+        y = kk.astype(x.dtype) @ p["wv"]
+    y = (r * y.astype(jnp.float32)).astype(x.dtype)
+    return shard_by(y, "batch", "seq", "embed"), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM head (Hymba hybrid)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_head(key, cfg, dtype):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, d, dtype),
+        "w_gate": dense_init(ks[1], d, d, dtype),
+        "w_b": dense_init(ks[2], d, n, dtype),
+        "w_c": dense_init(ks[3], d, n, dtype),
+        "w_dt": dense_init(ks[4], d, d, dtype),
+        "a_log": jnp.log(
+            jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d, 1))
+        ),  # [d, n]
+        "w_out": dense_init(ks[5], d, d, dtype),
+    }
+
+
+def mamba_head_axes(cfg):
+    del cfg
+    return {
+        "w_in": ("embed", "heads"), "w_gate": ("embed", "heads"),
+        "w_b": ("embed", None), "w_c": ("embed", None),
+        "w_dt": ("embed", "heads"), "a_log": ("heads", None),
+        "w_out": ("heads", "embed"),
+    }
+
+
+def apply_mamba_head(p, x, cfg, state=None):
+    """x: [B, S, d] -> (y, state [B, d, n] f32)."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    u = (x @ p["w_in"]).astype(jnp.float32)  # [B, S, d]
+    gate = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32))
+    bsel = (x @ p["w_b"]).astype(jnp.float32)  # [B, S, n]
+    csel = (x @ p["w_c"]).astype(jnp.float32)  # [B, S, n]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32))  # [B, S, d]
+    a = -jnp.exp(p["a_log"])  # [d, n]
+    if state is None:
+        state = jnp.zeros((b, d, n), jnp.float32)
+
+    def step(st, inp):
+        ut, bt, ct, dtt = inp  # [B,d], [B,n], [B,n], [B,d]
+        da = jnp.exp(dtt[..., None] * a[None])  # [B, d, n]
+        st = st * da + (dtt * ut)[..., None] * bt[:, None, :]
+        yt = jnp.einsum("bdn,bn->bd", st, ct)
+        return st, yt
+
+    xs = (
+        jnp.moveaxis(u, 1, 0), jnp.moveaxis(bsel, 1, 0),
+        jnp.moveaxis(csel, 1, 0), jnp.moveaxis(dt, 1, 0),
+    )
+    state, ys = _chunked_recurrence(step, state, xs, s)  # [S, B, d]
+    y = jnp.moveaxis(ys, 0, 1) * gate
+    return (y.astype(x.dtype) @ p["w_out"]), state

@@ -1,0 +1,413 @@
+"""Decoder-only transformer assembly for every family except enc-dec
+(whisper lives in ``models/encdec.py``).
+
+Families:
+  dense / moe       : [attn + (ffn | moe)] x L
+  vlm (llama-3.2-v) : groups of ``cross_attn_every - 1`` self layers followed
+                      by one gated cross-attention layer over vision tokens
+  hybrid (hymba)    : parallel attention + mamba SSM head, then FFN
+  ssm (rwkv6)       : rwkv time-mix + channel-mix (attention-free)
+
+Layers are scanned (``lax.scan`` over stacked params) with optional
+per-layer remat — both are what keep the 61L/1T dry-run compile tractable.
+Decode threads per-layer caches (KV rings / SSM states) through the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import DTYPES, embed_init, rms_norm, shard_by, split_keys
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / axes
+# ---------------------------------------------------------------------------
+
+
+def _init_self_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.family == "ssm":
+        p["tmix"] = ssm_mod.init_rwkv_tmix(ks[0], cfg, dtype)
+        p["cmix"] = ssm_mod.init_rwkv_cmix(ks[1], cfg, dtype)
+        return p
+    p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        kss = split_keys(ks[1], 2)
+        p["mamba"] = ssm_mod.init_mamba_head(kss[0], cfg, dtype)
+        p["ffn"] = ffn_mod.init_ffn(kss[1], cfg, dtype)
+    elif cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = ffn_mod.init_ffn(ks[1], cfg, dtype)
+    return p
+
+
+def _self_layer_axes(cfg):
+    ax = {"ln1": (None,), "ln2": (None,)}
+    if cfg.family == "ssm":
+        ax["tmix"] = ssm_mod.rwkv_tmix_axes(cfg)
+        ax["cmix"] = ssm_mod.rwkv_cmix_axes(cfg)
+        return ax
+    ax["attn"] = attn.attention_axes(cfg)
+    if cfg.family == "hybrid":
+        ax["mamba"] = ssm_mod.mamba_head_axes(cfg)
+        ax["ffn"] = ffn_mod.ffn_axes(cfg)
+    elif cfg.is_moe:
+        ax["moe"] = moe_mod.moe_axes(cfg)
+    else:
+        ax["ffn"] = ffn_mod.ffn_axes(cfg)
+    return ax
+
+
+def _init_cross_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "xattn": attn.init_cross_attention(ks[0], cfg, dtype),
+        "ffn": ffn_mod.init_ffn(ks[1], cfg, dtype),
+        "gate": jnp.zeros((), jnp.float32),  # llama-3.2-v gated cross-attn
+    }
+
+
+def _cross_layer_axes(cfg):
+    return {
+        "ln1": (None,), "ln2": (None,),
+        "xattn": attn.attention_axes(cfg),
+        "ffn": ffn_mod.ffn_axes(cfg),
+        "gate": (),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply (train/prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_self_layer(p, x, cfg, block_mask=None):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h, _ = ssm_mod.apply_rwkv_tmix(p["tmix"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        x = x + h
+        h, _ = ssm_mod.apply_rwkv_cmix(p["cmix"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x + h, aux
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a = attn.apply_attention(p["attn"], xn, cfg, block_mask=block_mask)
+    if cfg.family == "hybrid":
+        m, _ = ssm_mod.apply_mamba_head(p["mamba"], xn, cfg)
+        a = 0.5 * (a + m)
+    x = x + a
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        h, aux = moe_mod.apply_moe(p["moe"], xn, cfg)
+    else:
+        h = ffn_mod.apply_ffn(p["ffn"], xn, cfg)
+    return x + h, aux
+
+
+def _apply_cross_layer(p, x, enc, cfg):
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    g = jnp.tanh(p["gate"]).astype(x.dtype)
+    x = x + g * attn.apply_cross_attention(p["xattn"], xn, enc, cfg)
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + ffn_mod.apply_ffn(p["ffn"], xn, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg):
+    dtype = DTYPES[cfg.dtype]
+    ks = split_keys(key, 5)
+    p: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype)
+    if cfg.cross_attn_every:
+        n_cross = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.num_layers - n_cross
+        per_group = n_self // n_cross
+        self_keys = jnp.stack(split_keys(ks[2], n_cross * per_group)).reshape(
+            n_cross, per_group, 2
+        )
+        p["self_layers"] = jax.vmap(
+            jax.vmap(lambda k: _init_self_layer(k, cfg, dtype))
+        )(self_keys)
+        p["cross_layers"] = jax.vmap(
+            lambda k: _init_cross_layer(k, cfg, dtype)
+        )(jnp.stack(split_keys(ks[3], n_cross)))
+    else:
+        p["layers"] = jax.vmap(lambda k: _init_self_layer(k, cfg, dtype))(
+            jnp.stack(split_keys(ks[2], cfg.num_layers))
+        )
+    return p
+
+
+def _stack_axes(ax):
+    """Prepend the scan (layers) dim to every axes tuple in a tree."""
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a),
+        ax,
+        is_leaf=lambda a: isinstance(a, tuple),
+    )
+
+
+def model_axes(cfg):
+    ax: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "ln_f": (None,),
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("vocab", "embed")
+    if cfg.cross_attn_every:
+        ax["self_layers"] = jax.tree.map(
+            lambda a: ("layers", "layers") + tuple(a),
+            _self_layer_axes(cfg),
+            is_leaf=lambda a: isinstance(a, tuple),
+        )
+        ax["cross_layers"] = _stack_axes(_cross_layer_axes(cfg))
+    else:
+        ax["layers"] = _stack_axes(_self_layer_axes(cfg))
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch, cfg, block_mask=None, return_hidden=False):
+    """batch: {"tokens": [B, S] i32, optional "vision_embeds": [B, V, d]}.
+    Returns (logits [B, S, Vp], aux) — or (hidden [B, S, d], aux) with
+    ``return_hidden`` (the chunked loss computes logits itself)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]  # gather; GSPMD shards vocab dim
+    x = shard_by(x, "batch", "seq", "embed")
+
+    def self_block(carry, layer_p):
+        x, aux = carry
+        x, a = _apply_self_layer(layer_p, x, cfg, block_mask=block_mask)
+        # Megatron-SP-style boundary: saved (remat) activations shard their
+        # sequence dim over the model axis between layers
+        x = shard_by(x, "batch", "seq_sp", "embed")
+        return (x, aux + a), None
+
+    block = self_block
+    if cfg.remat:
+        block = jax.checkpoint(self_block, prevent_cse=False)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.cross_attn_every:
+        enc = batch["vision_embeds"].astype(x.dtype)
+
+        def group_block(carry, group_p):
+            x, aux = carry
+            if cfg.scan_layers:
+                (x, aux), _ = jax.lax.scan(block, (x, aux), group_p["self"])
+            else:
+                for i in range(jax.tree.leaves(group_p["self"])[0].shape[0]):
+                    (x, aux), _ = block((x, aux), jax.tree.map(lambda t: t[i], group_p["self"]))
+            x = _apply_cross_layer(group_p["cross"], x, enc, cfg)
+            return (x, aux), None
+
+        gblock = jax.checkpoint(group_block, prevent_cse=False) if cfg.remat else group_block
+        groups = {"self": params["self_layers"], "cross": params["cross_layers"]}
+        if cfg.scan_layers:
+            (x, aux0), _ = jax.lax.scan(gblock, (x, aux0), groups)
+        else:
+            n = jax.tree.leaves(params["cross_layers"])[0].shape[0]
+            for i in range(n):
+                (x, aux0), _ = gblock((x, aux0), jax.tree.map(lambda t: t[i], groups))
+    else:
+        if cfg.scan_layers:
+            (x, aux0), _ = jax.lax.scan(block, (x, aux0), params["layers"])
+        else:
+            for i in range(cfg.num_layers):
+                (x, aux0), _ = block(
+                    (x, aux0), jax.tree.map(lambda t: t[i], params["layers"])
+                )
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux0
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head, preferred_element_type=jnp.float32)
+    logits = shard_by(logits, "batch", "seq", "vocab")
+    return logits, aux0
+
+
+def lm_head_weights(params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against caches)
+# ---------------------------------------------------------------------------
+
+
+class DecodeCache(NamedTuple):
+    kv: Optional[attn.KVCache]  # stacked [L, ...] (None for ssm family)
+    ssm: Optional[jax.Array]  # hybrid: [L, B, d, n] | ssm: [L, B, H, N, N]
+    prev1: Optional[jax.Array]  # rwkv tmix token-shift state [L, B, d]
+    prev2: Optional[jax.Array]  # rwkv cmix token-shift state [L, B, d]
+    xkv: Optional[Any]  # vlm/encdec precomputed cross K/V (or enc states)
+
+
+def init_decode_cache(cfg, batch: int, max_len: int, vision_embeds=None):
+    dtype = DTYPES[cfg.dtype]
+    kv_heads, hd, d = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.d_model
+    cache_len = min(max_len, cfg.sliding_window or max_len)
+    if cfg.cross_attn_every:
+        n_cross = cfg.num_layers // cfg.cross_attn_every
+        per_group = (cfg.num_layers - n_cross) // n_cross
+        kv = jax.vmap(
+            jax.vmap(
+                lambda _: attn.init_kv_cache(batch, cache_len, kv_heads, hd, dtype)
+            )
+        )(jnp.zeros((n_cross, per_group)))
+        return DecodeCache(kv=kv, ssm=None, prev1=None, prev2=None,
+                           xkv=vision_embeds)
+    L = cfg.num_layers
+    mk_kv = lambda n: jax.vmap(
+        lambda _: attn.init_kv_cache(batch, cache_len, kv_heads, hd, dtype)
+    )(jnp.arange(n))
+    if cfg.family == "ssm":
+        h = cfg.num_heads
+        n = d // h
+        return DecodeCache(
+            kv=None,
+            ssm=jnp.zeros((L, batch, h, n, n), jnp.float32),
+            prev1=jnp.zeros((L, batch, d), dtype),
+            prev2=jnp.zeros((L, batch, d), dtype),
+            xkv=None,
+        )
+    if cfg.family == "hybrid":
+        return DecodeCache(
+            kv=mk_kv(L),
+            ssm=jnp.zeros((L, batch, d, cfg.ssm_state), jnp.float32),
+            prev1=None, prev2=None, xkv=None,
+        )
+    return DecodeCache(kv=mk_kv(L), ssm=None, prev1=None, prev2=None, xkv=None)
+
+
+def _decode_self_layer(p, x, cfg, kv, ssm, prev1, prev2, pos):
+    """x: [B, 1, d]. Returns (x, (kv, ssm, prev1, prev2))."""
+    if cfg.family == "ssm":
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        h, (ssm, p1) = ssm_mod.apply_rwkv_tmix(p["tmix"], xn, cfg, state=ssm,
+                                               prev_x=prev1)
+        x = x + h
+        xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+        h, p2 = ssm_mod.apply_rwkv_cmix(p["cmix"], xn, cfg, prev_x=prev2)
+        return x + h, (kv, ssm, p1, p2)
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, kv = attn.apply_attention_decode(p["attn"], xn, cfg, kv, pos)
+    if cfg.family == "hybrid":
+        m, ssm = ssm_mod.apply_mamba_head(p["mamba"], xn, cfg, state=ssm)
+        a = 0.5 * (a + m)
+    x = x + a
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        h, _ = moe_mod.apply_moe(p["moe"], xn, cfg)
+    else:
+        h = ffn_mod.apply_ffn(p["ffn"], xn, cfg)
+    return x + h, (kv, ssm, prev1, prev2)
+
+
+def decode_step(params, cache: DecodeCache, token: jax.Array, pos: jax.Array, cfg):
+    """token: [B] i32; pos: [B] absolute positions. Returns (logits, cache)."""
+    x = params["embed"][token][:, None, :]  # [B, 1, d]
+
+    if cfg.cross_attn_every:
+        enc = cache.xkv
+
+        def inner(x, inp):
+            lp, kv = inp
+            x, (kv, _, _, _) = _decode_self_layer(lp, x, cfg, kv, None, None,
+                                                  None, pos)
+            return x, kv
+
+        def group(x, inp):
+            gp, kv_g = inp  # gp: group params; kv_g: [per_group, ...] caches
+            if cfg.scan_layers:
+                x, kv_g = jax.lax.scan(inner, x, (gp["self"], kv_g))
+            else:
+                outs = []
+                n_inner = jax.tree.leaves(gp["self"])[0].shape[0]
+                for i in range(n_inner):
+                    x, kv_i = inner(
+                        x, jax.tree.map(lambda t: t[i], (gp["self"], kv_g)))
+                    outs.append(kv_i)
+                kv_g = jax.tree.map(lambda *z: jnp.stack(z), *outs)
+            x = _apply_cross_layer(gp["cross"], x, enc, cfg)
+            return x, kv_g
+
+        groups = {"self": params["self_layers"], "cross": params["cross_layers"]}
+        if cfg.scan_layers:
+            x, kv = jax.lax.scan(group, x, (groups, cache.kv))
+        else:  # cost probes
+            n_cross = cfg.num_layers // cfg.cross_attn_every
+            kvs = []
+            for gi in range(n_cross):
+                x, kv_g = group(
+                    x, jax.tree.map(lambda t: t[gi], (groups, cache.kv)))
+                # inner scan also unrolled for the probes
+                kvs.append(kv_g)
+            kv = jax.tree.map(lambda *z: jnp.stack(z), *kvs)
+        cache = cache._replace(kv=kv)
+    else:
+
+        def body(x, inp):
+            lp, kv, ssm, p1, p2 = inp
+            x, st = _decode_self_layer(lp, x, cfg, kv, ssm, p1, p2, pos)
+            return x, st
+
+        L = cfg.num_layers
+        xs = (
+            params["layers"],
+            cache.kv if cache.kv is not None else jnp.zeros((L,)),
+            cache.ssm if cache.ssm is not None else jnp.zeros((L,)),
+            cache.prev1 if cache.prev1 is not None else jnp.zeros((L,)),
+            cache.prev2 if cache.prev2 is not None else jnp.zeros((L,)),
+        )
+        if cfg.scan_layers:
+            x, (kv, ssm, p1, p2) = jax.lax.scan(body, x, xs)
+        else:  # cost probes: per-layer ops visible to cost_analysis
+            ys = []
+            for i in range(L):
+                x, st = body(x, jax.tree.map(lambda t: t[i], xs))
+                ys.append(st)
+            kv, ssm, p1, p2 = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+        cache = cache._replace(
+            kv=kv if cache.kv is not None else None,
+            ssm=ssm if cache.ssm is not None else None,
+            prev1=p1 if cache.prev1 is not None else None,
+            prev2=p2 if cache.prev2 is not None else None,
+        )
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head, preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask vocab-padding columns
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits[:, 0], cache

@@ -1,0 +1,91 @@
+"""Adafactor (factored second moment), the default optimizer above ~30B
+params: the factored statistics make the optimizer-state HBM cost negligible
+relative to Adam's 2x-f32, which is what lets the 1T-param arch fit the
+512-chip mesh (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: dict  # row statistics (or full v for <2D leaves)
+    vc: dict  # col statistics (None for <2D leaves)
+
+
+def _trainable(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    def vr0(p):
+        if not _trainable(p):
+            return jnp.zeros((), jnp.float32)
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros_like(p, jnp.float32)
+
+    def vc0(p):
+        if not _trainable(p) or not _factored(p):
+            return jnp.zeros((), jnp.float32)
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr0, params),
+        vc=jax.tree.map(vc0, params),
+    )
+
+
+def apply(params, grads, state: AdafactorState, lr, *, decay=0.8,
+          eps=1e-30, clip_threshold=1.0, weight_decay=0.0, grad_scale=1.0):
+    step = state.step + 1
+    beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+    def kernel(p, g, vr, vc):
+        g32 = g.astype(jnp.float32) * grad_scale
+        sq = g32 * g32 + eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * jnp.mean(sq, axis=-1)
+            vc = beta * vc + (1 - beta) * jnp.mean(sq, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + eps)
+        else:
+            vr = beta * vr + (1 - beta) * sq
+            u = g32 / (jnp.sqrt(vr) + eps)
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+    def upd(p, g, vr, vc):
+        if not _trainable(p):
+            return p, vr, vc
+        if p.ndim >= 4 and p.shape[0] >= 8:  # layer-stacked leaf
+            return jax.lax.map(lambda a: kernel(*a), (p, g, vr, vc))
+        return kernel(p, g, vr, vc)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_vr = tdef.flatten_up_to(state.vr)
+    flat_vc = tdef.flatten_up_to(state.vc)
+    out = [upd(p, g, r, c) for p, g, r, c in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        AdafactorState(
+            step=step,
+            vr=tdef.unflatten([o[1] for o in out]),
+            vc=tdef.unflatten([o[2] for o in out]),
+        ),
+    )

@@ -1,0 +1,75 @@
+"""AdamW, from scratch, pytree-native.
+
+Integer/bool leaves (sparse-structure index buffers) are *carried, not
+updated*: their grads are float0 under ``jax.grad(..., allow_int=True)``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def _trainable(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+def init(params) -> AdamWState:
+    # non-trainable (integer) leaves carry a scalar sentinel so the state
+    # tree stays regular (shardings/checkpoints map leaf-for-leaf)
+    zeros = lambda p: (
+        jnp.zeros_like(p, jnp.float32) if _trainable(p)
+        else jnp.zeros((), jnp.float32)
+    )
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def apply(
+    params, grads, state: AdamWState, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+    weight_decay=0.1, grad_scale=1.0,
+):
+    """``grad_scale`` folds global-norm clipping into the update so the
+    scaled-gradient tree is never materialized. Stacked-layer leaves
+    (ndim >= 3, large leading dim) update via ``lax.map`` over the layer dim
+    to bound f32 transients to one layer slice."""
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def kernel(p, g, mu, nu):
+        g32 = g.astype(jnp.float32) * grad_scale
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        u = (mu / c1) / (jnp.sqrt(nu / c2) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    def upd(p, g, mu, nu):
+        if not _trainable(p):
+            return p, mu, nu
+        if p.ndim >= 3 and p.shape[0] >= 8:  # layer-stacked leaf
+            return jax.lax.map(lambda a: kernel(*a), (p, g, mu, nu))
+        return kernel(p, g, mu, nu)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,85 @@
+"""Explicit collectives for shard_map contexts: hierarchical and compressed
+gradient reduction (DESIGN.md §6 distributed-optimization tricks).
+
+* ``hierarchical_psum``    — reduce-scatter inside the pod, all-reduce across
+                             pods, all-gather back in-pod: crosses the (slow)
+                             inter-pod links with 1/pod_size of the bytes.
+* ``compressed_psum_bf16`` — cast-to-bf16 all-reduce (2x inter-chip bytes
+                             saved vs f32 master grads).
+* ``compressed_psum_int8_ef`` — int8 quantized all-reduce with error-feedback
+                             state (residual carried to the next step), the
+                             standard 4x compression trick with unbiased-ish
+                             long-run behavior.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str) -> jax.Array:
+    """psum over (inner x outer) via RS(inner) -> AR(outer) -> AG(inner).
+
+    Mathematically identical to psum over both axes; the decomposition sends
+    only 1/inner_size of the bytes over the outer (inter-pod) links.
+    """
+    n_inner = jax.lax.axis_size(inner_axis)
+    lead = x.shape[0]
+    if lead % n_inner:
+        # fall back for non-dividing shapes
+        return jax.lax.psum(x, (inner_axis, outer_axis))
+    xs = x.reshape(n_inner, lead // n_inner, *x.shape[1:])
+    piece = jax.lax.psum_scatter(xs, inner_axis, scatter_dimension=0, tiled=False)
+    piece = jax.lax.psum(piece, outer_axis)
+    out = jax.lax.all_gather(piece, inner_axis, axis=0, tiled=False)
+    return out.reshape(x.shape)
+
+
+def compressed_psum_bf16(x: jax.Array, axis) -> jax.Array:
+    return jax.lax.psum(x.astype(jnp.bfloat16), axis).astype(x.dtype)
+
+
+def compressed_psum_int8_ef(
+    x: jax.Array, axis, err: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """int8 block-quantized psum with error feedback.
+
+    Returns (reduced, new_error). ``err`` is the carried residual from the
+    previous step (same shape as x; None -> zeros).
+    """
+    x32 = x.astype(jnp.float32)
+    if err is not None:
+        x32 = x32 + err
+    # negotiate a shared scale (scalar pmax — negligible traffic), then the
+    # integer psum is exact under that scale
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x32)), axis)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = x32 - deq
+    # reduce quantized values in int32 to avoid overflow, rescale after
+    red = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32)
+    return (red * scale).astype(x.dtype), new_err
+
+
+def tree_compressed_psum(tree, axis, method: str = "bf16", err_tree=None):
+    """Apply compressed psum leaf-wise over a gradient pytree."""
+    if method == "none":
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis), tree), err_tree
+    if method == "bf16":
+        return jax.tree.map(lambda g: compressed_psum_bf16(g, axis), tree), err_tree
+    if method == "int8_ef":
+        if err_tree is None:
+            err_tree = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), tree)
+        out = jax.tree.map(
+            lambda g, e: compressed_psum_int8_ef(g, axis, e), tree, err_tree
+        )
+        red = jax.tree.map(lambda o: o[0], out,
+                           is_leaf=lambda o: isinstance(o, tuple))
+        err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda o: isinstance(o, tuple))
+        return red, err
+    raise ValueError(f"unknown compression {method!r}")

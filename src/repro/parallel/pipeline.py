@@ -1,0 +1,85 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map + ppermute).
+
+Stages are laid out along an axis (default ``"pod"``); activations flow
+stage -> stage+1 via ``ppermute`` each tick. With M microbatches and S
+stages the schedule runs M + S - 1 ticks (bubble fraction (S-1)/(M+S-1)).
+Autodiff flows through ppermute, so the same schedule trains.
+
+This is the optional PP layout: the production default keeps the pod axis as
+data-parallel (DESIGN.md §6); ``launch/train.py --pipeline`` and the tests
+exercise this module.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(
+    stage_fn: Callable,  # (stage_params, x) -> y   (same shape as x)
+    mesh,
+    axis: str = "pod",
+    data_axes=("data",),
+):
+    """Build a pipelined apply: (stacked_params [S, ...], x [M, mb, ...]) -> y.
+
+    stacked_params' leading dim indexes stages; x's leading dim indexes
+    microbatches. Returns y with the same [M, mb, ...] layout (outputs of the
+    last stage, gathered back to all stages for downstream loss code).
+    """
+
+    def sharded(params_stacked, x):
+        s = jax.lax.axis_size(axis)
+        idx = jax.lax.axis_index(axis)
+        p_local = jax.tree.map(lambda t: t[0], params_stacked)  # [1, ...] -> local
+        m = x.shape[0]
+        ticks = m + s - 1
+        perm = [(i, (i + 1) % s) for i in range(s)]
+
+        def tick(carry, t):
+            act, outs = carry
+            # stage 0 ingests microbatch t (or zeros once drained)
+            mb_idx = jnp.clip(t, 0, m - 1)
+            feed = jnp.where(t < m, x[mb_idx], jnp.zeros_like(x[0]))
+            inp = jnp.where(idx == 0, feed, act)
+            y = stage_fn(p_local, inp)
+            # last stage emits microbatch t - (s - 1)
+            out_idx = jnp.clip(t - (s - 1), 0, m - 1)
+            emit = jnp.logical_and(idx == s - 1, t >= s - 1)
+            outs = outs.at[out_idx].set(
+                jnp.where(emit, y, outs[out_idx])
+            )
+            act = jax.lax.ppermute(y, axis, perm)
+            return (act, outs), None
+
+        outs0 = jnp.zeros_like(x)
+        (_, outs), _ = jax.lax.scan(
+            tick, (jnp.zeros_like(x[0]), outs0), jnp.arange(ticks)
+        )
+        # broadcast last stage's outputs to every stage (loss runs replicated)
+        outs = jax.lax.psum(
+            jnp.where(idx == s - 1, outs, jnp.zeros_like(outs)), axis
+        )
+        return outs
+
+    return jax.shard_map(
+        sharded,
+        mesh=mesh,
+        # params: stage dim over the pipeline axis; x: [M, mb, ...] with the
+        # microbatch dim replicated and the batch dim over the data axes
+        in_specs=(P(axis), P(None, data_axes)),
+        out_specs=P(None, data_axes),
+        check_vma=False,
+    )
+
+
+def split_stages(tree, n_stages: int):
+    """Reshape stacked layer params [L, ...] -> [S, L/S, ...] for gpipe."""
+    return jax.tree.map(
+        lambda t: t.reshape(n_stages, t.shape[0] // n_stages, *t.shape[1:]), tree
+    )

@@ -1,0 +1,120 @@
+"""Logical-axis -> mesh-axis rules and param-sharding construction.
+
+Logical axes used by the model zoo (models/*/ *_axes functions):
+
+  batch / tokens : data-parallel dims            -> ("pod", "data") | ("data",)
+  vocab / heads / mlp / expert / model_shard : tensor-parallel dims -> "model"
+  embed          : d_model dim                   -> None, or "data" under FSDP
+  fsdp           : explicit FSDP dim for big tensors -> "data" under FSDP
+  layers / expert_lead / seq : never sharded by default
+
+FSDP (ZeRO-3-ish): parameters additionally sharded over the data axis on
+their non-TP dim; GSPMD inserts the all-gathers in forward/backward and the
+reduce-scatters on gradients. Used for the >=80B archs (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import logical_to_pspec
+
+__all__ = ["make_rules", "param_shardings", "batch_shardings", "make_mesh_rules"]
+
+
+def make_rules(multi_pod: bool, fsdp: bool = False,
+               seq_shard: bool = False) -> Dict[str, Optional[object]]:
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    rules = {
+        "batch": batch_axes,
+        "tokens": batch_axes,
+        "seq": "data" if seq_shard else None,
+        "vocab": "model",
+        "heads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "expert_d": "data",  # serving MoE layout (expert_partition=expert_data)
+        "model_shard": "model",
+        "embed": "data" if fsdp else None,
+        "fsdp": "data" if fsdp else None,
+        "expert_lead": None,
+        "layers": None,
+        # Megatron-SP-style: layer-boundary activations shard seq over model
+        # (dropped automatically when seq doesn't divide, e.g. decode S=1)
+        "seq_sp": "model",
+        # flash-decoding-style: KV-cache sequence dim over model
+        "kv_seq": "model",
+    }
+    return rules
+
+
+def _fits(shape, spec, mesh) -> bool:
+    """Check divisibility of dims by their assigned mesh axes."""
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            continue
+        names = names if isinstance(names, tuple) else (names,)
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        if dim % total:
+            return False
+    return True
+
+
+def param_shardings(mesh, params_or_shapes, axes_tree, rules):
+    """NamedSharding tree for params. Falls back to dropping axes whose mesh
+    extent does not divide the dim (e.g. tiny smoke configs)."""
+
+    def one(leaf, axes):
+        shape = leaf.shape
+        axes = tuple(axes)[: len(shape)]
+        axes = axes + (None,) * (len(shape) - len(axes))
+        spec = [rules.get(a) if a is not None else None for a in axes]
+        # drop non-dividing assignments rather than failing
+        for i, names in enumerate(spec):
+            if names is None:
+                continue
+            nn = names if isinstance(names, tuple) else (names,)
+            ext = 1
+            for n in nn:
+                ext *= mesh.shape[n]
+            if shape[i] % ext:
+                spec[i] = None
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(
+        one, params_or_shapes, axes_tree,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+
+
+def batch_shardings(mesh, batch_spec, rules):
+    """Shard every batch input on its leading (batch) dim. Falls back to a
+    dividing prefix of the batch axes (or replication) for tiny batches
+    (long_500k has global_batch=1)."""
+
+    def one(leaf):
+        names = rules["batch"]
+        nn = names if isinstance(names, tuple) else (names,)
+        # use the longest prefix of the batch axes that divides dim 0
+        chosen = None
+        for end in range(len(nn), 0, -1):
+            ext = 1
+            for n in nn[:end]:
+                ext *= mesh.shape[n]
+            if leaf.shape[0] % ext == 0:
+                chosen = nn[:end] if end > 1 else nn[0]
+                break
+        spec = [chosen] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_spec, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def make_mesh_rules(mesh, fsdp: bool = False, seq_shard: bool = False):
+    multi_pod = "pod" in mesh.axis_names
+    return make_rules(multi_pod, fsdp=fsdp, seq_shard=seq_shard)

@@ -1,0 +1,70 @@
+"""serve_step factory + decode-cache sharding axes for the dry-run.
+
+Cache sharding (DESIGN.md §6, beyond-paper): the KV cache shards its
+*sequence* dim over the model axis — flash-decoding-style split-KV. Each
+model shard scores its cache segment; GSPMD inserts the small softmax-stat
+and output psums. This is what fits decode_32k for the big archs (a
+replicated 0.9 TB cache would never fit) and keeps kv_heads < model_size
+archs shardable (head-sharding would not divide).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache
+from repro.models.transformer import DecodeCache
+
+__all__ = ["decode_cache_axes", "make_serve_step"]
+
+
+def _kv_axes(stack_dims: int):
+    lead = (None,) * stack_dims
+    return KVCache(
+        k=lead + ("batch", "kv_seq", None, None),
+        v=lead + ("batch", "kv_seq", None, None),
+        pos=lead + ("batch", "kv_seq"),
+    )
+
+
+def decode_cache_axes(cfg) -> DecodeCache:
+    """Logical axes tree matching init_decode_cache's structure."""
+    if cfg.is_encdec:
+        return DecodeCache(
+            kv=_kv_axes(1), ssm=None, prev1=None, prev2=None,
+            xkv=("batch", None, None),
+        )
+    if cfg.cross_attn_every:
+        return DecodeCache(
+            kv=_kv_axes(2), ssm=None, prev1=None, prev2=None,
+            xkv=("batch", None, None),
+        )
+    if cfg.family == "ssm":
+        return DecodeCache(
+            kv=None,
+            ssm=(None, "batch", "heads", None, None),
+            prev1=(None, "batch", None),
+            prev2=(None, "batch", None),
+            xkv=None,
+        )
+    if cfg.family == "hybrid":
+        return DecodeCache(
+            kv=_kv_axes(1),
+            ssm=(None, "batch", "heads", None),
+            prev1=None, prev2=None, xkv=None,
+        )
+    return DecodeCache(kv=_kv_axes(1), ssm=None, prev1=None, prev2=None, xkv=None)
+
+
+def make_serve_step(model):
+    """serve_step(params, cache, token [B], pos [B]) -> (next_token, cache).
+
+    Greedy decode of one token — the op lowered for decode_* shapes.
+    """
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step

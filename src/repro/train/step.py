@@ -1,0 +1,109 @@
+"""Train-step factory: mixed precision, grad accumulation (microbatching),
+global-norm clipping, optimizer dispatch — all inside one jittable function
+(the object the dry-run lowers).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adafactor, adamw
+from repro.optim.schedule import warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: object  # AdamWState | AdafactorState
+
+
+def init_train_state(params, optimizer: str = "adamw") -> TrainState:
+    opt = (adamw if optimizer == "adamw" else adafactor).init(params)
+    return TrainState(params=params, opt=opt)
+
+
+def _global_norm(tree):
+    def sq(x):
+        # per-layer partial sums on stacked leaves: avoids materializing a
+        # full f32 copy of multi-GB gradient leaves just to cast-and-square
+        if x.ndim >= 3 and x.shape[0] >= 8:
+            return jnp.sum(jax.lax.map(
+                lambda s: jnp.sum(s.astype(jnp.float32) ** 2), x))
+        return jnp.sum(x.astype(jnp.float32) ** 2)
+
+    leaves = [
+        x for x in jax.tree.leaves(tree)
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
+    ]
+    return jnp.sqrt(sum(sq(x) for x in leaves))
+
+
+def _clip_scale(tree, max_norm):
+    """Global-norm clip as a scalar scale (folded into the optimizer update
+    so a scaled copy of the gradient tree is never materialized)."""
+    norm = _global_norm(tree)
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9)), norm
+
+
+def make_train_step(
+    model,
+    *,
+    optimizer: str = "adamw",
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    clip_norm: float = 1.0,
+    microbatches: int = 1,
+    weight_decay: float = 0.1,
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    opt_mod = adamw if optimizer == "adamw" else adafactor
+    loss_grad = jax.value_and_grad(model.loss, allow_int=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            return loss_grad(params, batch)
+        # grad accumulation: split the batch along dim 0 and scan
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def acc_fn(carry, mb_i):
+            loss_acc, grad_acc = carry
+            l, g = loss_grad(params, mb_i)
+            grad_acc = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32)
+                if jnp.issubdtype(b_.dtype, jnp.inexact) else a,
+                grad_acc, g,
+            )
+            return (loss_acc + l, grad_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32)
+            if jnp.issubdtype(p.dtype, jnp.inexact) else jnp.zeros((), jnp.float32),
+            params,
+        )
+        (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zeros), mb)
+        scale = 1.0 / microbatches
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = compute_grads(state.params, batch)
+        scale, gnorm = _clip_scale(grads, clip_norm)
+        step = state.opt.step
+        lr = warmup_cosine(step, peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        kwargs = {"grad_scale": scale}
+        if optimizer == "adamw":
+            kwargs["weight_decay"] = weight_decay
+        params, opt = opt_mod.apply(state.params, grads, state.opt, lr, **kwargs)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step

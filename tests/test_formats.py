@@ -1,0 +1,138 @@
+"""Format round-trips + hypothesis property tests on the core invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (
+    BCSR, WCSR, bcsr_from_dense, bcsr_from_mask, bcsr_to_dense,
+    bcsr_transpose, block_mask_from_dense, fill_ratio, make_wcsr_tasks,
+    rcm_permutation, wcsr_from_dense, wcsr_to_dense,
+)
+from repro.core.sparsify import (
+    apply_block_mask, banded_block_mask, magnitude_block_mask,
+    random_block_mask,
+)
+
+
+def _sparse_dense(rng, m, k, bm, bk, sparsity):
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    mask = random_block_mask((m, k), (bm, bk), sparsity, seed=1)
+    return apply_block_mask(d, mask, (bm, bk))
+
+
+def test_bcsr_roundtrip(rng):
+    d = _sparse_dense(rng, 128, 192, 32, 32, 0.6)
+    a = bcsr_from_dense(d, (32, 32))
+    assert np.allclose(np.asarray(bcsr_to_dense(a)), d)
+
+
+def test_bcsr_covers_empty_rows(rng):
+    d = np.zeros((128, 64), np.float32)
+    d[:32, :32] = rng.normal(size=(32, 32))  # only block-row 0 nonzero
+    a = bcsr_from_dense(d, (32, 32))
+    rows = set(np.asarray(a.block_rows)[: a.nnz_blocks].tolist())
+    assert rows == {0, 1, 2, 3}  # every block-row covered
+    assert np.allclose(np.asarray(bcsr_to_dense(a)), d)
+
+
+def test_bcsr_transpose(rng):
+    d = _sparse_dense(rng, 96, 160, 32, 32, 0.5)
+    a = bcsr_from_dense(d, (32, 32))
+    at = bcsr_transpose(a)
+    assert np.allclose(np.asarray(bcsr_to_dense(at)), d.T)
+    assert at.shape == (160, 96)
+
+
+def test_wcsr_roundtrip(rng):
+    d = rng.normal(size=(128, 200)).astype(np.float32)
+    d *= rng.random(d.shape) > 0.8
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    assert np.allclose(np.asarray(wcsr_to_dense(w)), d)
+    assert w.padded_cols % 8 == 0
+
+
+def test_fill_ratio_ordering(rng):
+    """WCSR is never less compact than BCSR for scattered sparsity."""
+    d = rng.normal(size=(128, 256)).astype(np.float32)
+    d *= rng.random(d.shape) > 0.95
+    a = bcsr_from_dense(d, (32, 32), pad_to=None)
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    assert fill_ratio(d, w) >= fill_ratio(d, a) - 1e-9
+
+
+def test_wcsr_tasks_cover_all_chunks(rng):
+    d = rng.normal(size=(128, 300)).astype(np.float32)
+    d *= rng.random(d.shape) > 0.7
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    t_win, t_start, t_n = make_wcsr_tasks(w, chunks_per_task=3)
+    ptr = np.asarray(w.window_ptr) // 8
+    covered = {(int(w_), s)
+               for w_, st_, n in zip(t_win, t_start, t_n)
+               for s in range(st_, st_ + n)}
+    want = {(wi, c) for wi in range(w.num_windows)
+            for c in range(ptr[wi], ptr[wi + 1])}
+    assert covered == want
+    assert all(n <= 3 for n in t_n)
+
+
+def test_rcm_reduces_bandwidth():
+    rng = np.random.default_rng(3)
+    n = 96
+    d = np.zeros((n, n), np.float32)
+    idx = rng.permutation(n)
+    for i in range(n - 1):  # a path graph, randomly permuted
+        d[idx[i], idx[i + 1]] = 1.0
+        d[idx[i + 1], idx[i]] = 1.0
+    perm = rcm_permutation(d)
+    dp = d[np.ix_(perm, perm)]
+    bw = lambda x: max(abs(i - j) for i, j in zip(*np.nonzero(x)))
+    assert bw(dp) < bw(d)
+
+
+def test_magnitude_mask_keeps_top_blocks(rng):
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    w[:32, :32] *= 100  # block (0,0) clearly dominant
+    m = magnitude_block_mask(w, (32, 32), sparsity=0.75)
+    assert m[0, 0] and m.sum() == 1
+
+
+def test_banded_mask_shape():
+    m = banded_block_mask((128, 128), (32, 32), bandwidth_blocks=1)
+    assert m.shape == (4, 4)
+    assert m[0, 0] and not m[0, 3]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mb=st.integers(2, 4), kb=st.integers(2, 5),
+    bm=st.sampled_from([8, 16]), bk=st.sampled_from([8, 16]),
+    sparsity=st.floats(0.0, 0.9), seed=st.integers(0, 100),
+)
+def test_property_bcsr_roundtrip(mb, kb, bm, bk, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    d = _sparse_dense(rng, mb * bm, kb * bk, bm, bk, sparsity)
+    a = bcsr_from_dense(d, (bm, bk))
+    assert np.allclose(np.asarray(bcsr_to_dense(a)), d)
+    # structural invariants
+    rows = np.asarray(a.block_rows)[: a.nnz_blocks]
+    assert (np.diff(rows) >= 0).all()  # sorted by block row
+    ptr = np.asarray(a.block_row_ptr)
+    assert ptr[-1] == a.nnz_blocks
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    wb=st.integers(1, 4), k=st.integers(8, 64),
+    density=st.floats(0.05, 1.0), seed=st.integers(0, 100),
+)
+def test_property_wcsr_roundtrip(wb, k, density, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(wb * 16, k)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    w = wcsr_from_dense(d, b_row=16, b_col=8)
+    assert np.allclose(np.asarray(wcsr_to_dense(w)), d)
+    # every real packed column has a valid source column
+    ci = np.asarray(w.col_idx)
+    assert ((ci >= -1) & (ci < k)).all()

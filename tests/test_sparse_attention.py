@@ -1,0 +1,60 @@
+"""MInference-lite pattern selection properties + tuning policy."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.sparse_attention import (
+    block_topk_mask, causal_block_mask, local_sink_mask, mask_density,
+    profile_block_scores, select_patterns, vertical_slash_mask,
+)
+from repro.kernels.tuning import padding_waste, select_bn, vmem_usage
+
+
+def test_local_sink_mask_shape():
+    m = local_sink_mask(8, 8, window_blocks=2, sink_blocks=1)
+    assert m[7, 7] and m[7, 6] and not m[7, 4]
+    assert m[7, 0]  # sink
+    assert not m[0, 5]  # causal
+
+
+def test_pattern_recall_monotone(rng):
+    q = rng.normal(size=(1, 2, 256, 16)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 256, 16)).astype(np.float32)
+    bs = profile_block_scores(jnp.asarray(q), jnp.asarray(k), block=32)
+    m_small, ch_small = select_patterns(bs, budget=0.2)
+    m_big, ch_big = select_patterns(bs, budget=0.6)
+    for cs, cb in zip(ch_small, ch_big):
+        assert cb.recall >= cs.recall - 0.05
+
+
+def test_selected_masks_are_causal(rng):
+    q = rng.normal(size=(1, 2, 128, 16)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 128, 16)).astype(np.float32)
+    bs = profile_block_scores(jnp.asarray(q), jnp.asarray(k), block=32)
+    masks, _ = select_patterns(bs, budget=0.5)
+    causal = causal_block_mask(4, 4)
+    assert not np.logical_and(masks, ~causal[None]).any()
+    # diagonal always kept (local information never dropped)
+    for h in range(masks.shape[0]):
+        assert np.diagonal(masks[h]).all()
+
+
+def test_sink_head_prefers_sink_pattern(rng):
+    """A head with strong attention-sink structure should keep column 0."""
+    q = rng.normal(size=(2, 1, 256, 16)).astype(np.float32)
+    k = rng.normal(size=(2, 1, 256, 16)).astype(np.float32)
+    k[:, 0, :32] += 3.0  # massive sink at the first block
+    bs = profile_block_scores(jnp.asarray(q), jnp.asarray(k), block=32)
+    masks, choices = select_patterns(bs, budget=0.3)
+    assert masks[0][:, 0].all()
+
+
+def test_select_bn_policy():
+    assert select_bn(1024) == 1024  # largest divisor wins
+    assert select_bn(512) == 512
+    assert 18944 // 2 % select_bn(18944 // 2) == 0
+    assert padding_waste(1024, 512) == 0.0
+    assert padding_waste(1000, 512) > 0.0
+    # VMEM ceiling respected
+    assert vmem_usage(128, 128, select_bn(4096)) <= 16 * 1024 * 1024
