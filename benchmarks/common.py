@@ -37,6 +37,19 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(ts))
 
 
+def time_spmm(a, b, warmup: int = 1, iters: int = 3, **config) -> float:
+    """Time ``repro.ops.spmm(a, b)`` jitted, under the ambient op config.
+
+    ``config`` keywords (impl, bn, ...) apply to this measurement only; with
+    none given the registry/auto-tiling defaults are measured — i.e. exactly
+    what a caller of the public API gets.
+    """
+    from repro.ops import spmm
+
+    f = jax.jit(lambda b_: spmm(a, b_, **config))
+    return time_call(f, b, warmup=warmup, iters=iters)
+
+
 def geomean(xs) -> float:
     xs = np.asarray([x for x in xs if x > 0], np.float64)
     return float(np.exp(np.log(xs).mean())) if len(xs) else 0.0

@@ -15,15 +15,12 @@ outstanding row DMAs overlapped with the MXU) — see EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (HBM_BW, PEAK_MXU, geomean, model_bcsr_time,
-                               suite_matrix, tflops, time_call)
+                               suite_matrix, tflops, time_spmm)
 from repro.core.formats import bcsr_from_dense, rcm_permutation, wcsr_from_dense
-from repro.kernels.bcsr.ref import bcsr_spmm_ref
-from repro.kernels.wcsr.ref import wcsr_spmm_ref
-from repro.kernels.tuning import select_bn
+from repro.ops import auto_bn
 
 M = K = 2048  # scaled-down suite (CPU container)
 NS = (256, 1024)
@@ -75,7 +72,9 @@ def run(csv_rows):
         per_fmt = {"wcsr": [], "wcsr_opt": [], "bcsr": [], "bell": [],
                    "dense": []}
         for kind, density, d, nnz, a, w in mats:
-            bn = select_bn(n, B_ROW, B_ROW)
+            # ops-layer §IV-C auto-tiling (tuning-cached), same policy the
+            # public spmm() applies by default
+            bn = auto_bn(n, B_ROW, B_ROW, op="table1", shape=(M, K))
             t_b = model_bcsr_time(a.nnz_blocks, B_ROW, B_ROW, n, bn, k=K)
             t_bell = model_bcsr_time(_bell_blocks(a), B_ROW, B_ROW, n, bn, k=K)
             t_w = _model_wcsr_time(w, n, bn)
@@ -92,10 +91,9 @@ def run(csv_rows):
             if n == N_MEASURE:
                 b = jnp.asarray(np.random.default_rng(1).normal(
                     size=(K, n)).astype(np.float32))
-                us_b = time_call(jax.jit(lambda bb, a=a: bcsr_spmm_ref(a, bb)),
-                                 b, warmup=1, iters=3)
-                us_w = time_call(jax.jit(lambda bb, w=w: wcsr_spmm_ref(w, bb)),
-                                 b, warmup=1, iters=3)
+                # unified API with bn="auto" defaults (format-polymorphic)
+                us_b = time_spmm(a, b)
+                us_w = time_spmm(w, b)
             csv_rows.append((f"table1/{kind}_d{density}_N{n}_wcsr", us_w,
                              f"{per_fmt['wcsr'][-1]:.2f}TFLOPS"))
             csv_rows.append((f"table1/{kind}_d{density}_N{n}_bcsr", us_b,

@@ -13,10 +13,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import HBM_BW, PEAK_MXU, model_bcsr_time, time_call
+from benchmarks.common import (HBM_BW, PEAK_MXU, model_bcsr_time, time_call,
+                               time_spmm)
 from repro.core.sparsify import sparsify_to_bcsr
-from repro.kernels.bcsr.ref import bcsr_spmm_ref
-from repro.kernels.tuning import select_bn
+from repro.ops import auto_bn
 
 M_S, K_S = 18944 // 8, 3584 // 8  # scaled CPU shapes
 M_F, K_F = 18944, 3584
@@ -44,11 +44,11 @@ def run(csv_rows):
                          f"{t_dense_full*1e3:.3f}ms_v5e"))
         for sp in SPARSITIES:
             a = sparsify_to_bcsr(w_s, (64, 64), sp, method="random", seed=1)
-            f_sp = jax.jit(lambda xx, a=a: bcsr_spmm_ref(a, xx))
-            us_sp = time_call(f_sp, x_s)
+            # unified API, bn="auto" defaults
+            us_sp = time_spmm(a, x_s, warmup=2, iters=5)
             # full-size model: nnz blocks at this sparsity, 128x128 blocks
             nnzb = int(round((1 - sp) * (M_F // 128) * (K_F // 128)))
-            bn = select_bn(n, 128, 128)
+            bn = auto_bn(n, 128, 128, op="table3", shape=(M_F, K_F))
             t_sp = model_bcsr_time(nnzb, 128, 128, n, bn, k=K_F)
             csv_rows.append((
                 f"table3/gateproj_N{n}_sparse{int(sp*100)}", us_sp,

@@ -1,21 +1,31 @@
-"""Quickstart: the paper's technique in five steps.
+"""Quickstart: the paper's technique in five steps, via the unified
+``repro.ops`` API.
 
-1. take a dense weight, 2. block-prune it to BCSR, 3. run the Pallas SpMM
-kernel (interpret mode on CPU) against the jnp oracle, 4. drop the sparse
-layer into a model, 5. compare dense-vs-sparse modeled v5e latency.
+1. take a dense weight, 2. block-prune it to BCSR, 3. run the polymorphic
+``spmm`` (Pallas kernel in interpret mode on CPU) against the jnp oracle,
+4. drop the sparse layer into a model, 5. compare dense-vs-sparse modeled
+v5e latency.
+
+``repro.ops.spmm(a, b)`` dispatches on the format of ``a`` (BCSR or WCSR),
+auto-selects the output tile width (paper §IV-C), and obeys the ambient
+``use_config(...)`` / ``REPRO_SPARSE_IMPL`` execution config.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+
+import pathlib
+import sys
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import fill_ratio
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from repro.core.formats import fill_ratio, wcsr_from_dense
 from repro.core.sparse_linear import SparseLinearSpec, sparse_linear_from_dense
 from repro.core.sparsify import sparsify_to_bcsr
-from repro.kernels.bcsr.ops import bcsr_spmm
-from repro.kernels.bcsr.ref import bcsr_spmm_ref
+from repro.ops import spmm, use_config
 from benchmarks.common import model_bcsr_time, PEAK_MXU, HBM_BW
 
 rng = np.random.default_rng(0)
@@ -29,22 +39,31 @@ a = sparsify_to_bcsr(w, (64, 64), sparsity=0.9, method="magnitude")
 print(f"BCSR: {a.nnz_blocks} blocks kept of {(OUT//64)*(IN//64)}, "
       f"fill_ratio={fill_ratio(np.where(np.abs(w) > 0, w, 0), a):.3f}")
 
-# 3. kernel vs oracle
+# 3. one spmm() for every format: kernel (interpret on CPU) vs jnp reference,
+#    flipped via config contexts — the call sites never change
 x = jnp.asarray(rng.normal(size=(IN, TOKENS)).astype(np.float32))
-y_kernel = bcsr_spmm(a, x, impl="kernel_interpret", bn=128)
-y_ref = bcsr_spmm_ref(a, x)
+with use_config(impl="kernel_interpret"):
+    y_kernel = spmm(a, x)          # BCSR -> block-streaming kernel
+y_ref = spmm(a, x, impl="ref")
 err = float(jnp.max(jnp.abs(y_kernel - y_ref)))
 print(f"Pallas kernel vs jnp oracle max err: {err:.2e}")
 assert err < 1e-3
+
+# the same entry point handles irregular sparsity via WCSR
+w_irregular = wcsr_from_dense(
+    np.where(rng.random((OUT, IN)) < 0.02, w, 0), b_row=64, b_col=8)
+y_w = spmm(w_irregular, x)         # WCSR -> window-gather path
+print(f"WCSR spmm out {y_w.shape} (same API, different format)")
 
 # 4. a drop-in sparse linear layer (differentiable: SDDMM backward)
 layer = sparse_linear_from_dense(
     w, SparseLinearSpec(IN, OUT, sparsity=0.9, block=(64, 64)))
 tokens = jnp.asarray(rng.normal(size=(4, 8, IN)).astype(np.float32))
-out = layer(tokens, impl="ref")
-grad = jax.grad(lambda v: jnp.sum(
-    layer.__class__(values=v, structure=layer.structure)(tokens, "ref") ** 2
-))(layer.values)
+with use_config(impl="ref"):
+    out = layer(tokens)
+    grad = jax.grad(lambda v: jnp.sum(
+        layer.__class__(values=v, structure=layer.structure)(tokens) ** 2
+    ))(layer.values)
 print(f"sparse layer out {out.shape}, dvalues {grad.shape} "
       f"(norm {float(jnp.linalg.norm(grad)):.2f})")
 

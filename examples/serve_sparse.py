@@ -13,6 +13,7 @@ import jax
 
 from repro.configs import ARCHS, reduced_config
 from repro.models.registry import build_model
+from repro.ops import OpConfig
 from repro.serve.engine import Request, ServeEngine
 
 rng = np.random.default_rng(0)
@@ -25,7 +26,10 @@ params = model.init(jax.random.PRNGKey(0))
 print(f"model: {cfg.name} reduced, {cfg.num_layers}L d={cfg.d_model} "
       f"ffn_sparsity={cfg.ffn_sparsity}")
 
-engine = ServeEngine(model, params, slots=4, max_len=128)
+# op_config pins the sparse-op backend engine-wide (repro.ops semantics);
+# REPRO_SPARSE_IMPL=... would do the same without code changes
+engine = ServeEngine(model, params, slots=4, max_len=128,
+                     op_config=OpConfig(impl="ref"))
 requests = [
     Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (p,)),
             max_new_tokens=8)

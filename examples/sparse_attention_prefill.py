@@ -12,8 +12,8 @@ import jax.numpy as jnp
 
 from repro.core.sparse_attention import (mask_density, profile_block_scores,
                                          select_patterns)
-from repro.kernels.block_attn.ops import block_sparse_attention
 from repro.kernels.block_attn.ref import block_sparse_attention_ref
+from repro.ops import sparse_attention
 
 rng = np.random.default_rng(0)
 B, H, KVH, S, D = 1, 4, 2, 512, 32
@@ -33,7 +33,7 @@ for h, c in enumerate(choices):
     print(f"head {h}: pattern={c.name:14s} recall={c.recall:.3f} "
           f"density={c.density:.3f}")
 
-out_sparse = block_sparse_attention(
+out_sparse = sparse_attention(
     jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), masks,
     block_q=BLOCK, block_k=BLOCK, impl="kernel_interpret")
 out_ref = block_sparse_attention_ref(

@@ -1,0 +1,30 @@
+"""jax API compatibility aliases.
+
+The repo tracks current jax spellings; aliases here keep it running on the
+0.4.x series too:
+
+* ``jax.shard_map`` graduated from ``jax.experimental.shard_map`` and
+  renamed its ``check_rep`` kwarg to ``check_vma``.
+* ``jax.lax.axis_size`` is new; the classic spelling is a psum of 1 over
+  the named axis (constant-folded, so still static).
+"""
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:  # jax < 0.5
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, **kwargs)

@@ -13,7 +13,8 @@ best-fitting pattern at inference time". We reproduce the offline part:
                               attention mass (recall) at a block budget.
 
 All outputs are host-side boolean masks [H, nqb, nkb] consumed by
-``kernels.block_attn`` (static structure, CSR-encoded for scalar prefetch).
+``repro.ops.sparse_attention`` (static structure, CSR-encoded for scalar
+prefetch).
 """
 
 from __future__ import annotations

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.formats import BCSR
 from repro.core.sparsify import sparsify_to_bcsr
-from repro.kernels.bcsr.ops import BCSRStructure, bcsr_matmul, structure_of
+from repro.ops import BCSRStructure, bcsr_matmul, structure_of
 
 __all__ = ["SparseLinearSpec", "SparseLinear", "sparse_linear_from_dense"]
 
@@ -44,7 +44,7 @@ class SparseLinear:
     values: jax.Array
     structure: BCSRStructure
 
-    def __call__(self, x: jax.Array, impl: str = "auto") -> jax.Array:
+    def __call__(self, x: jax.Array, impl=None) -> jax.Array:
         # y^T = W @ x^T;  x: [..., in_dim] -> y: [..., out_dim]
         lead = x.shape[:-1]
         xt = x.reshape(-1, x.shape[-1]).T  # [in, tokens]
@@ -56,7 +56,7 @@ class SparseLinear:
         return self.structure.shape
 
     def to_bcsr(self) -> BCSR:
-        from repro.kernels.bcsr.ops import _as_bcsr
+        from repro.ops.matmul import _as_bcsr
 
         return _as_bcsr(self.values, self.structure)
 

@@ -1,166 +1,52 @@
-"""Jitted + differentiable wrappers around the BCSR SpMM kernel.
+"""DEPRECATED: thin shims forwarding to the unified ``repro.ops`` API.
 
-Two entry points:
-
-* ``bcsr_spmm(a, b)`` — inference-style op on a ``BCSR`` pytree. Dispatches
-  to the Pallas kernel (interpret mode on CPU) or the jnp reference.
-* ``bcsr_matmul(values, b, structure)`` — training-style op with a
-  ``custom_vjp``: the sparse *structure* (block indices) is static, the block
-  *values* are a differentiable parameter. Backward computes
-  ``dB = A^T @ dC`` (transposed-structure SpMM) and
-  ``dvalues = SDDMM(dC, B)`` sampled at the stored blocks.
+``bcsr_spmm`` is now ``repro.ops.spmm`` (format-polymorphic) and
+``bcsr_matmul`` / ``BCSRStructure`` / ``structure_of`` live in
+``repro.ops``. These wrappers keep old call sites working and emit a
+``DeprecationWarning`` on use.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Tuple
+import warnings
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.formats import BCSR
-from repro.kernels.bcsr import ref as bcsr_ref
-from repro.kernels.bcsr.kernel import run_bcsr_spmm
 
 __all__ = ["bcsr_spmm", "BCSRStructure", "structure_of", "bcsr_matmul"]
 
 
-def _default_impl() -> str:
-    # Pallas-Mosaic kernels only lower on TPU; CPU uses interpret for tests
-    # and the jnp reference for anything perf-sensitive or distributed.
-    return "kernel" if jax.default_backend() == "tpu" else "ref"
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.kernels.bcsr.ops.{old} is deprecated; use {new} instead",
+        DeprecationWarning, stacklevel=3)
 
 
-def bcsr_spmm(
-    a: BCSR, b: jax.Array, *, impl: str = "auto", bn: int = 512, out_dtype=None
-) -> jax.Array:
-    """C[m,n] = A_bcsr @ B. ``impl`` in {auto, kernel, kernel_interpret, ref}."""
-    if impl == "auto":
-        impl = _default_impl()
-    if impl == "ref":
-        return bcsr_ref.bcsr_spmm_ref(a, b, out_dtype=out_dtype)
-    interpret = impl == "kernel_interpret" or jax.default_backend() != "tpu"
-    return run_bcsr_spmm(a, b, bn=bn, out_dtype=out_dtype, interpret=interpret)
+def bcsr_spmm(a: BCSR, b: jax.Array, *, impl: str = "auto", bn=None,
+              out_dtype=None) -> jax.Array:
+    """Deprecated alias of ``repro.ops.spmm`` for BCSR operands."""
+    _warn("bcsr_spmm", "repro.ops.spmm")
+    from repro.ops import spmm
+
+    return spmm(a, b, impl=impl, bn=bn, out_dtype=out_dtype)
 
 
-# ---------------------------------------------------------------------------
-# Differentiable op over static structure
-# ---------------------------------------------------------------------------
+def bcsr_matmul(values, b, structure, impl="auto"):
+    """Deprecated alias of ``repro.ops.bcsr_matmul`` (still differentiable)."""
+    _warn("bcsr_matmul", "repro.ops.bcsr_matmul")
+    from repro.ops import bcsr_matmul as _bcsr_matmul
+
+    return _bcsr_matmul(values, b, structure, impl)
 
 
-@dataclasses.dataclass(frozen=True)
-class BCSRStructure:
-    """Host-side (static) BCSR structure + its transpose, hashable by content.
-
-    Kept out of the pytree on purpose: autodiff and pjit only ever see the
-    block *values*; index arrays are embedded as constants.
-    """
-
-    shape: Tuple[int, int]
-    block: Tuple[int, int]
-    nnz_blocks: int
-    rows: tuple  # tuple[int] for hashability
-    cols: tuple
-    # transposed structure: rows_t sorted ascending, every block-row of A^T
-    # covered (coverage entries have src_t == -1 -> zero block values)
-    rows_t: tuple
-    cols_t: tuple
-    src_t: tuple  # index into values, or -1 for inserted zero coverage block
-
-    @property
-    def nnz_padded(self) -> int:
-        return len(self.rows)
-
-    def rows_a(self):
-        return jnp.asarray(np.asarray(self.rows, np.int32))
-
-    def cols_a(self):
-        return jnp.asarray(np.asarray(self.cols, np.int32))
+_MOVED = {"BCSRStructure", "structure_of", "_as_bcsr"}
 
 
-def structure_of(a: BCSR) -> BCSRStructure:
-    """Extract the static structure (and transpose permutation) of a BCSR."""
-    rows = np.asarray(jax.device_get(a.block_rows), np.int32)
-    cols = np.asarray(jax.device_get(a.block_cols), np.int32)
-    nnz = a.nnz_blocks
-    kb = a.shape[1] // a.block[1]
-    # transposed entries: (row_t=col, col_t=row, src=value index)
-    entries = [(int(cols[i]), int(rows[i]), i) for i in range(nnz)]
-    present = {int(c) for c in cols[:nnz]}
-    # cover empty block-rows of A^T so the kernel zero-fills them (the GPU
-    # kernel's C-initialization analogue; see bcsr_from_mask)
-    entries += [(r, 0, -1) for r in range(kb) if r not in present]
-    entries.sort(key=lambda e: (e[0], e[1]))
-    return BCSRStructure(
-        shape=a.shape,
-        block=a.block,
-        nnz_blocks=nnz,
-        rows=tuple(int(x) for x in rows),
-        cols=tuple(int(x) for x in cols),
-        rows_t=tuple(e[0] for e in entries),
-        cols_t=tuple(e[1] for e in entries),
-        src_t=tuple(e[2] for e in entries),
-    )
+def __getattr__(name):
+    # lazy forwarding avoids an import cycle during repro.ops package init
+    if name in _MOVED:
+        from repro.ops import matmul
 
-
-def _as_bcsr(values: jax.Array, s: BCSRStructure, transposed: bool = False) -> BCSR:
-    if transposed:
-        src = np.asarray(s.src_t, np.int32)
-        take = jnp.asarray(np.maximum(src, 0))
-        vals = values[take].transpose(0, 2, 1)
-        vals = jnp.where((src >= 0)[:, None, None], vals, 0)
-        rows = np.asarray(s.rows_t, np.int32)
-        cols = np.asarray(s.cols_t, np.int32)
-        shape = (s.shape[1], s.shape[0])
-        block = (s.block[1], s.block[0])
-        nnz = len(rows)  # all entries (incl. coverage zeros) are "real"
-    else:
-        vals, shape, block = values, s.shape, s.block
-        rows = np.asarray(s.rows, np.int32)
-        cols = np.asarray(s.cols, np.int32)
-        nnz = s.nnz_blocks
-    mb = shape[0] // block[0]
-    ptr = np.zeros(mb + 1, np.int32)
-    np.add.at(ptr, rows[:nnz] + 1, 1)
-    ptr = np.cumsum(ptr).astype(np.int32)
-    return BCSR(
-        blocks=vals,
-        block_rows=jnp.asarray(rows),
-        block_cols=jnp.asarray(cols),
-        block_row_ptr=jnp.asarray(ptr),
-        shape=shape,
-        block=block,
-        nnz_blocks=nnz,
-    )
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def bcsr_matmul(
-    values: jax.Array, b: jax.Array, structure: BCSRStructure, impl: str = "auto"
-) -> jax.Array:
-    """Differentiable C = A_bcsr(values; structure) @ B."""
-    return bcsr_spmm(_as_bcsr(values, structure), b, impl=impl)
-
-
-def _fwd(values, b, structure, impl):
-    return bcsr_matmul(values, b, structure, impl), (values, b)
-
-
-def _bwd(structure, impl, res, dc):
-    values, b = res
-    dc = dc.astype(jnp.float32)
-    # dB = A^T @ dC  (transposed-structure SpMM; paper's format is closed
-    # under transposition given the static permutation)
-    at = _as_bcsr(values.astype(jnp.float32), structure, transposed=True)
-    db = bcsr_spmm(at, dc, impl="ref" if impl == "ref" else impl).astype(b.dtype)
-    # dvalues = SDDMM(dC, B) sampled at the stored blocks
-    from repro.kernels.sddmm.ops import sddmm
-
-    dvals = sddmm(dc, b.astype(jnp.float32), _as_bcsr(values, structure), impl=impl)
-    return dvals.astype(values.dtype), db
-
-
-bcsr_matmul.defvjp(_fwd, _bwd)
+        return getattr(matmul, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,69 +1,45 @@
-"""Dispatcher for block-sparse attention: CSR-encode the block mask, pad,
-call the kernel (or the dense-masked reference)."""
+"""DEPRECATED: thin shims forwarding to the unified ``repro.ops`` API.
+
+``block_sparse_attention`` is now ``repro.ops.sparse_attention``;
+``csr_encode_block_mask`` lives in ``repro.ops`` as well.
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
 
-from repro.kernels.block_attn.kernel import block_sparse_attention_kernel
-from repro.kernels.block_attn.ref import block_sparse_attention_ref
+import jax
+import numpy as np
 
 __all__ = ["block_sparse_attention", "csr_encode_block_mask"]
 
 
 def csr_encode_block_mask(block_mask: np.ndarray):
-    """[H, nqb, nkb] bool -> (ptr [H*nqb+1], kcols [total], max_active)."""
-    bm = np.asarray(block_mask, bool)
-    h, nqb, nkb = bm.shape
-    counts = bm.sum(axis=2).reshape(-1)
-    ptr = np.zeros(h * nqb + 1, np.int32)
-    ptr[1:] = np.cumsum(counts)
-    kcols = np.nonzero(bm.reshape(h * nqb, nkb))[1].astype(np.int32)
-    if len(kcols) == 0:
-        kcols = np.zeros(1, np.int32)
-    max_active = int(counts.max()) if counts.size else 1
-    return ptr, kcols, max(max_active, 1)
+    """Deprecated alias of ``repro.ops.csr_encode_block_mask``."""
+    from repro.ops import csr_encode_block_mask as _enc
+
+    return _enc(block_mask)
 
 
 def block_sparse_attention(
-    q: jax.Array,  # [B, H, S, D]
-    k: jax.Array,  # [B, KVH, S, D]
-    v: jax.Array,  # [B, KVH, S, D]
-    block_mask: np.ndarray,  # [H, nqb, nkb] bool (host-side / static)
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_mask: np.ndarray,
     *,
     block_q: int = 128,
     block_k: int = 128,
     causal: bool = True,
-    scale: float | None = None,
+    scale=None,
     impl: str = "auto",
 ) -> jax.Array:
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        return block_sparse_attention_ref(
-            q, k, v, block_mask, block_q=block_q, block_k=block_k,
-            causal=causal, scale=scale,
-        )
-    interpret = impl == "kernel_interpret" or jax.default_backend() != "tpu"
-    b, h, s, d = q.shape
-    kvh = k.shape[1]
-    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
-    ptr, kcols, max_active = csr_encode_block_mask(block_mask)
-    out = block_sparse_attention_kernel(
-        jnp.asarray(ptr),
-        jnp.asarray(kcols),
-        q.reshape(b * h, s, d),
-        k.reshape(b * kvh, s, d),
-        v.reshape(b * kvh, s, d),
-        heads=h,
-        kv_heads=kvh,
-        block_q=block_q,
-        block_k=block_k,
-        max_active=max_active,
-        causal=causal,
-        scale=scale,
-        interpret=interpret,
-    )
-    return out.reshape(b, h, s, d)
+    """Deprecated alias of ``repro.ops.sparse_attention``."""
+    warnings.warn(
+        "repro.kernels.block_attn.ops.block_sparse_attention is deprecated; "
+        "use repro.ops.sparse_attention instead", DeprecationWarning,
+        stacklevel=2)
+    from repro.ops import sparse_attention
+
+    return sparse_attention(q, k, v, block_mask, block_q=block_q,
+                            block_k=block_k, causal=causal, scale=scale,
+                            impl=impl)

@@ -1,0 +1,12 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+kernels import the alias from here so both names work.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
     del rows_ref, cols_ref
@@ -74,7 +76,7 @@ def sddmm_kernel(
             scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((nnz_p, bm, bk), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,13 +1,12 @@
-"""Dispatcher for the SDDMM op (kernel vs reference)."""
+"""DEPRECATED: thin shim forwarding to the unified ``repro.ops`` API."""
 
 from __future__ import annotations
 
+import warnings
+
 import jax
-import jax.numpy as jnp
 
 from repro.core.formats import BCSR
-from repro.kernels.sddmm.kernel import sddmm_kernel
-from repro.kernels.sddmm.ref import sddmm_ref
 
 __all__ = ["sddmm"]
 
@@ -18,28 +17,13 @@ def sddmm(
     a_struct: BCSR,
     *,
     impl: str = "auto",
-    bn: int = 512,
+    bn=None,
     out_dtype=None,
 ) -> jax.Array:
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        return sddmm_ref(dc, b, a_struct, out_dtype=out_dtype)
-    interpret = impl == "kernel_interpret" or jax.default_backend() != "tpu"
-    n = dc.shape[1]
-    bn_eff = min(bn, n) if n >= 128 else n
-    pad = -n % bn_eff
-    if pad:
-        dc = jnp.pad(dc, ((0, 0), (0, pad)))
-        b = jnp.pad(b, ((0, 0), (0, pad)))
-    return sddmm_kernel(
-        a_struct.block_rows,
-        a_struct.block_cols,
-        dc,
-        b,
-        block=a_struct.block,
-        nnz=a_struct.nnz_blocks,
-        bn=bn_eff,
-        out_dtype=out_dtype,
-        interpret=interpret,
-    )
+    """Deprecated alias of ``repro.ops.sddmm``."""
+    warnings.warn(
+        "repro.kernels.sddmm.ops.sddmm is deprecated; use repro.ops.sddmm "
+        "instead", DeprecationWarning, stacklevel=2)
+    from repro.ops import sddmm as _sddmm
+
+    return _sddmm(dc, b, a_struct, impl=impl, bn=bn, out_dtype=out_dtype)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(
     # scalar prefetch
@@ -248,7 +250,7 @@ def wcsr_spmm_kernel(
             scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((num_tasks, b_row, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

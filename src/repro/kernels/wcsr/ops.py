@@ -1,14 +1,12 @@
-"""Dispatcher + task-splitting wrapper for WCSR SpMM."""
+"""DEPRECATED: thin shim forwarding to the unified ``repro.ops`` API."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
 
-from repro.core.formats import WCSR, make_wcsr_tasks
-from repro.kernels.wcsr.kernel import wcsr_spmm_kernel
-from repro.kernels.wcsr.ref import wcsr_spmm_ref
+import jax
+
+from repro.core.formats import WCSR
 
 __all__ = ["wcsr_spmm"]
 
@@ -18,46 +16,16 @@ def wcsr_spmm(
     b: jax.Array,
     *,
     impl: str = "auto",
-    bn: int = 256,
+    bn=None,
     chunks_per_task: int = 8,
     out_dtype=None,
     pipeline_gather: bool = False,
 ) -> jax.Array:
-    """C = A_wcsr @ B with window splitting + deterministic combine.
+    """Deprecated alias of ``repro.ops.spmm`` for WCSR operands."""
+    warnings.warn(
+        "repro.kernels.wcsr.ops.wcsr_spmm is deprecated; use repro.ops.spmm "
+        "instead", DeprecationWarning, stacklevel=2)
+    from repro.ops import spmm
 
-    Note: the kernel path derives the (static) task decomposition from the
-    concrete window pointers, so it must be called outside an enclosing jit;
-    the ``ref`` path is fully traceable.
-    """
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        return wcsr_spmm_ref(a, b, out_dtype=out_dtype)
-    interpret = impl == "kernel_interpret" or jax.default_backend() != "tpu"
-
-    t_win, t_start, t_n = make_wcsr_tasks(a, chunks_per_task)
-    n = b.shape[1]
-    bn_eff = min(bn, n) if n >= 128 else n
-    pad = -n % bn_eff
-    if pad:
-        b = jnp.pad(b, ((0, 0), (0, pad)))
-    partial = wcsr_spmm_kernel(
-        jnp.asarray(t_start),
-        jnp.asarray(t_n),
-        a.col_idx,
-        a.values,
-        b,
-        b_row=a.b_row,
-        b_col=a.b_col,
-        bn=bn_eff,
-        chunks_per_task=chunks_per_task,
-        out_dtype=jnp.float32,
-        interpret=interpret,
-        pipeline_gather=pipeline_gather,
-    )  # [T, b_row, n_padded]
-    # deterministic combine of split-window partials (atomicAdd analogue)
-    out = jax.ops.segment_sum(
-        partial, jnp.asarray(t_win), num_segments=a.num_windows
-    )
-    out = out.reshape(a.shape[0], -1).astype(out_dtype or b.dtype)
-    return out[:, :n] if pad else out
+    return spmm(a, b, impl=impl, bn=bn, chunks_per_task=chunks_per_task,
+                out_dtype=out_dtype, pipeline_gather=pipeline_gather)

@@ -272,7 +272,7 @@ def apply_attention(
     *,
     positions: Optional[jax.Array] = None,
     block_mask: Optional[np.ndarray] = None,
-    attn_impl: str = "ref",
+    attn_impl: Optional[str] = None,
 ) -> jax.Array:
     """Training/prefill self-attention."""
     b, s, _ = x.shape
@@ -285,9 +285,11 @@ def apply_attention(
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if block_mask is not None:
-        from repro.kernels.block_attn.ops import block_sparse_attention
+        # unified sparse-op API: impl=None defers to use_config /
+        # REPRO_SPARSE_IMPL / registry auto-resolution
+        from repro.ops import sparse_attention
 
-        out = block_sparse_attention(
+        out = sparse_attention(
             q.transpose(0, 2, 1, 3),
             k.transpose(0, 2, 1, 3),
             v.transpose(0, 2, 1, 3),

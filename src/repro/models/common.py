@@ -30,8 +30,11 @@ _MESH_CTX = contextvars.ContextVar("repro_mesh_ctx", default=None)
 def mesh_context(mesh, rules: dict):
     """Install (mesh, logical->mesh rules) for ``shard_by`` annotations."""
     token = _MESH_CTX.set((mesh, dict(rules)))
+    # jax.set_mesh is recent; older jax spells the ambient-mesh context as
+    # the Mesh object itself (enters the same axis environment).
+    set_mesh = getattr(jax, "set_mesh", None)
     try:
-        with jax.set_mesh(mesh):
+        with (set_mesh(mesh) if set_mesh is not None else mesh):
             yield
     finally:
         _MESH_CTX.reset(token)

@@ -26,26 +26,8 @@ import numpy as np
 
 from repro.core.sparsify import random_block_mask
 from repro.models.common import activation, current_mesh_rules, dense_init, shard_by
-
-# ---------------------------------------------------------------------------
-# Local (per-shard) sharded-BCSR primitive
-# ---------------------------------------------------------------------------
-
-
-def local_bcsr_matmul_t(values, rows, cols, x, mb: int):
-    """y^T [mb*bm, T] = W_local @ x^T for one shard's blocks.
-
-    values: [nnz, bm, bk]; rows/cols: [nnz] i32; x: [T, in] with in = kb*bk.
-    """
-    nnz, bm, bk = values.shape
-    t = x.shape[0]
-    xt = x.T.reshape(-1, bk, t)  # [kb, bk, T]
-    tiles = xt[cols]  # [nnz, bk, T]
-    part = jnp.einsum(
-        "nij,njt->nit", values, tiles, preferred_element_type=jnp.float32
-    )
-    y = jax.ops.segment_sum(part, rows, num_segments=mb)  # [mb, bm, T]
-    return y.reshape(mb * bm, t)
+# the per-shard runtime-index primitive now lives in the unified ops layer
+from repro.ops import local_bcsr_matmul_t  # noqa: F401  (re-exported for moe)
 
 
 def make_balanced_sparse(

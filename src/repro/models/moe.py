@@ -32,8 +32,10 @@ import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.models.common import current_mesh_rules, dense_init, shard_by
-from repro.models.ffn import local_bcsr_matmul_t, make_balanced_sparse
+from repro.models.ffn import make_balanced_sparse
+from repro.ops import local_bcsr_matmul_t
 
 # ---------------------------------------------------------------------------
 # Params
@@ -199,7 +201,7 @@ def _moe_shard(router_w, expert_p, x_loc, *, cfg, model_axis: Optional[str],
     ep = cfg.expert_partition == "expert"
     if ep:
         if model_axis is not None:
-            n_shards = jax.lax.axis_size(model_axis)
+            n_shards = axis_size(model_axis)
             midx = jax.lax.axis_index(model_axis)
         else:
             n_shards, midx = 1, 0
@@ -208,7 +210,7 @@ def _moe_shard(router_w, expert_p, x_loc, *, cfg, model_axis: Optional[str],
         if da is not None:
             n_shards = 1
             for a in da:
-                n_shards *= jax.lax.axis_size(a)
+                n_shards *= axis_size(a)
             midx = jax.lax.axis_index(da)
         else:
             n_shards, midx = 1, 0
@@ -261,7 +263,7 @@ def _moe_shard(router_w, expert_p, x_loc, *, cfg, model_axis: Optional[str],
         # back to this shard's tokens
         n_d = 1
         for a in da:
-            n_d *= jax.lax.axis_size(a)
+            n_d *= axis_size(a)
         b_loc = b // n_d
         y2 = jax.lax.dynamic_slice_in_dim(
             y2.reshape(b, s, d), midx * b_loc, b_loc, axis=0)
@@ -339,7 +341,7 @@ def apply_moe(params, x, cfg):
     in_specs = (P(None, None), _param_specs(cfg, rules), xspec)
     fn = functools.partial(_moe_shard, cfg=cfg, model_axis=model_axis,
                            data_axis=data_axis)
-    y = jax.shard_map(
+    y = shard_map(
         fn, mesh=mesh, in_specs=in_specs, out_specs=xspec, check_vma=False
     )(router_w, expert_p, x)
     return shard_by(y, "batch", "seq", "embed"), aux

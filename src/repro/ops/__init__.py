@@ -1,0 +1,50 @@
+"""``repro.ops`` — the unified public API for all sparse ops.
+
+One polymorphic entry point per op family, with registry-based backend
+dispatch, ambient execution config, and §IV-C auto-tiling:
+
+* ``spmm(a, b)`` — SpMM for any registered sparse format (BCSR, WCSR).
+* ``sddmm(dc, b, a_struct)`` — sampled dense-dense matmul (training bwd).
+* ``sparse_attention(q, k, v, block_mask)`` — block-sparse prefill attention.
+* ``bcsr_matmul(values, b, structure)`` — differentiable SpMM over static
+  structure (``custom_vjp``: SDDMM + transposed SpMM backward).
+
+Backends flip globally without touching call sites::
+
+    with repro.ops.use_config(impl="kernel_interpret"):
+        y = repro.ops.spmm(a, b)
+
+    REPRO_SPARSE_IMPL=ref python serve.py   # env-var flip
+
+Tile widths default to ``bn="auto"`` (paper §IV-C selection), memoized in
+a per-process tuning cache keyed by (op, format, shape, dtype, impl).
+"""
+
+from repro.ops.attention import csr_encode_block_mask, sparse_attention
+from repro.ops.config import (ENV_IMPL_VAR, OpConfig, current_config,
+                              resolve_interpret, resolved_config, use_config)
+from repro.ops.matmul import (BCSRStructure, bcsr_matmul,
+                              local_bcsr_matmul_t, structure_of)
+from repro.ops.registry import (available_backends, register_backend,
+                                register_format, registered_backends,
+                                resolve_backend, resolve_format)
+from repro.ops.sddmm import sddmm
+from repro.ops.spmm import spmm
+from repro.ops.tiling import (auto_bn, clear_tuning_cache, resolve_bn,
+                              tuning_cache_info)
+
+__all__ = [
+    # ops
+    "spmm", "sddmm", "sparse_attention", "bcsr_matmul",
+    "local_bcsr_matmul_t", "csr_encode_block_mask",
+    # structure
+    "BCSRStructure", "structure_of",
+    # config
+    "OpConfig", "use_config", "current_config", "resolved_config",
+    "ENV_IMPL_VAR",
+    # registry
+    "register_backend", "register_format", "resolve_backend",
+    "resolve_format", "available_backends", "registered_backends",
+    # tiling
+    "auto_bn", "resolve_bn", "tuning_cache_info", "clear_tuning_cache",
+]

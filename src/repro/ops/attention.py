@@ -1,0 +1,100 @@
+"""Block-sparse attention under the unified API (paper §IV-D).
+
+``sparse_attention(q, k, v, block_mask)`` CSR-encodes the host-side block
+mask for scalar prefetch and dispatches to the Pallas kernel or the
+dense-masked reference through the same registry/config machinery as
+``spmm``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_attn.kernel import block_sparse_attention_kernel
+from repro.kernels.block_attn.ref import block_sparse_attention_ref
+from repro.ops.config import (OpConfig, resolve_interpret,
+                              resolved_config)
+from repro.ops.registry import on_tpu, register_backend, resolve_backend
+
+__all__ = ["sparse_attention", "csr_encode_block_mask"]
+
+
+def csr_encode_block_mask(block_mask: np.ndarray):
+    """[H, nqb, nkb] bool -> (ptr [H*nqb+1], kcols [total], max_active)."""
+    bm = np.asarray(block_mask, bool)
+    h, nqb, nkb = bm.shape
+    counts = bm.sum(axis=2).reshape(-1)
+    ptr = np.zeros(h * nqb + 1, np.int32)
+    ptr[1:] = np.cumsum(counts)
+    kcols = np.nonzero(bm.reshape(h * nqb, nkb))[1].astype(np.int32)
+    if len(kcols) == 0:
+        kcols = np.zeros(1, np.int32)
+    max_active = int(counts.max()) if counts.size else 1
+    return ptr, kcols, max(max_active, 1)
+
+
+def sparse_attention(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, KVH, S, D]
+    v: jax.Array,  # [B, KVH, S, D]
+    block_mask: np.ndarray,  # [H, nqb, nkb] bool (host-side / static)
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    causal: bool = True,
+    scale=None,
+    impl=None,
+    interpret=None,
+) -> jax.Array:
+    """Block-sparse flash attention over a static per-head block mask."""
+    cfg = resolved_config(impl=impl, interpret=interpret)
+    backend = resolve_backend("sparse_attention", cfg.impl)
+    return backend.fn(q, k, v, block_mask, cfg, block_q=block_q,
+                      block_k=block_k, causal=causal, scale=scale)
+
+
+
+@register_backend("sparse_attention", "ref", priority=50)
+def _attn_ref(q, k, v, block_mask, cfg: OpConfig, *, block_q, block_k,
+              causal, scale):
+    return block_sparse_attention_ref(
+        q, k, v, block_mask, block_q=block_q, block_k=block_k, causal=causal,
+        scale=scale)
+
+
+def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
+                 scale):
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    ptr, kcols, max_active = csr_encode_block_mask(block_mask)
+    out = block_sparse_attention_kernel(
+        jnp.asarray(ptr),
+        jnp.asarray(kcols),
+        q.reshape(b * h, s, d),
+        k.reshape(b * kvh, s, d),
+        v.reshape(b * kvh, s, d),
+        heads=h,
+        kv_heads=kvh,
+        block_q=block_q,
+        block_k=block_k,
+        max_active=max_active,
+        causal=causal,
+        scale=scale,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, s, d)
+
+
+@register_backend("sparse_attention", "kernel", available=on_tpu,
+                  priority=100)
+def _attn_kernel(q, k, v, block_mask, cfg: OpConfig, **kw):
+    return _attn_pallas(q, k, v, block_mask, resolve_interpret(cfg, not on_tpu()),
+                        **kw)
+
+
+@register_backend("sparse_attention", "kernel_interpret", priority=10)
+def _attn_kernel_interpret(q, k, v, block_mask, cfg: OpConfig, **kw):
+    return _attn_pallas(q, k, v, block_mask, resolve_interpret(cfg, True), **kw)

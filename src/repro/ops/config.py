@@ -1,0 +1,111 @@
+"""Execution configuration for the unified sparse-op API.
+
+``OpConfig`` is a frozen bag of execution knobs shared by every op in
+``repro.ops`` (impl, tile width, output dtype, task chunking, interpret
+mode). Fields left as ``None`` mean "inherit from the next layer down".
+
+Resolution order, highest precedence first:
+
+1. explicit keyword arguments at the call site (``spmm(a, b, impl="ref")``),
+2. the innermost active ``use_config(...)`` context, then outer contexts,
+3. the ``REPRO_SPARSE_IMPL`` environment variable (impl only — the global
+   flip-switch for benchmarks/serving; read at op-call time),
+4. package defaults (``impl=None`` -> registry auto-resolution,
+   ``bn="auto"`` -> §IV-C tile selection, ``chunks_per_task=8``).
+
+Configs are resolved when an op *traces*: flipping a config inside an
+already-compiled ``jax.jit`` cache entry does not retrace it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import os
+from typing import Any, Optional, Union
+
+__all__ = ["OpConfig", "use_config", "current_config", "resolved_config",
+           "ENV_IMPL_VAR"]
+
+ENV_IMPL_VAR = "REPRO_SPARSE_IMPL"
+
+
+@dataclasses.dataclass(frozen=True)
+class OpConfig:
+    """Execution knobs for ``repro.ops``. ``None`` fields inherit."""
+
+    impl: Optional[str] = None  # backend name, or None/"auto" for registry pick
+    bn: Union[int, str, None] = None  # output-tile width, or "auto" (§IV-C)
+    out_dtype: Any = None
+    chunks_per_task: Optional[int] = None  # WCSR task splitting (§III-C)
+    interpret: Optional[bool] = None  # force Pallas interpret mode
+
+    def merged_under(self, override: "OpConfig") -> "OpConfig":
+        """Layer ``override`` on top of self: non-None override fields win."""
+        return OpConfig(**{
+            f.name: (ov if ov is not None else getattr(self, f.name))
+            for f in dataclasses.fields(self)
+            for ov in [getattr(override, f.name)]
+        })
+
+
+_DEFAULTS = OpConfig(impl=None, bn="auto", out_dtype=None,
+                     chunks_per_task=8, interpret=None)
+
+_STACK: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_ops_config_stack", default=())
+
+
+@contextlib.contextmanager
+def use_config(config: Optional[OpConfig] = None, **overrides):
+    """Push an ``OpConfig`` for the dynamic extent of the ``with`` block.
+
+    Accepts either a ready-made ``OpConfig`` or field keywords::
+
+        with use_config(impl="kernel_interpret", bn=256):
+            y = repro.ops.spmm(a, b)   # no call-site changes needed
+
+    Contexts nest; inner non-None fields shadow outer ones.
+    """
+    if config is not None and overrides:
+        raise TypeError("pass either an OpConfig or field keywords, not both")
+    cfg = config if config is not None else OpConfig(**overrides)
+    token = _STACK.set(_STACK.get() + (cfg,))
+    try:
+        yield cfg
+    finally:
+        _STACK.reset(token)
+
+
+def _env_config() -> OpConfig:
+    impl = os.environ.get(ENV_IMPL_VAR)
+    return OpConfig(impl=impl) if impl else OpConfig()
+
+
+def current_config() -> OpConfig:
+    """The fully-layered config visible right now (defaults -> env -> contexts)."""
+    cfg = _DEFAULTS.merged_under(_env_config())
+    for layer in _STACK.get():
+        cfg = cfg.merged_under(layer)
+    return cfg
+
+
+def resolved_config(**call_kwargs) -> OpConfig:
+    """``current_config()`` with call-site keywords layered on top."""
+    known = {f.name for f in dataclasses.fields(OpConfig)}
+    unknown = set(call_kwargs) - known
+    if unknown:
+        raise TypeError(f"unknown OpConfig fields: {sorted(unknown)}")
+    # an explicit impl="auto" means "resolve automatically", i.e. it must not
+    # shadow the env var / contexts the way a concrete backend name does
+    # (legacy shims forward their old impl="auto" default here)
+    if call_kwargs.get("impl") == "auto":
+        call_kwargs["impl"] = None
+    return current_config().merged_under(OpConfig(**call_kwargs))
+
+
+def resolve_interpret(cfg: OpConfig, default: bool) -> bool:
+    """Backend helper: an explicit ``interpret`` config wins over the
+    backend's own default (interpret off on TPU, on elsewhere)."""
+    return default if cfg.interpret is None else cfg.interpret

@@ -1,0 +1,171 @@
+"""Differentiable sparse matmul over static BCSR structure.
+
+The training-side op of the unified API: ``bcsr_matmul(values, b,
+structure)`` treats the sparse *structure* (block indices) as static
+host-side metadata and the block *values* as a differentiable parameter.
+Backward computes ``dB = A^T @ dC`` (transposed-structure SpMM) and
+``dvalues = SDDMM(dC, B)`` sampled at the stored blocks — both routed
+through ``repro.ops`` so ``use_config`` / ``REPRO_SPARSE_IMPL`` apply.
+
+Also hosts ``local_bcsr_matmul_t``, the runtime-index shard-local
+primitive the SPMD model zoo (``models.ffn`` / ``models.moe``) vmaps over
+TP shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BCSR
+
+__all__ = ["BCSRStructure", "structure_of", "bcsr_matmul",
+           "local_bcsr_matmul_t"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BCSRStructure:
+    """Host-side (static) BCSR structure + its transpose, hashable by content.
+
+    Kept out of the pytree on purpose: autodiff and pjit only ever see the
+    block *values*; index arrays are embedded as constants.
+    """
+
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+    nnz_blocks: int
+    rows: tuple  # tuple[int] for hashability
+    cols: tuple
+    # transposed structure: rows_t sorted ascending, every block-row of A^T
+    # covered (coverage entries have src_t == -1 -> zero block values)
+    rows_t: tuple
+    cols_t: tuple
+    src_t: tuple  # index into values, or -1 for inserted zero coverage block
+
+    @property
+    def nnz_padded(self) -> int:
+        return len(self.rows)
+
+    def rows_a(self):
+        return jnp.asarray(np.asarray(self.rows, np.int32))
+
+    def cols_a(self):
+        return jnp.asarray(np.asarray(self.cols, np.int32))
+
+
+def structure_of(a: BCSR) -> BCSRStructure:
+    """Extract the static structure (and transpose permutation) of a BCSR."""
+    rows = np.asarray(jax.device_get(a.block_rows), np.int32)
+    cols = np.asarray(jax.device_get(a.block_cols), np.int32)
+    nnz = a.nnz_blocks
+    kb = a.shape[1] // a.block[1]
+    # transposed entries: (row_t=col, col_t=row, src=value index)
+    entries = [(int(cols[i]), int(rows[i]), i) for i in range(nnz)]
+    present = {int(c) for c in cols[:nnz]}
+    # cover empty block-rows of A^T so the kernel zero-fills them (the GPU
+    # kernel's C-initialization analogue; see bcsr_from_mask)
+    entries += [(r, 0, -1) for r in range(kb) if r not in present]
+    entries.sort(key=lambda e: (e[0], e[1]))
+    return BCSRStructure(
+        shape=a.shape,
+        block=a.block,
+        nnz_blocks=nnz,
+        rows=tuple(int(x) for x in rows),
+        cols=tuple(int(x) for x in cols),
+        rows_t=tuple(e[0] for e in entries),
+        cols_t=tuple(e[1] for e in entries),
+        src_t=tuple(e[2] for e in entries),
+    )
+
+
+def _as_bcsr(values: jax.Array, s: BCSRStructure, transposed: bool = False) -> BCSR:
+    if transposed:
+        src = np.asarray(s.src_t, np.int32)
+        take = jnp.asarray(np.maximum(src, 0))
+        vals = values[take].transpose(0, 2, 1)
+        vals = jnp.where((src >= 0)[:, None, None], vals, 0)
+        rows = np.asarray(s.rows_t, np.int32)
+        cols = np.asarray(s.cols_t, np.int32)
+        shape = (s.shape[1], s.shape[0])
+        block = (s.block[1], s.block[0])
+        nnz = len(rows)  # all entries (incl. coverage zeros) are "real"
+    else:
+        vals, shape, block = values, s.shape, s.block
+        rows = np.asarray(s.rows, np.int32)
+        cols = np.asarray(s.cols, np.int32)
+        nnz = s.nnz_blocks
+    mb = shape[0] // block[0]
+    ptr = np.zeros(mb + 1, np.int32)
+    np.add.at(ptr, rows[:nnz] + 1, 1)
+    ptr = np.cumsum(ptr).astype(np.int32)
+    return BCSR(
+        blocks=vals,
+        block_rows=jnp.asarray(rows),
+        block_cols=jnp.asarray(cols),
+        block_row_ptr=jnp.asarray(ptr),
+        shape=shape,
+        block=block,
+        nnz_blocks=nnz,
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def bcsr_matmul(
+    values: jax.Array, b: jax.Array, structure: BCSRStructure, impl=None
+) -> jax.Array:
+    """Differentiable C = A_bcsr(values; structure) @ B."""
+    from repro.ops.spmm import spmm
+
+    return spmm(_as_bcsr(values, structure), b, impl=impl)
+
+
+def _fwd(values, b, structure, impl):
+    return bcsr_matmul(values, b, structure, impl), (values, b)
+
+
+def _bwd(structure, impl, res, dc):
+    from repro.ops.sddmm import sddmm
+    from repro.ops.spmm import spmm
+
+    values, b = res
+    dc = dc.astype(jnp.float32)
+    # dB = A^T @ dC  (transposed-structure SpMM; paper's format is closed
+    # under transposition given the static permutation)
+    at = _as_bcsr(values.astype(jnp.float32), structure, transposed=True)
+    db = spmm(at, dc, impl=impl).astype(b.dtype)
+    # dvalues = SDDMM(dC, B) sampled at the stored blocks
+    dvals = sddmm(dc, b.astype(jnp.float32), _as_bcsr(values, structure),
+                  impl=impl)
+    return dvals.astype(values.dtype), db
+
+
+bcsr_matmul.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local runtime-index primitive (SPMD model zoo)
+# ---------------------------------------------------------------------------
+
+
+def local_bcsr_matmul_t(values, rows, cols, x, mb: int):
+    """y^T [mb*bm, T] = W_local @ x^T for one shard's blocks.
+
+    values: [nnz, bm, bk]; rows/cols: [nnz] i32; x: [T, in] with in = kb*bk.
+    Index arrays are runtime tensors (not static) so callers trace once
+    under shard_map/pjit; the dataflow is the gather + micro-GEMM +
+    segment-sum form of the BCSR kernel.
+    """
+    nnz, bm, bk = values.shape
+    t = x.shape[0]
+    xt = x.T.reshape(-1, bk, t)  # [kb, bk, T]
+    tiles = xt[cols]  # [nnz, bk, T]
+    part = jnp.einsum(
+        "nij,njt->nit", values, tiles, preferred_element_type=jnp.float32
+    )
+    y = jax.ops.segment_sum(part, rows, num_segments=mb)  # [mb, bm, T]
+    return y.reshape(mb * bm, t)

@@ -1,0 +1,124 @@
+"""Backend + format registries for the unified sparse-op API.
+
+Two registries:
+
+* **Backend registry** — per op (``"spmm/bcsr"``, ``"spmm/wcsr"``,
+  ``"sddmm"``, ``"sparse_attention"``), named implementations register with
+  an availability predicate and a priority. ``impl=None``/``"auto"``
+  resolves to the highest-priority available backend; a name resolves to
+  that backend (with a clear error listing what is registered). This
+  replaces the per-dispatcher ``_default_impl()`` copies.
+
+* **Format registry** — maps a sparse-format pytree type (``BCSR``,
+  ``WCSR``, ...) to its op family, making ``spmm(a, b)`` polymorphic in the
+  format of ``a``. New formats plug in with ``register_format``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+__all__ = [
+    "Backend",
+    "register_backend",
+    "resolve_backend",
+    "available_backends",
+    "registered_backends",
+    "register_format",
+    "resolve_format",
+    "on_tpu",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _always() -> bool:
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    fn: Callable
+    is_available: Callable[[], bool]
+    priority: int
+
+
+_BACKENDS: Dict[str, Dict[str, Backend]] = {}
+
+
+def register_backend(op: str, name: str, *,
+                     available: Callable[[], bool] = _always,
+                     priority: int = 0):
+    """Decorator: register ``fn`` as backend ``name`` for ``op``."""
+
+    def deco(fn):
+        _BACKENDS.setdefault(op, {})[name] = Backend(name, fn, available,
+                                                     priority)
+        return fn
+
+    return deco
+
+
+def resolve_backend(op: str, impl: Optional[str] = None) -> Backend:
+    """Pick a backend: by name, or highest-priority available for auto."""
+    table = _BACKENDS.get(op)
+    if not table:
+        raise KeyError(f"no backends registered for op {op!r}")
+    if impl is None or impl == "auto":
+        avail = [b for b in table.values() if b.is_available()]
+        if not avail:
+            raise RuntimeError(
+                f"no available backend for op {op!r} on "
+                f"jax backend {jax.default_backend()!r}; registered: "
+                f"{sorted(table)}")
+        return max(avail, key=lambda b: b.priority)
+    try:
+        return table[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown impl {impl!r} for op {op!r}; registered backends: "
+            f"{sorted(table)}") from None
+
+
+def available_backends(op: str) -> List[str]:
+    """Names of currently-available backends, best first."""
+    table = _BACKENDS.get(op, {})
+    avail = [b for b in table.values() if b.is_available()]
+    return [b.name for b in sorted(avail, key=lambda b: -b.priority)]
+
+
+def registered_backends(op: str) -> List[str]:
+    return sorted(_BACKENDS.get(op, {}))
+
+
+# ---------------------------------------------------------------------------
+# Format dispatch (spmm polymorphism)
+# ---------------------------------------------------------------------------
+
+_FORMATS: Dict[type, str] = {}
+
+
+def register_format(fmt_type: type, op: str) -> None:
+    """Route ``spmm`` calls whose sparse operand is ``fmt_type`` to ``op``."""
+    _FORMATS[fmt_type] = op
+
+
+def resolve_format(a) -> str:
+    """Op family for a sparse operand, by (exact or subclass) type."""
+    op = _FORMATS.get(type(a))
+    if op is None:
+        for t, name in _FORMATS.items():
+            if isinstance(a, t):
+                op = name
+                break
+    if op is None:
+        raise TypeError(
+            f"spmm: unsupported sparse format {type(a).__name__}; "
+            f"registered formats: {[t.__name__ for t in _FORMATS]}")
+    return op

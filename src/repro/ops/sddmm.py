@@ -1,0 +1,64 @@
+"""SDDMM under the unified API: sample ``dC @ B^T`` at stored BCSR blocks.
+
+The backward-pass half of the paper's training story (§III): the gradient
+of the block values is a sampled dense-dense product evaluated only at the
+stored block positions.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.formats import BCSR
+from repro.kernels.sddmm.kernel import sddmm_kernel
+from repro.kernels.sddmm.ref import sddmm_ref
+from repro.ops.config import (OpConfig, resolve_interpret,
+                              resolved_config)
+from repro.ops.registry import on_tpu, register_backend, resolve_backend
+from repro.ops.tiling import pad_cols, resolve_bn
+
+__all__ = ["sddmm"]
+
+
+def sddmm(dc: jax.Array, b: jax.Array, a_struct: BCSR, *, impl=None, bn=None,
+          out_dtype=None, interpret=None) -> jax.Array:
+    """``dvalues[nnz, bm, bk] = (dC @ B^T)`` sampled at ``a_struct``'s blocks."""
+    cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
+                          interpret=interpret)
+    backend = resolve_backend("sddmm", cfg.impl)
+    return backend.fn(dc, b, a_struct, cfg)
+
+
+
+@register_backend("sddmm", "ref", priority=50)
+def _sddmm_ref(dc, b, a_struct: BCSR, cfg: OpConfig):
+    return sddmm_ref(dc, b, a_struct, out_dtype=cfg.out_dtype)
+
+
+def _sddmm_pallas(dc, b, a_struct: BCSR, cfg: OpConfig, interpret: bool):
+    bm, bk = a_struct.block
+    n = dc.shape[1]
+    bn = resolve_bn(cfg.bn, n, bm, bk, a_struct.dtype, op="sddmm", fmt="bcsr",
+                    shape=a_struct.shape, impl="kernel")
+    (dc, b), bn_eff, _ = pad_cols([dc, b], n, bn)
+    return sddmm_kernel(
+        a_struct.block_rows,
+        a_struct.block_cols,
+        dc,
+        b,
+        block=a_struct.block,
+        nnz=a_struct.nnz_blocks,
+        bn=bn_eff,
+        out_dtype=cfg.out_dtype,
+        interpret=interpret,
+    )
+
+
+@register_backend("sddmm", "kernel", available=on_tpu, priority=100)
+def _sddmm_kernel(dc, b, a_struct: BCSR, cfg: OpConfig):
+    return _sddmm_pallas(dc, b, a_struct, cfg, resolve_interpret(cfg, not on_tpu()))
+
+
+@register_backend("sddmm", "kernel_interpret", priority=10)
+def _sddmm_kernel_interpret(dc, b, a_struct: BCSR, cfg: OpConfig):
+    return _sddmm_pallas(dc, b, a_struct, cfg, resolve_interpret(cfg, True))

@@ -1,0 +1,146 @@
+"""Format-polymorphic SpMM: ``spmm(a, b)`` for BCSR and WCSR operands.
+
+The single public entry point for the paper's two co-designed kernels
+(§III): ``BCSR`` operands route to the block-streaming kernel, ``WCSR``
+operands to the window-gather kernel, each with ``kernel`` /
+``kernel_interpret`` / ``ref`` backends in the registry. Tile width
+defaults to ``bn="auto"`` (§IV-C selection, tuning-cached per shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BCSR, WCSR, make_wcsr_tasks
+from repro.kernels.bcsr.kernel import bcsr_spmm_kernel
+from repro.kernels.bcsr.ref import bcsr_spmm_ref
+from repro.kernels.wcsr.kernel import wcsr_spmm_kernel
+from repro.kernels.wcsr.ref import wcsr_spmm_ref
+from repro.ops.config import (OpConfig, resolve_interpret,
+                              resolved_config)
+from repro.ops.registry import (on_tpu, register_backend, register_format,
+                                resolve_backend, resolve_format)
+from repro.ops.tiling import pad_cols, resolve_bn, unpad_cols
+
+__all__ = ["spmm"]
+
+
+def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
+         chunks_per_task=None, interpret=None, **extras) -> jax.Array:
+    """``C[m, n] = A_sparse @ B`` for any registered sparse format of ``a``.
+
+    Keyword arguments override the ambient ``use_config(...)`` /
+    ``REPRO_SPARSE_IMPL`` configuration for this call only. ``extras`` are
+    forwarded to the backend (e.g. the WCSR kernel's ``pipeline_gather``).
+    """
+    cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
+                          chunks_per_task=chunks_per_task,
+                          interpret=interpret)
+    op = resolve_format(a)
+    backend = resolve_backend(op, cfg.impl)
+    return backend.fn(a, b, cfg, **extras)
+
+
+register_format(BCSR, "spmm/bcsr")
+register_format(WCSR, "spmm/wcsr")
+
+
+
+# ---------------------------------------------------------------------------
+# BCSR backends
+# ---------------------------------------------------------------------------
+
+
+@register_backend("spmm/bcsr", "ref", priority=50)
+def _bcsr_spmm_ref(a: BCSR, b, cfg: OpConfig):
+    return bcsr_spmm_ref(a, b, out_dtype=cfg.out_dtype)
+
+
+def _bcsr_spmm_pallas(a: BCSR, b, cfg: OpConfig, interpret: bool):
+    bm, bk = a.block
+    n = b.shape[1]
+    bn = resolve_bn(cfg.bn, n, bm, bk, a.dtype, op="spmm", fmt="bcsr",
+                    shape=a.shape, impl="kernel")
+    (b,), bn_eff, pad = pad_cols([b], n, bn)
+    out = bcsr_spmm_kernel(
+        a.block_rows,
+        a.block_cols,
+        a.blocks,
+        b,
+        m_blocks=a.shape[0] // bm,
+        block=a.block,
+        bn=bn_eff,
+        out_dtype=cfg.out_dtype,
+        interpret=interpret,
+    )
+    return unpad_cols(out, n, pad)
+
+
+@register_backend("spmm/bcsr", "kernel", available=on_tpu, priority=100)
+def _bcsr_spmm_kernel(a: BCSR, b, cfg: OpConfig):
+    return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()))
+
+
+@register_backend("spmm/bcsr", "kernel_interpret", priority=10)
+def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig):
+    return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True))
+
+
+# ---------------------------------------------------------------------------
+# WCSR backends
+# ---------------------------------------------------------------------------
+
+
+@register_backend("spmm/wcsr", "ref", priority=50)
+def _wcsr_spmm_ref(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False):
+    del pipeline_gather  # kernel-path knob; irrelevant to the jnp reference
+    return wcsr_spmm_ref(a, b, out_dtype=cfg.out_dtype)
+
+
+def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
+                      pipeline_gather: bool = False):
+    if isinstance(a.window_ptr, jax.core.Tracer):
+        raise ValueError(
+            "spmm on WCSR with impl='kernel'/'kernel_interpret' derives its "
+            "static task decomposition from concrete window_ptr values, so "
+            "it cannot run under an enclosing jit/vmap trace. Call it "
+            "outside jit, or use impl='ref' (fully traceable).")
+    chunks_per_task = cfg.chunks_per_task or 8
+    t_win, t_start, t_n = make_wcsr_tasks(a, chunks_per_task)
+    n = b.shape[1]
+    bn = resolve_bn(cfg.bn, n, a.b_row, a.b_col, a.dtype, op="spmm",
+                    fmt="wcsr", shape=a.shape, impl="kernel")
+    (b,), bn_eff, pad = pad_cols([b], n, bn)
+    partial = wcsr_spmm_kernel(
+        jnp.asarray(t_start),
+        jnp.asarray(t_n),
+        a.col_idx,
+        a.values,
+        b,
+        b_row=a.b_row,
+        b_col=a.b_col,
+        bn=bn_eff,
+        chunks_per_task=chunks_per_task,
+        out_dtype=jnp.float32,
+        interpret=interpret,
+        pipeline_gather=pipeline_gather,
+    )  # [T, b_row, n_padded]
+    # deterministic combine of split-window partials (atomicAdd analogue)
+    out = jax.ops.segment_sum(
+        partial, jnp.asarray(t_win), num_segments=a.num_windows)
+    out = out.reshape(a.shape[0], -1).astype(cfg.out_dtype or b.dtype)
+    return unpad_cols(out, n, pad)
+
+
+@register_backend("spmm/wcsr", "kernel", available=on_tpu, priority=100)
+def _wcsr_spmm_kernel(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False):
+    return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
+                             pipeline_gather)
+
+
+@register_backend("spmm/wcsr", "kernel_interpret", priority=10)
+def _wcsr_spmm_kernel_interpret(a: WCSR, b, cfg: OpConfig, *,
+                                pipeline_gather=False):
+    return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True),
+                             pipeline_gather)

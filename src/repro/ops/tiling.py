@@ -1,0 +1,97 @@
+"""Auto-tiling for the unified sparse-op API (paper §IV-C, centralized).
+
+Two pieces the per-kernel dispatchers used to duplicate:
+
+* ``resolve_bn`` / ``auto_bn`` — ``bn="auto"`` routes through
+  ``kernels.tuning.select_bn`` (the paper's tile-width policy), memoized in
+  a per-process tuning cache keyed by (op, format, shape, dtype, impl) so
+  repeated serving shapes skip re-selection.
+
+* ``pad_cols`` / ``unpad_cols`` — the N-padding logic (clamp bn to N for
+  narrow operands, zero-pad N up to a bn multiple, slice the pad back off)
+  previously copy-pasted in the bcsr, wcsr and sddmm dispatchers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tuning import select_bn
+
+__all__ = ["resolve_bn", "auto_bn", "pad_cols", "unpad_cols",
+           "tuning_cache_info", "clear_tuning_cache", "TuningCacheInfo"]
+
+
+@dataclasses.dataclass
+class TuningCacheInfo:
+    hits: int
+    misses: int
+    size: int
+
+
+_CACHE: dict = {}
+_HITS = 0
+_MISSES = 0
+
+
+def clear_tuning_cache() -> None:
+    global _HITS, _MISSES
+    _CACHE.clear()
+    _HITS = 0
+    _MISSES = 0
+
+
+def tuning_cache_info() -> TuningCacheInfo:
+    return TuningCacheInfo(hits=_HITS, misses=_MISSES, size=len(_CACHE))
+
+
+def auto_bn(n: int, bm: int = 128, bk: int = 128, dtype=jnp.bfloat16, *,
+            op: str = "spmm", fmt: str = "", shape: Tuple[int, ...] = (),
+            impl: str = "") -> int:
+    """Cached §IV-C tile selection for one (op, format, shape, dtype, impl)."""
+    global _HITS, _MISSES
+    dtype_bytes = np.dtype(dtype).itemsize
+    key = (op, fmt, tuple(shape) + (int(n),), (bm, bk),
+           str(np.dtype(dtype)), impl or "")
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _HITS += 1
+        return hit
+    _MISSES += 1
+    bn = select_bn(int(n), bm, bk, dtype_bytes)
+    _CACHE[key] = bn
+    return bn
+
+
+def resolve_bn(bn: Union[int, str, None], n: int, bm: int, bk: int, dtype, *,
+               op: str = "spmm", fmt: str = "", shape: Tuple[int, ...] = (),
+               impl: str = "") -> int:
+    """An explicit ``bn`` passes through; ``"auto"``/None selects one."""
+    if bn is None or bn == "auto":
+        return auto_bn(n, bm, bk, dtype, op=op, fmt=fmt, shape=shape,
+                       impl=impl)
+    return int(bn)
+
+
+def pad_cols(arrs, n: int, bn: int):
+    """Zero-pad the last dim of each array from ``n`` up to a ``bn`` multiple.
+
+    Returns ``(padded_arrays, bn_eff, pad)``. ``bn_eff`` clamps ``bn`` to
+    ``n`` for narrow operands (below the 128-lane width the tile is the
+    whole operand) — the rule every dispatcher previously hand-rolled.
+    """
+    arrs = list(arrs)
+    bn_eff = min(bn, n) if n >= 128 else n
+    pad = -n % bn_eff
+    if pad:
+        arrs = [jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) for x in arrs]
+    return arrs, bn_eff, pad
+
+
+def unpad_cols(out, n: int, pad: int):
+    """Slice the N padding back off the last dim."""
+    return out[..., :n] if pad else out

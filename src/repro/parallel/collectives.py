@@ -19,6 +19,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str) -> jax.Array:
     """psum over (inner x outer) via RS(inner) -> AR(outer) -> AG(inner).
@@ -26,7 +28,7 @@ def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str) -> jax.Arr
     Mathematically identical to psum over both axes; the decomposition sends
     only 1/inner_size of the bytes over the outer (inter-pod) links.
     """
-    n_inner = jax.lax.axis_size(inner_axis)
+    n_inner = axis_size(inner_axis)
     lead = x.shape[0]
     if lead % n_inner:
         # fall back for non-dividing shapes

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
+
 
 def gpipe(
     stage_fn: Callable,  # (stage_params, x) -> y   (same shape as x)
@@ -34,7 +36,7 @@ def gpipe(
     """
 
     def sharded(params_stacked, x):
-        s = jax.lax.axis_size(axis)
+        s = axis_size(axis)
         idx = jax.lax.axis_index(axis)
         p_local = jax.tree.map(lambda t: t[0], params_stacked)  # [1, ...] -> local
         m = x.shape[0]
@@ -67,7 +69,7 @@ def gpipe(
         )
         return outs
 
-    return jax.shard_map(
+    return shard_map(
         sharded,
         mesh=mesh,
         # params: stage dim over the pipeline axis; x: [M, mb, ...] with the

@@ -9,12 +9,15 @@ This is the serving-side end-to-end driver for the paper's inference story
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.ops import OpConfig, use_config
 
 
 @dataclasses.dataclass
@@ -28,22 +31,33 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 512,
-                 frontend_inputs: Optional[dict] = None, greedy: bool = True):
+                 frontend_inputs: Optional[dict] = None, greedy: bool = True,
+                 op_config: Optional[OpConfig] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # sparse-op execution config applied while decode steps trace, so a
+        # serving deployment can flip kernel backends engine-wide without
+        # touching the model code (repro.ops.use_config semantics)
+        self.op_config = op_config
         kw = frontend_inputs or {}
         self.cache = model.init_decode_cache(slots, max_len, **kw)
         self.pos = np.zeros(slots, np.int64)  # next position per slot
         self.active: List[Optional[Request]] = [None] * slots
         self.budget = np.zeros(slots, np.int64)
         self.greedy = greedy
-        self._decode = jax.jit(
+        self._decode_jit = jax.jit(
             lambda p, c, tok, pos: model.decode_step(p, c, tok, pos)
         )
         self.last_token = np.zeros(slots, np.int64)
+
+    def _decode(self, p, c, tok, pos):
+        ctx = (use_config(self.op_config) if self.op_config is not None
+               else contextlib.nullcontext())
+        with ctx:
+            return self._decode_jit(p, c, tok, pos)
 
     # -- admission ---------------------------------------------------------
     def try_admit(self, req: Request) -> bool:

@@ -89,6 +89,7 @@ def test_compressed_and_hierarchical_psum():
     _run("""
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.launch.mesh import make_test_mesh
     from repro.parallel.collectives import (
         compressed_psum_bf16, compressed_psum_int8_ef, hierarchical_psum)
@@ -103,7 +104,7 @@ def test_compressed_and_hierarchical_psum():
         q, err = compressed_psum_int8_ef(x, ("pod", "data"))
         return exact, hier, comp, q, err
 
-    out = jax.shard_map(f, mesh=mesh,
+    out = shard_map(f, mesh=mesh,
                         in_specs=P(("pod", "data")),
                         out_specs=(P(("pod", "data")),) * 5,
                         check_vma=False)(x)

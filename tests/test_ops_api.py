@@ -1,0 +1,284 @@
+"""Unified ``repro.ops`` API: format dispatch, config layering, env-var
+precedence, auto-tiling + tuning cache, and deprecation-shim forwarding."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.ops as ops
+from repro.core.formats import BCSR, bcsr_from_dense, wcsr_from_dense
+from repro.kernels.bcsr.ref import bcsr_spmm_ref
+from repro.kernels.sddmm.ref import sddmm_ref
+from repro.kernels.wcsr.ref import wcsr_spmm_ref
+from repro.ops import (OpConfig, auto_bn, clear_tuning_cache, current_config,
+                       sddmm, spmm, tuning_cache_info, use_config)
+
+
+def _mats(rng, m=128, k=128, n=96, density=0.3):
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    a = bcsr_from_dense(d, (32, 32))
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    return d, a, w, b
+
+
+# ---------------------------------------------------------------------------
+# Dispatch by format
+# ---------------------------------------------------------------------------
+
+
+def test_spmm_dispatches_on_bcsr(rng):
+    d, a, _, b = _mats(rng)
+    got = np.asarray(spmm(a, b))
+    np.testing.assert_allclose(got, np.asarray(bcsr_spmm_ref(a, b)),
+                               atol=1e-4)
+    np.testing.assert_allclose(got, d @ np.asarray(b), atol=1e-3)
+
+
+def test_spmm_dispatches_on_wcsr(rng):
+    d, _, w, b = _mats(rng)
+    got = np.asarray(spmm(w, b))
+    np.testing.assert_allclose(got, np.asarray(wcsr_spmm_ref(w, b)),
+                               atol=1e-4)
+    np.testing.assert_allclose(got, d @ np.asarray(b), atol=1e-3)
+
+
+def test_spmm_rejects_unknown_format(rng):
+    with pytest.raises(TypeError, match="unsupported sparse format"):
+        spmm(np.zeros((4, 4)), jnp.zeros((4, 4)))
+
+
+def test_spmm_kernel_interpret_matches_ref_both_formats(rng):
+    _, a, w, b = _mats(rng)
+    for fmt in (a, w):
+        got = np.asarray(spmm(fmt, b, impl="kernel_interpret"))
+        ref = np.asarray(spmm(fmt, b, impl="ref"))
+        np.testing.assert_allclose(got, ref, atol=2e-4)
+
+
+def test_spmm_unknown_impl_lists_backends(rng):
+    _, a, _, b = _mats(rng)
+    with pytest.raises(ValueError, match="registered backends"):
+        spmm(a, b, impl="nonsense")
+
+
+def test_wcsr_kernel_under_jit_raises_clear_error(rng):
+    _, _, w, b = _mats(rng)
+    with pytest.raises(ValueError, match="impl='ref'"):
+        jax.jit(lambda w_, b_: spmm(w_, b_, impl="kernel_interpret"))(w, b)
+    # the traceable ref path works under jit
+    out = jax.jit(lambda w_, b_: spmm(w_, b_, impl="ref"))(w, b)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(wcsr_spmm_ref(w, b)), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Config contexts + env var
+# ---------------------------------------------------------------------------
+
+
+def test_use_config_nesting(monkeypatch):
+    monkeypatch.delenv(ops.ENV_IMPL_VAR, raising=False)
+    assert current_config().impl is None
+    with use_config(impl="ref", bn=128):
+        assert current_config().impl == "ref"
+        assert current_config().bn == 128
+        with use_config(impl="kernel_interpret"):
+            # inner impl shadows, outer bn inherited
+            assert current_config().impl == "kernel_interpret"
+            assert current_config().bn == 128
+        assert current_config().impl == "ref"
+    assert current_config().impl is None
+    assert current_config().bn == "auto"
+
+
+def test_env_var_flips_backend_and_contexts_win(rng, monkeypatch):
+    _, a, _, b = _mats(rng)
+    calls = []
+
+    @ops.register_backend("spmm/bcsr", "probe")
+    def _probe(a_, b_, cfg):
+        calls.append(cfg)
+        return bcsr_spmm_ref(a_, b_, out_dtype=cfg.out_dtype)
+
+    try:
+        monkeypatch.setenv(ops.ENV_IMPL_VAR, "probe")
+        assert current_config().impl == "probe"
+        spmm(a, b)  # zero call-site changes, env picks the backend
+        assert len(calls) == 1
+        # explicit context takes precedence over the env var
+        with use_config(impl="ref"):
+            assert current_config().impl == "ref"
+            spmm(a, b)
+        assert len(calls) == 1
+        # call-site kwarg takes precedence over everything
+        spmm(a, b, impl="ref")
+        assert len(calls) == 1
+    finally:
+        from repro.ops import registry as reg
+        reg._BACKENDS["spmm/bcsr"].pop("probe", None)
+
+
+def test_use_config_flips_backend_without_call_site_changes(rng):
+    _, a, _, b = _mats(rng)
+
+    def call_site():  # knows nothing about impls
+        return spmm(a, b)
+
+    ref = np.asarray(call_site())
+    with use_config(impl="kernel_interpret"):
+        kern = np.asarray(call_site())
+    np.testing.assert_allclose(kern, ref, atol=2e-4)
+
+
+def test_config_rejects_unknown_field():
+    with pytest.raises(TypeError):
+        ops.resolved_config(bogus=1)
+
+
+# ---------------------------------------------------------------------------
+# Auto-tiling + tuning cache
+# ---------------------------------------------------------------------------
+
+
+def test_auto_bn_matches_select_bn():
+    from repro.kernels.tuning import select_bn
+
+    clear_tuning_cache()
+    for n in (128, 256, 384, 1000):
+        assert auto_bn(n, 64, 64) == select_bn(n, 64, 64)
+
+
+def test_auto_bn_cache_keys_on_block_size():
+    clear_tuning_cache()
+    auto_bn(256, 32, 32, op="t", shape=(128, 128))
+    auto_bn(256, 128, 128, op="t", shape=(128, 128))  # same shape, new block
+    assert tuning_cache_info().misses == 2
+
+
+def test_legacy_auto_default_respects_config(rng):
+    """Shim default impl='auto' must not shadow use_config / env."""
+    _, a, _, b = _mats(rng)
+    calls = []
+
+    @ops.register_backend("spmm/bcsr", "probe2")
+    def _probe(a_, b_, cfg):
+        calls.append(1)
+        return bcsr_spmm_ref(a_, b_)
+
+    try:
+        with use_config(impl="probe2"):
+            import warnings
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                from repro.kernels.bcsr.ops import bcsr_spmm
+                bcsr_spmm(a, b)  # legacy entry, impl defaults to "auto"
+        assert calls == [1]
+    finally:
+        from repro.ops import registry as reg
+        reg._BACKENDS["spmm/bcsr"].pop("probe2", None)
+
+
+def test_tuning_cache_hit_miss(rng):
+    _, a, _, b = _mats(rng)
+    clear_tuning_cache()
+    with use_config(impl="kernel_interpret"):
+        spmm(a, b)
+        info1 = tuning_cache_info()
+        spmm(a, b)  # same (op, format, shape, dtype, impl) key
+        info2 = tuning_cache_info()
+        spmm(a, jnp.concatenate([b, b], axis=1))  # new n -> new key
+        info3 = tuning_cache_info()
+    assert info1.misses == 1 and info1.hits == 0
+    assert info2.misses == 1 and info2.hits == 1
+    assert info3.misses == 2
+    assert info3.size == 2
+
+
+def test_auto_bn_default_matches_explicit(rng):
+    _, a, _, b = _mats(rng)
+    auto = np.asarray(spmm(a, b, impl="kernel_interpret"))
+    explicit = np.asarray(spmm(a, b, impl="kernel_interpret", bn=96))
+    np.testing.assert_allclose(auto, explicit, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# sddmm + differentiable matmul under the same roof
+# ---------------------------------------------------------------------------
+
+
+def test_sddmm_matches_ref(rng):
+    _, a, _, b = _mats(rng)
+    dc = jnp.asarray(rng.normal(size=(128, 96)).astype(np.float32))
+    got = np.asarray(sddmm(dc, b, a, impl="kernel_interpret"))
+    np.testing.assert_allclose(got, np.asarray(sddmm_ref(dc, b, a)),
+                               atol=2e-4)
+
+
+def test_bcsr_matmul_grad_respects_config(rng):
+    d, a, _, b = _mats(rng, n=64)
+    s = ops.structure_of(a)
+    vals = a.blocks
+
+    def loss(v):
+        return jnp.sum(ops.bcsr_matmul(v, b, s) ** 2)
+
+    with use_config(impl="ref"):
+        g_ref = jax.grad(loss)(vals)
+    with use_config(impl="kernel_interpret"):
+        g_kern = jax.grad(loss)(vals)
+    np.testing.assert_allclose(np.asarray(g_kern), np.asarray(g_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_old_entry_points_warn_and_forward(rng):
+    d, a, w, b = _mats(rng)
+    from repro.kernels.bcsr.ops import bcsr_spmm
+    from repro.kernels.sddmm.ops import sddmm as old_sddmm
+    from repro.kernels.wcsr.ops import wcsr_spmm
+
+    with pytest.warns(DeprecationWarning):
+        old_b = np.asarray(bcsr_spmm(a, b, impl="kernel_interpret"))
+    np.testing.assert_allclose(
+        old_b, np.asarray(spmm(a, b, impl="kernel_interpret")), atol=1e-6)
+
+    with pytest.warns(DeprecationWarning):
+        old_w = np.asarray(wcsr_spmm(w, b, impl="ref"))
+    np.testing.assert_allclose(old_w, np.asarray(spmm(w, b, impl="ref")),
+                               atol=1e-6)
+
+    dc = jnp.asarray(rng.normal(size=(128, 96)).astype(np.float32))
+    with pytest.warns(DeprecationWarning):
+        old_s = np.asarray(old_sddmm(dc, b, a, impl="ref"))
+    np.testing.assert_allclose(old_s, np.asarray(sddmm(dc, b, a, impl="ref")),
+                               atol=1e-6)
+
+
+def test_old_block_attn_entry_warns_and_forwards(rng):
+    from repro.kernels.block_attn.ops import block_sparse_attention
+
+    B, H, S, D = 1, 2, 128, 16
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))
+    mask = np.tril(np.ones((H, S // 64, S // 64), bool))
+    with pytest.warns(DeprecationWarning):
+        old = np.asarray(block_sparse_attention(
+            q, k, v, mask, block_q=64, block_k=64, impl="ref"))
+    new = np.asarray(ops.sparse_attention(
+        q, k, v, mask, block_q=64, block_k=64, impl="ref"))
+    np.testing.assert_allclose(old, new, atol=1e-6)
+
+
+def test_old_structure_imports_still_work():
+    from repro.kernels.bcsr.ops import BCSRStructure, structure_of
+
+    assert BCSRStructure is ops.BCSRStructure
+    assert structure_of is ops.structure_of
