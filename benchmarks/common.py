@@ -11,11 +11,18 @@ This container is CPU-only, so every row reports BOTH:
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
 
 import numpy as np
 import jax
+
+# CI smoke mode (benchmarks/run.py --smoke): shrink suites/shapes so the
+# harness runs end-to-end in seconds under interpret-mode kernels on CPU —
+# the point is that examples and the benchmark plumbing can't silently rot,
+# not that the numbers mean anything.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 # v5e constants (same as analysis/roofline.py)
 PEAK_MXU = 197e12  # bf16 FLOP/s
@@ -40,6 +47,10 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def time_spmm(a, b, warmup: int = 1, iters: int = 3, **config) -> float:
     """Time ``repro.ops.spmm(a, b)`` jitted, under the ambient op config.
 
+    ``a`` may be a raw format or a ``repro.sparse.SparseTensor`` — the
+    latter carries its pre-extracted structure, so host-side planning (tile
+    selection, WCSR task split) hits the ``make_plan`` cache instead of
+    re-deriving per call: the serving-style amortized measurement.
     ``config`` keywords (impl, bn, ...) apply to this measurement only; with
     none given the registry/auto-tiling defaults are measured — i.e. exactly
     what a caller of the public API gets.

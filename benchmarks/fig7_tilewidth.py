@@ -7,23 +7,23 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import (SUITE, geomean, model_bcsr_time, suite_matrix,
-                               tflops, time_call)
-from repro.core.formats import bcsr_from_dense
+from benchmarks.common import (SMOKE, SUITE, geomean, model_bcsr_time,
+                               suite_matrix, tflops, time_call)
 from repro.kernels.bcsr.kernel import run_bcsr_spmm
 from repro.kernels.tuning import padding_waste, vmem_usage
+from repro.sparse import convert
 
-M = K = 1024
+M = K = 512 if SMOKE else 1024
 N = 1024
 BM = BK = 64
-BNS = (16, 64, 128, 176 * 2, 256, 496, 512, 1024)
+BNS = (64, 256) if SMOKE else (16, 64, 128, 176 * 2, 256, 496, 512, 1024)
 
 
 def run(csv_rows):
     mats = []
-    for i, (kind, density) in enumerate(SUITE[:4]):
+    for i, (kind, density) in enumerate(SUITE[:2] if SMOKE else SUITE[:4]):
         d = suite_matrix(kind, M, K, density, seed=200 + i)
-        mats.append((bcsr_from_dense(d, (BM, BK)), int((d != 0).sum())))
+        mats.append((convert(d, "bcsr", block=(BM, BK)), int((d != 0).sum())))
     best = None
     for bn in BNS:
         if vmem_usage(BM, BK, bn) > 16 * 1024 * 1024:

@@ -16,12 +16,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import HBM_BW, PEAK_MXU, time_call
+from benchmarks.common import HBM_BW, PEAK_MXU, SMOKE, time_call
 from repro.configs import ARCHS, reduced_config
 from repro.core.sparse_attention import local_sink_mask
 from repro.models.registry import build_model
 
-SEQS = (256, 512)
+SEQS = (128,) if SMOKE else (256, 512)
 ATTN_BUDGET = 0.25
 FFN_SPARSITY = 0.9
 

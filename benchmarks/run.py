@@ -1,12 +1,26 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (plus a copy under results/)."""
+Prints ``name,us_per_call,derived`` CSV (plus a copy under results/).
+
+``--smoke`` shrinks every suite/shape (see benchmarks.common.SMOKE) so CI
+can run the whole harness under interpret-mode kernels on CPU:
+
+    REPRO_SPARSE_IMPL=kernel_interpret python benchmarks/run.py --smoke
+"""
 
 import os
+import pathlib
 import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:] if a != "--smoke"]
+    if "--smoke" in sys.argv[1:]:
+        # must be set before the benchmark modules (and their module-level
+        # suite constants) are imported below
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    only = args[0] if args else None
     from benchmarks import (fig7_tilewidth, fig8_prefill, table1_suitesparse,
                             table2_ablation, table3_gateproj)
 

@@ -17,13 +17,14 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import (HBM_BW, PEAK_MXU, geomean, model_bcsr_time,
-                               suite_matrix, tflops, time_spmm)
-from repro.core.formats import bcsr_from_dense, rcm_permutation, wcsr_from_dense
+from benchmarks.common import (HBM_BW, PEAK_MXU, SMOKE, geomean,
+                               model_bcsr_time, suite_matrix, tflops,
+                               time_spmm)
 from repro.ops import auto_bn
+from repro.sparse import SparseTensor, rcm_permutation
 
-M = K = 2048  # scaled-down suite (CPU container)
-NS = (256, 1024)
+M = K = 512 if SMOKE else 2048  # scaled-down suite (CPU container)
+NS = (256,) if SMOKE else (256, 1024)
 N_MEASURE = 256
 B_ROW = 64  # scaled block (full TPU config uses 128; see DESIGN.md)
 DMA_ISSUE_NS = 30.0
@@ -33,6 +34,8 @@ SUITE1 = [
     ("banded", 0.002), ("banded", 0.01), ("banded", 0.03),
     ("powerlaw", 0.002), ("powerlaw", 0.005), ("powerlaw", 0.02),
 ]
+if SMOKE:
+    SUITE1 = SUITE1[:2]
 
 
 def _model_wcsr_time(w, n, bn, overlap_gather: bool = False):
@@ -64,8 +67,10 @@ def run(csv_rows):
         perm = rcm_permutation(d)  # paper's preprocessing step
         d = d[np.ix_(perm, perm)] if d.shape[0] == d.shape[1] else d[perm]
         nnz = int((d != 0).sum())
-        a = bcsr_from_dense(d, (B_ROW, B_ROW))
-        w = wcsr_from_dense(d, b_row=B_ROW, b_col=8)
+        # format-agnostic layer: structure extracted once per matrix, so the
+        # repeated time_spmm calls below plan once (make_plan cache)
+        a = SparseTensor.from_dense(d, "bcsr", block=(B_ROW, B_ROW))
+        w = SparseTensor.from_dense(d, "wcsr", block=(B_ROW, 8))
         mats.append((kind, density, d, nnz, a, w))
 
     for n in NS:
@@ -75,10 +80,11 @@ def run(csv_rows):
             # ops-layer §IV-C auto-tiling (tuning-cached), same policy the
             # public spmm() applies by default
             bn = auto_bn(n, B_ROW, B_ROW, op="table1", shape=(M, K))
-            t_b = model_bcsr_time(a.nnz_blocks, B_ROW, B_ROW, n, bn, k=K)
-            t_bell = model_bcsr_time(_bell_blocks(a), B_ROW, B_ROW, n, bn, k=K)
-            t_w = _model_wcsr_time(w, n, bn)
-            t_wo = _model_wcsr_time(w, n, bn, overlap_gather=True)
+            t_b = model_bcsr_time(a.raw.nnz_blocks, B_ROW, B_ROW, n, bn, k=K)
+            t_bell = model_bcsr_time(_bell_blocks(a.raw), B_ROW, B_ROW, n, bn,
+                                     k=K)
+            t_w = _model_wcsr_time(w.raw, n, bn)
+            t_wo = _model_wcsr_time(w.raw, n, bn, overlap_gather=True)
             t_d = max(2.0 * M * K * n / PEAK_MXU,
                       (M * K + K * n + M * n) * 2 / HBM_BW)
             per_fmt["bcsr"].append(tflops(nnz, n, t_b))

@@ -20,15 +20,17 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import (GRID_STEP_NS, SUITE, geomean, model_bcsr_time,
-                               suite_matrix, tflops, time_call)
-from repro.core.formats import bcsr_from_dense
+from benchmarks.common import (GRID_STEP_NS, SMOKE, SUITE, geomean,
+                               model_bcsr_time, suite_matrix, tflops,
+                               time_call)
 from repro.kernels.bcsr.kernel import run_bcsr_spmm
+from repro.sparse import convert
 
-M = K = 1024
+M = K = 512 if SMOKE else 1024
 N = 1024
 BM = BK = 64
 BN = 256
+SUITE2 = SUITE[:2] if SMOKE else SUITE
 
 
 def _stage_time(a, nnz, row_imbalance, stage: str) -> float:
@@ -79,9 +81,9 @@ def run(csv_rows):
     stages = [f"opt{i}" for i in range(8)]
     per_stage = {s: [] for s in stages}
     kernel_us = None
-    for i, (kind, density) in enumerate(SUITE):
+    for i, (kind, density) in enumerate(SUITE2):
         d = suite_matrix(kind, M, K, density, seed=100 + i)
-        a = bcsr_from_dense(d, (BM, BK))
+        a = convert(d, "bcsr", block=(BM, BK))
         nnz = int((d != 0).sum())
         rows = np.asarray(a.block_rows)[: a.nnz_blocks]
         counts = np.bincount(rows, minlength=M // BM).astype(float)

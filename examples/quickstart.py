@@ -1,14 +1,16 @@
-"""Quickstart: the paper's technique in five steps, via the unified
-``repro.ops`` API.
+"""Quickstart: the paper's technique in five steps, via the format-agnostic
+``repro.sparse`` layer + the unified ``repro.ops`` API.
 
-1. take a dense weight, 2. block-prune it to BCSR, 3. run the polymorphic
-``spmm`` (Pallas kernel in interpret mode on CPU) against the jnp oracle,
-4. drop the sparse layer into a model, 5. compare dense-vs-sparse modeled
-v5e latency.
+1. take a dense weight, 2. ``sparsify`` it into a ``SparseTensor`` (BCSR),
+3. run ``A @ B`` (Pallas kernel in interpret mode on CPU) against the jnp
+oracle and convert to WCSR through the conversion graph, 4. drop the sparse
+layer into a model, 5. compare dense-vs-sparse modeled v5e latency.
 
-``repro.ops.spmm(a, b)`` dispatches on the format of ``a`` (BCSR or WCSR),
-auto-selects the output tile width (paper §IV-C), and obeys the ambient
-``use_config(...)`` / ``REPRO_SPARSE_IMPL`` execution config.
+``SparseTensor`` separates structure from values: host-side planning (tile
+selection, the WCSR task decomposition) is memoized per structure
+(``repro.ops.make_plan``), so repeated calls — a serving loop — plan once.
+``A @ B`` obeys the ambient ``use_config(...)`` / ``REPRO_SPARSE_IMPL``
+execution config like every ``repro.ops`` entry point.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -22,10 +24,9 @@ import jax.numpy as jnp
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from repro.core.formats import fill_ratio, wcsr_from_dense
 from repro.core.sparse_linear import SparseLinearSpec, sparse_linear_from_dense
-from repro.core.sparsify import sparsify_to_bcsr
-from repro.ops import spmm, use_config
+from repro.ops import make_plan, plan_cache_info, use_config
+from repro.sparse import SparseTensor, sparsify
 from benchmarks.common import model_bcsr_time, PEAK_MXU, HBM_BW
 
 rng = np.random.default_rng(0)
@@ -35,25 +36,36 @@ OUT, IN, TOKENS = 1024, 512, 256
 w = rng.normal(size=(OUT, IN)).astype(np.float32)
 
 # 2. 90% block sparsity, 64x64 blocks (paper §IV-D setting, scaled)
-a = sparsify_to_bcsr(w, (64, 64), sparsity=0.9, method="magnitude")
-print(f"BCSR: {a.nnz_blocks} blocks kept of {(OUT//64)*(IN//64)}, "
-      f"fill_ratio={fill_ratio(np.where(np.abs(w) > 0, w, 0), a):.3f}")
+a = sparsify(w, format="bcsr", block=(64, 64), sparsity=0.9,
+             method="magnitude")
+print(f"{a}: {a.raw.nnz_blocks} blocks kept of {(OUT//64)*(IN//64)}, "
+      f"fill_ratio={a.fill_ratio(np.where(np.abs(w) > 0, w, 0)):.3f}")
 
-# 3. one spmm() for every format: kernel (interpret on CPU) vs jnp reference,
-#    flipped via config contexts — the call sites never change
+# 3. array-API ergonomics: A @ B for every format. Kernel (interpret on CPU)
+#    vs jnp reference, flipped via config contexts — call sites never change.
 x = jnp.asarray(rng.normal(size=(IN, TOKENS)).astype(np.float32))
 with use_config(impl="kernel_interpret"):
-    y_kernel = spmm(a, x)          # BCSR -> block-streaming kernel
-y_ref = spmm(a, x, impl="ref")
+    y_kernel = a @ x               # BCSR -> block-streaming kernel
+y_ref = a.matmul(x, impl="ref")
 err = float(jnp.max(jnp.abs(y_kernel - y_ref)))
 print(f"Pallas kernel vs jnp oracle max err: {err:.2e}")
 assert err < 1e-3
 
-# the same entry point handles irregular sparsity via WCSR
-w_irregular = wcsr_from_dense(
-    np.where(rng.random((OUT, IN)) < 0.02, w, 0), b_row=64, b_col=8)
-y_w = spmm(w_irregular, x)         # WCSR -> window-gather path
-print(f"WCSR spmm out {y_w.shape} (same API, different format)")
+# the conversion graph reaches WCSR from anywhere (here: bcsr -> dense ->
+# wcsr); irregular sparsity would come straight from sparsify(format="wcsr")
+w_irregular = SparseTensor.from_dense(
+    np.where(rng.random((OUT, IN)) < 0.02, w, 0), "wcsr", block=(64, 8))
+with use_config(impl="kernel_interpret"):
+    for _ in range(3):             # a serving loop: plans once, reuses after
+        y_w = w_irregular @ x      # WCSR -> window-gather path
+info = plan_cache_info()
+print(f"WCSR spmm out {y_w.shape} (same API, different format); "
+      f"task decompositions: {info.task_decompositions}, "
+      f"plan hits: {info.hits}")
+assert info.task_decompositions == 1
+plan = make_plan(w_irregular, TOKENS)  # the memoized plan, inspectable
+print(f"plan: bn={plan.bn}, tasks={plan.num_tasks} "
+      f"(chunks_per_task={plan.chunks_per_task})")
 
 # 4. a drop-in sparse linear layer (differentiable: SDDMM backward)
 layer = sparse_linear_from_dense(
@@ -70,7 +82,7 @@ print(f"sparse layer out {out.shape}, dvalues {grad.shape} "
 # 5. modeled v5e latency, dense vs sparse
 t_dense = max(2.0 * OUT * IN * TOKENS / PEAK_MXU,
               (OUT * IN + IN * TOKENS + OUT * TOKENS) * 2 / HBM_BW)
-t_sparse = model_bcsr_time(a.nnz_blocks, 64, 64, TOKENS, 128, k=IN)
+t_sparse = model_bcsr_time(a.raw.nnz_blocks, 64, 64, TOKENS, 128, k=IN)
 print(f"modeled v5e: dense {t_dense*1e6:.1f}us vs BCSR {t_sparse*1e6:.1f}us "
       f"({t_dense/t_sparse:.2f}x)")
 print("quickstart OK")

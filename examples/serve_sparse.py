@@ -44,4 +44,7 @@ print(f"served {len(done)}/{len(requests)} requests, {total_new} tokens "
 for r in requests[:3]:
     print(f"  req{r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
 assert all(r.done for r in requests)
+stats = engine.stats()
+print(f"engine stats: free_slots={stats['free_slots']} "
+      f"plan_cache={stats['plan_cache']}")
 print("serve_sparse OK")

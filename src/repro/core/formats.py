@@ -1,33 +1,20 @@
-"""Sparse formats from the AsyncSparse paper, as JAX pytrees.
+"""DEPRECATED: thin shims forwarding to the ``repro.sparse`` layer.
 
-Two complementary formats (paper §II-C):
-
-* ``BCSR`` — Block Compressed Sparse Row. ``A`` is tiled into fixed
-  ``b_row x b_col`` blocks; only blocks containing at least one nonzero are
-  stored densely. Contiguous block storage makes both operands bulk-DMA-able
-  (the TMA-friendly format; on TPU the analogue is BlockSpec streaming driven
-  by scalar-prefetched block indices).
-
-* ``WCSR`` — Window Compressed Sparse Row. Rows are grouped into windows of
-  ``b_row``; per window the union of nonzero columns is stored as packed
-  length-``b_row`` column vectors, padded to a multiple of ``b_col``. Much
-  lower padding for scattered sparsity, at the cost of an indirect gather of
-  the dense operand (cooperative gather on GPU; scalar-core row DMAs on TPU).
-
-Both are registered dataclass pytrees: index/value arrays are leaves (so the
-formats flow through jit / pjit / shard_map), sizes and block shapes are
-static metadata.
+The BCSR/WCSR containers and their host-side constructors moved to
+``repro.sparse.formats``; the format-agnostic API on top (``SparseTensor``,
+``convert``, ``sparsify``, the ``SparseFormat`` registry) lives in
+``repro.sparse``. The class names re-export directly (they are the same
+pytree types); the free functions warn on use and forward — the same
+pattern as the PR-1 ``kernels/*/ops.py`` shims.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import repro.sparse as _sparse
+from repro.sparse.formats import BCSR, WCSR  # noqa: F401  (same classes)
 
 __all__ = [
     "BCSR",
@@ -45,353 +32,27 @@ __all__ = [
 ]
 
 
-def _cdiv(a: int, b: int) -> int:
-    return -(-a // b)
+def _shim(name: str):
+    new = getattr(_sparse, name)
+
+    @functools.wraps(new)
+    def fn(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.formats.{name} is deprecated; use "
+            f"repro.sparse.{name} instead",
+            DeprecationWarning, stacklevel=2)
+        return new(*args, **kwargs)
+
+    return fn
 
 
-def _round_up(a: int, b: int) -> int:
-    return _cdiv(a, b) * b
-
-
-@functools.partial(
-    jax.tree_util.register_dataclass,
-    data_fields=["blocks", "block_rows", "block_cols", "block_row_ptr"],
-    meta_fields=["shape", "block", "nnz_blocks"],
-)
-@dataclasses.dataclass
-class BCSR:
-    """Block Compressed Sparse Row matrix.
-
-    Attributes:
-      blocks:        [nnz_padded, b_row, b_col] dense block values. Padding
-                     blocks (index >= nnz_blocks) are all-zero.
-      block_rows:    [nnz_padded] i32 block-row index per stored block,
-                     sorted ascending. Padding entries repeat the last valid
-                     block-row so kernels revisit an already-open output tile.
-      block_cols:    [nnz_padded] i32 block-col index per stored block
-                     (0 for padding entries — harmless, values are zero).
-      block_row_ptr: [m_blocks + 1] i32 CSR-style pointers into the block
-                     arrays (excludes padding).
-      shape:         static (m, k) of the logical dense matrix.
-      block:         static (b_row, b_col).
-      nnz_blocks:    static count of real (non-padding) blocks.
-    """
-
-    blocks: jax.Array
-    block_rows: jax.Array
-    block_cols: jax.Array
-    block_row_ptr: jax.Array
-    shape: Tuple[int, int]
-    block: Tuple[int, int]
-    nnz_blocks: int
-
-    @property
-    def dtype(self):
-        return self.blocks.dtype
-
-    @property
-    def nnz_padded(self) -> int:
-        return self.blocks.shape[0]
-
-    @property
-    def grid_blocks(self) -> Tuple[int, int]:
-        return (self.shape[0] // self.block[0], self.shape[1] // self.block[1])
-
-    def density(self) -> float:
-        m, k = self.shape
-        return self.nnz_blocks * self.block[0] * self.block[1] / (m * k)
-
-    def astype(self, dtype) -> "BCSR":
-        return dataclasses.replace(self, blocks=self.blocks.astype(dtype))
-
-
-@functools.partial(
-    jax.tree_util.register_dataclass,
-    data_fields=["values", "col_idx", "window_ptr"],
-    meta_fields=["shape", "b_row", "b_col", "padded_cols"],
-)
-@dataclasses.dataclass
-class WCSR:
-    """Window Compressed Sparse Row matrix.
-
-    Attributes:
-      values:      [b_row, total_padded_cols] packed column vectors. Column
-                   ``c`` belongs to the window ``w`` with
-                   ``window_ptr[w] <= c < window_ptr[w+1]`` and holds the
-                   values of A[w*b_row:(w+1)*b_row, col_idx[c]].
-      col_idx:     [total_padded_cols] i32 original column per packed column;
-                   -1 for padding columns (their values are zero).
-      window_ptr:  [num_windows + 1] i32, multiples of b_col.
-      shape:       static (m, k).
-      b_row:       static window height.
-      b_col:       static packed-column padding unit (the k-granularity of
-                   the micro-matmuls; lane-aligned on TPU).
-      padded_cols: static total packed columns (values.shape[1]).
-    """
-
-    values: jax.Array
-    col_idx: jax.Array
-    window_ptr: jax.Array
-    shape: Tuple[int, int]
-    b_row: int
-    b_col: int
-    padded_cols: int
-
-    @property
-    def dtype(self):
-        return self.values.dtype
-
-    @property
-    def num_windows(self) -> int:
-        return self.shape[0] // self.b_row
-
-    def density(self) -> float:
-        m, k = self.shape
-        return self.padded_cols * self.b_row / (m * k)
-
-    def astype(self, dtype) -> "WCSR":
-        return dataclasses.replace(self, values=self.values.astype(dtype))
-
-
-# ---------------------------------------------------------------------------
-# BCSR construction
-# ---------------------------------------------------------------------------
-
-
-def block_mask_from_dense(dense: np.ndarray, block: Tuple[int, int]) -> np.ndarray:
-    """Boolean [m_blocks, k_blocks] mask of blocks containing any nonzero."""
-    m, k = dense.shape
-    bm, bk = block
-    if m % bm or k % bk:
-        raise ValueError(f"shape {dense.shape} not divisible by block {block}")
-    r = np.asarray(dense).reshape(m // bm, bm, k // bk, bk)
-    return (r != 0).any(axis=(1, 3))
-
-
-def bcsr_from_mask(
-    dense: np.ndarray,
-    mask: np.ndarray,
-    block: Tuple[int, int],
-    pad_to: int | None = None,
-    cover_empty_rows: bool = True,
-) -> BCSR:
-    """Build BCSR keeping exactly the blocks selected by ``mask``.
-
-    With ``cover_empty_rows`` (default), block-rows with no stored block get
-    one explicit zero block so the TPU kernel visits (and zero-fills) every
-    output row-block — the analogue of the GPU kernel's C initialization.
-    """
-    dense = np.asarray(dense)
-    m, k = dense.shape
-    bm, bk = block
-    mask = np.asarray(mask, bool).copy()
-    if cover_empty_rows:
-        empty = ~mask.any(axis=1)
-        mask[empty, 0] = True
-    rows, cols = np.nonzero(mask)  # row-major order == sorted by block row
-    nnz = len(rows)
-    npad = max(nnz, 1) if pad_to is None else pad_to
-    if npad < nnz:
-        raise ValueError(f"pad_to={pad_to} < nnz_blocks={nnz}")
-    blocks = np.zeros((npad, bm, bk), dense.dtype)
-    r4 = dense.reshape(m // bm, bm, k // bk, bk).transpose(0, 2, 1, 3)
-    if nnz:
-        blocks[:nnz] = r4[rows, cols]
-    # Padding repeats the last valid row (keeps output revisiting monotone).
-    last_row = rows[-1] if nnz else 0
-    prow = np.full(npad, last_row, np.int32)
-    pcol = np.zeros(npad, np.int32)
-    if nnz:
-        prow[:nnz] = rows
-        pcol[:nnz] = cols
-    ptr = np.zeros(m // bm + 1, np.int32)
-    np.add.at(ptr, rows + 1, 1)
-    ptr = np.cumsum(ptr).astype(np.int32)
-    return BCSR(
-        blocks=jnp.asarray(blocks),
-        block_rows=jnp.asarray(prow),
-        block_cols=jnp.asarray(pcol),
-        block_row_ptr=jnp.asarray(ptr),
-        shape=(m, k),
-        block=(bm, bk),
-        nnz_blocks=int(nnz),
-    )
-
-
-def bcsr_from_dense(
-    dense: np.ndarray, block: Tuple[int, int], pad_to: int | None = None
-) -> BCSR:
-    """Build BCSR from a dense matrix, keeping blocks with any nonzero."""
-    return bcsr_from_mask(dense, block_mask_from_dense(dense, block), block, pad_to)
-
-
-def bcsr_to_dense(a: BCSR) -> jax.Array:
-    """Pure-jnp densify (oracle for tests)."""
-    m, k = a.shape
-    bm, bk = a.block
-    mb, kb = a.grid_blocks
-    nnz = a.nnz_blocks
-    out = jnp.zeros((mb, kb, bm, bk), a.dtype)
-    idx = jnp.arange(a.nnz_padded)
-    valid = idx < nnz
-    # Scatter-add real blocks; padding scattered with zero contribution.
-    vals = jnp.where(valid[:, None, None], a.blocks, 0)
-    out = out.at[a.block_rows, a.block_cols].add(vals)
-    return out.transpose(0, 2, 1, 3).reshape(m, k)
-
-
-def bcsr_transpose(a: BCSR) -> BCSR:
-    """Structure-preserving transpose: (k, m) BCSR with transposed blocks.
-
-    The permutation is derived from the (static) structure on the host, so
-    this is cheap under jit: a gather + per-block transpose.
-    """
-    rows = np.asarray(jax.device_get(a.block_rows))
-    cols = np.asarray(jax.device_get(a.block_cols))
-    nnz = a.nnz_blocks
-    order = np.lexsort((rows[:nnz], cols[:nnz]))  # sort by (new row=old col)
-    npad = a.nnz_padded
-    perm = np.arange(npad)
-    perm[:nnz] = order
-    new_rows = np.zeros(npad, np.int32)
-    new_cols = np.zeros(npad, np.int32)
-    new_rows[:nnz] = cols[:nnz][order]
-    new_cols[:nnz] = rows[:nnz][order]
-    last = new_rows[nnz - 1] if nnz else 0
-    new_rows[nnz:] = last
-    kb = a.shape[1] // a.block[1]
-    ptr = np.zeros(kb + 1, np.int32)
-    np.add.at(ptr, new_rows[:nnz] + 1, 1)
-    ptr = np.cumsum(ptr).astype(np.int32)
-    blocks_t = a.blocks[jnp.asarray(perm)].transpose(0, 2, 1)
-    return BCSR(
-        blocks=blocks_t,
-        block_rows=jnp.asarray(new_rows),
-        block_cols=jnp.asarray(new_cols),
-        block_row_ptr=jnp.asarray(ptr),
-        shape=(a.shape[1], a.shape[0]),
-        block=(a.block[1], a.block[0]),
-        nnz_blocks=nnz,
-    )
-
-
-# ---------------------------------------------------------------------------
-# WCSR construction
-# ---------------------------------------------------------------------------
-
-
-def wcsr_from_dense(
-    dense: np.ndarray, b_row: int, b_col: int, pad_cols_to: int | None = None
-) -> WCSR:
-    """Build WCSR: per window, the union of nonzero columns, padded to b_col."""
-    dense = np.asarray(dense)
-    m, k = dense.shape
-    if m % b_row:
-        raise ValueError(f"m={m} not divisible by b_row={b_row}")
-    num_windows = m // b_row
-    per_window_cols = []
-    for w in range(num_windows):
-        sub = dense[w * b_row : (w + 1) * b_row]
-        nz = np.nonzero((sub != 0).any(axis=0))[0]
-        per_window_cols.append(nz)
-    ptr = [0]
-    for nz in per_window_cols:
-        ptr.append(ptr[-1] + _round_up(max(len(nz), 0), b_col))
-    total = ptr[-1]
-    if pad_cols_to is not None:
-        if pad_cols_to < total:
-            raise ValueError(f"pad_cols_to={pad_cols_to} < required {total}")
-        total = pad_cols_to
-    total = max(total, b_col)
-    values = np.zeros((b_row, total), dense.dtype)
-    col_idx = np.full(total, -1, np.int32)
-    for w, nz in enumerate(per_window_cols):
-        s = ptr[w]
-        col_idx[s : s + len(nz)] = nz
-        values[:, s : s + len(nz)] = dense[w * b_row : (w + 1) * b_row][:, nz]
-    return WCSR(
-        values=jnp.asarray(values),
-        col_idx=jnp.asarray(col_idx),
-        window_ptr=jnp.asarray(np.asarray(ptr, np.int32)),
-        shape=(m, k),
-        b_row=b_row,
-        b_col=b_col,
-        padded_cols=total,
-    )
-
-
-def wcsr_to_dense(a: WCSR) -> jax.Array:
-    """Pure-jnp densify (oracle for tests)."""
-    m, k = a.shape
-    ptr = jnp.asarray(a.window_ptr)
-    c = jnp.arange(a.padded_cols)
-    # window id per packed column
-    win = jnp.searchsorted(ptr, c, side="right") - 1
-    win = jnp.clip(win, 0, a.num_windows - 1)
-    valid = a.col_idx >= 0
-    col = jnp.where(valid, a.col_idx, 0)
-    out = jnp.zeros((a.num_windows, k, a.b_row), a.dtype)
-    vals = jnp.where(valid[None, :], a.values, 0)  # [b_row, C]
-    out = out.at[win, col].add(vals.T)
-    return out.transpose(0, 2, 1).reshape(m, k)
-
-
-# ---------------------------------------------------------------------------
-# Shared utilities
-# ---------------------------------------------------------------------------
-
-
-def fill_ratio(dense: np.ndarray, fmt) -> float:
-    """Fraction of stored values that are true nonzeros (paper §II-C)."""
-    nnz = int((np.asarray(dense) != 0).sum())
-    if isinstance(fmt, BCSR):
-        stored = fmt.nnz_blocks * fmt.block[0] * fmt.block[1]
-    elif isinstance(fmt, WCSR):
-        stored = fmt.padded_cols * fmt.b_row
-    else:
-        raise TypeError(type(fmt))
-    return nnz / max(stored, 1)
-
-
-def rcm_permutation(dense_or_mask: np.ndarray) -> np.ndarray:
-    """Reverse Cuthill-McKee row/col permutation (paper preprocessing)."""
-    import scipy.sparse as sp
-    from scipy.sparse.csgraph import reverse_cuthill_mckee
-
-    a = sp.csr_matrix(np.asarray(dense_or_mask) != 0)
-    # RCM needs a structurally symmetric graph.
-    sym = ((a + a.T) > 0).astype(np.int8)
-    return np.asarray(reverse_cuthill_mckee(sym.tocsr(), symmetric_mode=True))
-
-
-def make_wcsr_tasks(
-    a: WCSR, chunks_per_task: int
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Split windows into fixed-size sub-tasks (paper §III-C load balancing).
-
-    Each task covers up to ``chunks_per_task`` packed-column chunks of
-    ``b_col`` columns within one window. Returns (task_window,
-    task_chunk_start, task_nchunks) as host arrays; structure-static.
-    """
-    ptr = np.asarray(jax.device_get(a.window_ptr))
-    t_win, t_start, t_n = [], [], []
-    for w in range(a.num_windows):
-        c0, c1 = int(ptr[w]), int(ptr[w + 1])
-        nchunks = (c1 - c0) // a.b_col
-        g = 0
-        while g < nchunks:
-            take = min(chunks_per_task, nchunks - g)
-            t_win.append(w)
-            t_start.append(c0 // a.b_col + g)
-            t_n.append(take)
-            g += take
-        if nchunks == 0:
-            # empty window: no task (handled by zero-init of output)
-            continue
-    if not t_win:  # fully-empty matrix: one no-op task keeps grids non-empty
-        t_win, t_start, t_n = [0], [0], [0]
-    return (
-        np.asarray(t_win, np.int32),
-        np.asarray(t_start, np.int32),
-        np.asarray(t_n, np.int32),
-    )
+bcsr_from_dense = _shim("bcsr_from_dense")
+bcsr_to_dense = _shim("bcsr_to_dense")
+bcsr_from_mask = _shim("bcsr_from_mask")
+bcsr_transpose = _shim("bcsr_transpose")
+wcsr_from_dense = _shim("wcsr_from_dense")
+wcsr_to_dense = _shim("wcsr_to_dense")
+block_mask_from_dense = _shim("block_mask_from_dense")
+fill_ratio = _shim("fill_ratio")
+rcm_permutation = _shim("rcm_permutation")
+make_wcsr_tasks = _shim("make_wcsr_tasks")

@@ -4,6 +4,12 @@
 (host-side), trainable block values, forward via the Pallas BCSR kernel (or
 jnp reference), backward via SDDMM + transposed SpMM (``bcsr_matmul``).
 
+Built on the ``repro.sparse`` layer: construction goes through
+``sparsify(w, format="bcsr", ...)`` and a layer converts to/from the
+format-agnostic ``SparseTensor`` (``from_sparse`` / ``to_sparse``), so the
+structure is extracted once per layer and value swaps (optimizer steps,
+dtype casts) never re-derive it.
+
 The SPMD training form used by the model zoo (runtime index arrays so the
 layer traces once under shard_map) lives in ``repro.models.ffn``.
 
@@ -20,9 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BCSR
-from repro.core.sparsify import sparsify_to_bcsr
 from repro.ops import BCSRStructure, bcsr_matmul, structure_of
+from repro.sparse import BCSR, SparseTensor, sparsify
 
 __all__ = ["SparseLinearSpec", "SparseLinear", "sparse_linear_from_dense"]
 
@@ -55,6 +60,19 @@ class SparseLinear:
     def shape(self) -> Tuple[int, int]:
         return self.structure.shape
 
+    @classmethod
+    def from_sparse(cls, st: SparseTensor) -> "SparseLinear":
+        """Build from a BCSR-format ``SparseTensor`` (structure kept static)."""
+        if st.format != "bcsr":
+            raise ValueError(
+                f"SparseLinear needs a bcsr SparseTensor, got {st.format!r} "
+                "(convert first: st.to('bcsr', block=...))")
+        return cls(values=st.data[0], structure=structure_of(st.raw))
+
+    def to_sparse(self) -> SparseTensor:
+        """The weight as a format-agnostic ``SparseTensor``."""
+        return SparseTensor.wrap(self.to_bcsr())
+
     def to_bcsr(self) -> BCSR:
         from repro.ops.matmul import _as_bcsr
 
@@ -64,11 +82,9 @@ class SparseLinear:
 def sparse_linear_from_dense(
     w: np.ndarray, spec: SparseLinearSpec, pad_to: int | None = None
 ) -> SparseLinear:
-    a = sparsify_to_bcsr(
-        w, spec.block, spec.sparsity, method=spec.method, seed=spec.seed,
-        pad_to=pad_to,
-    )
-    return SparseLinear(values=a.blocks, structure=structure_of(a))
+    st = sparsify(w, format="bcsr", sparsity=spec.sparsity, block=spec.block,
+                  method=spec.method, seed=spec.seed, pad_to=pad_to)
+    return SparseLinear.from_sparse(st)
 
 
 def init_sparse_linear(key: jax.Array, spec: SparseLinearSpec) -> SparseLinear:

@@ -1,18 +1,22 @@
-"""Block pruning: produce block-sparse weights (paper §IV-D methodology).
+"""DEPRECATED: thin shims forwarding to ``repro.sparse.sparsify``.
 
-The paper applies *random* block sparsity at 80/90/95/99% to FFN weights
-("deliberately relaxing accuracy constraints to focus on the upper bound of
-performance gains"). We implement that, plus magnitude-based block pruning
-(the realistic counterpart used by structured-pruning work the paper cites).
+The mask helpers moved verbatim; the ``sparsify_to_bcsr`` /
+``sparsify_to_wcsr`` pair is subsumed by the format-agnostic
+``repro.sparse.sparsify(dense, format=..., method=...)`` (which returns a
+``SparseTensor``; these shims return the raw formats as before).
 """
 
 from __future__ import annotations
+
+import functools
+import warnings
 
 from typing import Tuple
 
 import numpy as np
 
-from repro.core.formats import BCSR, WCSR, bcsr_from_mask, wcsr_from_dense
+import repro.sparse as _sparse
+from repro.sparse.formats import BCSR, WCSR  # noqa: F401
 
 __all__ = [
     "random_block_mask",
@@ -24,80 +28,24 @@ __all__ = [
 ]
 
 
-def _grid(shape: Tuple[int, int], block: Tuple[int, int]) -> Tuple[int, int]:
-    m, k = shape
-    bm, bk = block
-    if m % bm or k % bk:
-        raise ValueError(f"shape {shape} not divisible by block {block}")
-    return m // bm, k // bk
+def _shim(name: str):
+    new = getattr(_sparse, name)
+
+    @functools.wraps(new)
+    def fn(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.sparsify.{name} is deprecated; use "
+            f"repro.sparse.{name} instead",
+            DeprecationWarning, stacklevel=2)
+        return new(*args, **kwargs)
+
+    return fn
 
 
-def random_block_mask(
-    shape: Tuple[int, int],
-    block: Tuple[int, int],
-    sparsity: float,
-    seed: int = 0,
-    ensure_row_nonempty: bool = True,
-) -> np.ndarray:
-    """Random block mask with exactly round((1-sparsity)*nblocks) kept blocks."""
-    mb, kb = _grid(shape, block)
-    rng = np.random.default_rng(seed)
-    n = mb * kb
-    keep = int(round((1.0 - sparsity) * n))
-    mask = np.zeros(n, bool)
-    mask[rng.choice(n, size=keep, replace=False)] = True
-    mask = mask.reshape(mb, kb)
-    if ensure_row_nonempty and keep >= mb:
-        for r in np.nonzero(~mask.any(axis=1))[0]:
-            # move a block from the densest row to keep count constant
-            donor = int(np.argmax(mask.sum(axis=1)))
-            c = int(np.nonzero(mask[donor])[0][0])
-            mask[donor, c] = False
-            mask[r, rng.integers(kb)] = True
-    return mask
-
-
-def magnitude_block_mask(
-    weight: np.ndarray, block: Tuple[int, int], sparsity: float
-) -> np.ndarray:
-    """Keep the top (1-sparsity) fraction of blocks by Frobenius norm."""
-    w = np.asarray(weight)
-    mb, kb = _grid(w.shape, block)
-    bm, bk = block
-    norms = np.linalg.norm(
-        w.reshape(mb, bm, kb, bk).transpose(0, 2, 1, 3).reshape(mb, kb, -1), axis=-1
-    )
-    n = mb * kb
-    keep = int(round((1.0 - sparsity) * n))
-    flat = norms.reshape(-1)
-    thresh_idx = np.argsort(flat)[::-1][:keep]
-    mask = np.zeros(n, bool)
-    mask[thresh_idx] = True
-    return mask.reshape(mb, kb)
-
-
-def banded_block_mask(
-    shape: Tuple[int, int], block: Tuple[int, int], bandwidth_blocks: int
-) -> np.ndarray:
-    """Banded structure (SuiteSparse-style locality after RCM reordering)."""
-    mb, kb = _grid(shape, block)
-    r = np.arange(mb)[:, None]
-    c = np.arange(kb)[None, :]
-    # map row-block index onto col-block scale for rectangular matrices
-    center = r * (kb / mb)
-    return np.abs(c - center) <= bandwidth_blocks
-
-
-def apply_block_mask(
-    weight: np.ndarray, mask: np.ndarray, block: Tuple[int, int]
-) -> np.ndarray:
-    """Zero out masked blocks of a dense weight (dense reference of pruning)."""
-    w = np.asarray(weight).copy()
-    mb, kb = _grid(w.shape, block)
-    bm, bk = block
-    w4 = w.reshape(mb, bm, kb, bk)
-    w4 *= mask[:, None, :, None]
-    return w4.reshape(w.shape)
+random_block_mask = _shim("random_block_mask")
+magnitude_block_mask = _shim("magnitude_block_mask")
+banded_block_mask = _shim("banded_block_mask")
+apply_block_mask = _shim("apply_block_mask")
 
 
 def sparsify_to_bcsr(
@@ -108,15 +56,14 @@ def sparsify_to_bcsr(
     seed: int = 0,
     pad_to: int | None = None,
 ) -> BCSR:
-    w = np.asarray(weight)
-    if method == "magnitude":
-        mask = magnitude_block_mask(w, block, sparsity)
-    elif method == "random":
-        mask = random_block_mask(w.shape, block, sparsity, seed)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    wm = apply_block_mask(w, mask, block)
-    return bcsr_from_mask(wm, mask, block, pad_to=pad_to)
+    """Deprecated alias of ``repro.sparse.sparsify(..., format="bcsr")``."""
+    warnings.warn(
+        "repro.core.sparsify.sparsify_to_bcsr is deprecated; use "
+        "repro.sparse.sparsify(w, format='bcsr', ...) instead",
+        DeprecationWarning, stacklevel=2)
+    return _sparse.sparsify(weight, format="bcsr", sparsity=sparsity,
+                            method=method, block=block, seed=seed,
+                            pad_to=pad_to).raw
 
 
 def sparsify_to_wcsr(
@@ -127,14 +74,11 @@ def sparsify_to_wcsr(
     method: str = "magnitude",
     seed: int = 0,
 ) -> WCSR:
-    w = np.asarray(weight)
-    # element-level pruning for WCSR (finer granularity is the format's point)
-    if method == "magnitude":
-        thresh = np.quantile(np.abs(w), sparsity)
-        wm = np.where(np.abs(w) > thresh, w, 0)
-    elif method == "random":
-        rng = np.random.default_rng(seed)
-        wm = np.where(rng.random(w.shape) > sparsity, w, 0)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    return wcsr_from_dense(wm, b_row, b_col)
+    """Deprecated alias of ``repro.sparse.sparsify(..., format="wcsr")``."""
+    warnings.warn(
+        "repro.core.sparsify.sparsify_to_wcsr is deprecated; use "
+        "repro.sparse.sparsify(w, format='wcsr', ...) instead",
+        DeprecationWarning, stacklevel=2)
+    return _sparse.sparsify(weight, format="wcsr", sparsity=sparsity,
+                            method=method, block=(b_row, b_col),
+                            seed=seed).raw

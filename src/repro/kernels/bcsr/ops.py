@@ -12,21 +12,19 @@ import warnings
 
 import jax
 
-from repro.core.formats import BCSR
+from repro.sparse.formats import BCSR
 
 __all__ = ["bcsr_spmm", "BCSRStructure", "structure_of", "bcsr_matmul"]
-
-
-def _warn(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.kernels.bcsr.ops.{old} is deprecated; use {new} instead",
-        DeprecationWarning, stacklevel=3)
 
 
 def bcsr_spmm(a: BCSR, b: jax.Array, *, impl: str = "auto", bn=None,
               out_dtype=None) -> jax.Array:
     """Deprecated alias of ``repro.ops.spmm`` for BCSR operands."""
-    _warn("bcsr_spmm", "repro.ops.spmm")
+    # inline warn with stacklevel=2, like the other three shims, so the
+    # warning points at the caller (a helper would need stacklevel=3)
+    warnings.warn(
+        "repro.kernels.bcsr.ops.bcsr_spmm is deprecated; use repro.ops.spmm "
+        "instead", DeprecationWarning, stacklevel=2)
     from repro.ops import spmm
 
     return spmm(a, b, impl=impl, bn=bn, out_dtype=out_dtype)
@@ -34,7 +32,9 @@ def bcsr_spmm(a: BCSR, b: jax.Array, *, impl: str = "auto", bn=None,
 
 def bcsr_matmul(values, b, structure, impl="auto"):
     """Deprecated alias of ``repro.ops.bcsr_matmul`` (still differentiable)."""
-    _warn("bcsr_matmul", "repro.ops.bcsr_matmul")
+    warnings.warn(
+        "repro.kernels.bcsr.ops.bcsr_matmul is deprecated; use "
+        "repro.ops.bcsr_matmul instead", DeprecationWarning, stacklevel=2)
     from repro.ops import bcsr_matmul as _bcsr_matmul
 
     return _bcsr_matmul(values, b, structure, impl)

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BCSR
+from repro.sparse.formats import BCSR
 
 
 def bcsr_spmm_ref(a: BCSR, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -33,7 +33,7 @@ def bcsr_spmm_ref(a: BCSR, b: jax.Array, out_dtype=None) -> jax.Array:
 
 def bcsr_spmm_dense_ref(a: BCSR, b: jax.Array, out_dtype=None) -> jax.Array:
     """Second, independent oracle: densify then matmul."""
-    from repro.core.formats import bcsr_to_dense
+    from repro.sparse.formats import bcsr_to_dense
 
     dense = bcsr_to_dense(a)
     out = jnp.dot(dense, b, preferred_element_type=jnp.float32)

@@ -6,7 +6,7 @@ import warnings
 
 import jax
 
-from repro.core.formats import BCSR
+from repro.sparse.formats import BCSR
 
 __all__ = ["sddmm"]
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BCSR
+from repro.sparse.formats import BCSR
 
 
 def sddmm_ref(dc: jax.Array, b: jax.Array, a_struct: BCSR, out_dtype=None):

@@ -6,7 +6,7 @@ import warnings
 
 import jax
 
-from repro.core.formats import WCSR
+from repro.sparse.formats import WCSR
 
 __all__ = ["wcsr_spmm"]
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import WCSR
+from repro.sparse.formats import WCSR
 
 
 def wcsr_spmm_ref(a: WCSR, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -35,7 +35,7 @@ def wcsr_spmm_ref(a: WCSR, b: jax.Array, out_dtype=None) -> jax.Array:
 
 def wcsr_spmm_dense_ref(a: WCSR, b: jax.Array, out_dtype=None) -> jax.Array:
     """Second, independent oracle: densify then matmul."""
-    from repro.core.formats import wcsr_to_dense
+    from repro.sparse.formats import wcsr_to_dense
 
     dense = wcsr_to_dense(a)
     return jnp.dot(dense, b, preferred_element_type=jnp.float32).astype(

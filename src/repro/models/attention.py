@@ -23,6 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import apply_rope, dense_init, shard_by
+# unified sparse-op API: impl=None defers to use_config /
+# REPRO_SPARSE_IMPL / registry auto-resolution
+from repro.ops import sparse_attention
 
 NEG_INF = -1e30
 
@@ -285,10 +288,6 @@ def apply_attention(
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if block_mask is not None:
-        # unified sparse-op API: impl=None defers to use_config /
-        # REPRO_SPARSE_IMPL / registry auto-resolution
-        from repro.ops import sparse_attention
-
         out = sparse_attention(
             q.transpose(0, 2, 1, 3),
             k.transpose(0, 2, 1, 3),

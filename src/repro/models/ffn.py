@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparsify import random_block_mask
 from repro.models.common import activation, current_mesh_rules, dense_init, shard_by
+from repro.sparse import random_block_mask
 # the per-shard runtime-index primitive now lives in the unified ops layer
 from repro.ops import local_bcsr_matmul_t  # noqa: F401  (re-exported for moe)
 

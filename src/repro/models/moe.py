@@ -18,7 +18,9 @@ mesh context the same code runs with the full arrays (smoke tests).
 
 Experts may themselves be **block-sparse** (the paper's technique applied to
 expert FFNs): values [E, S, nnz, bm, bk] in the sharded-BCSR layout of
-``models/ffn``.
+``models/ffn`` (block masks come from ``repro.sparse``'s pruning helpers;
+the structure is shared across the expert dim, values differ per expert —
+the same structure/values separation ``repro.sparse.SparseTensor`` uses).
 """
 
 from __future__ import annotations

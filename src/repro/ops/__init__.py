@@ -3,7 +3,9 @@
 One polymorphic entry point per op family, with registry-based backend
 dispatch, ambient execution config, and §IV-C auto-tiling:
 
-* ``spmm(a, b)`` — SpMM for any registered sparse format (BCSR, WCSR).
+* ``spmm(a, b)`` — SpMM for any registered sparse format (BCSR, WCSR, or
+  a ``repro.sparse.SparseTensor``, whose static structure routes host-side
+  planning through the ``make_plan`` cache).
 * ``sddmm(dc, b, a_struct)`` — sampled dense-dense matmul (training bwd).
 * ``sparse_attention(q, k, v, block_mask)`` — block-sparse prefill attention.
 * ``bcsr_matmul(values, b, structure)`` — differentiable SpMM over static
@@ -18,6 +20,9 @@ Backends flip globally without touching call sites::
 
 Tile widths default to ``bn="auto"`` (paper §IV-C selection), memoized in
 a per-process tuning cache keyed by (op, format, shape, dtype, impl).
+``make_plan(structure, n, cfg)`` memoizes all host-side planning (tile
+selection + the WCSR §III-C task decomposition) per ``SparseStructure`` —
+serving plans once per layer and swaps values freely.
 """
 
 from repro.ops.attention import csr_encode_block_mask, sparse_attention
@@ -25,6 +30,8 @@ from repro.ops.config import (ENV_IMPL_VAR, OpConfig, current_config,
                               resolve_interpret, resolved_config, use_config)
 from repro.ops.matmul import (BCSRStructure, bcsr_matmul,
                               local_bcsr_matmul_t, structure_of)
+from repro.ops.plan import (Plan, clear_plan_cache, make_plan,
+                            plan_cache_info)
 from repro.ops.registry import (available_backends, register_backend,
                                 register_format, registered_backends,
                                 resolve_backend, resolve_format)
@@ -45,6 +52,7 @@ __all__ = [
     # registry
     "register_backend", "register_format", "resolve_backend",
     "resolve_format", "available_backends", "registered_backends",
-    # tiling
+    # planning + tiling
+    "Plan", "make_plan", "plan_cache_info", "clear_plan_cache",
     "auto_bn", "resolve_bn", "tuning_cache_info", "clear_tuning_cache",
 ]

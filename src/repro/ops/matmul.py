@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BCSR
+from repro.sparse.formats import BCSR
 
 __all__ = ["BCSRStructure", "structure_of", "bcsr_matmul",
            "local_bcsr_matmul_t"]
@@ -58,8 +58,19 @@ class BCSRStructure:
         return jnp.asarray(np.asarray(self.cols, np.int32))
 
 
-def structure_of(a: BCSR) -> BCSRStructure:
-    """Extract the static structure (and transpose permutation) of a BCSR."""
+def structure_of(a) -> BCSRStructure:
+    """Extract the static structure (and transpose permutation) of a BCSR.
+
+    Accepts a raw ``BCSR`` or a BCSR-format ``SparseTensor``. (This is the
+    autodiff-side structure with the transpose permutation baked in; the
+    planning-side ``repro.sparse.SparseStructure`` is format-generic.)
+    """
+    from repro.sparse.tensor import SparseTensor
+
+    if isinstance(a, SparseTensor):
+        a = a.raw
+    if not isinstance(a, BCSR):
+        raise TypeError(f"structure_of: expected BCSR, got {type(a).__name__}")
     rows = np.asarray(jax.device_get(a.block_rows), np.int32)
     cols = np.asarray(jax.device_get(a.block_cols), np.int32)
     nnz = a.nnz_blocks

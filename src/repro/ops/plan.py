@@ -1,0 +1,133 @@
+"""Cached execution plans: host-side planning done once per structure.
+
+``make_plan(structure, n, cfg)`` bundles everything an spmm backend decides
+on the host before launching a kernel:
+
+* the output tile width ``bn`` (§IV-C selection via the tuning cache), and
+* for WCSR, the load-balancing task decomposition (§III-C) — the python
+  loop over windows that used to re-run on every call.
+
+Plans are memoized per (structure, n, dtype, impl, bn, chunks_per_task);
+the task decomposition has its own cache keyed only by
+(structure, chunks_per_task), so value swaps *and dtype casts* on the same
+``SparseStructure`` never re-derive tasks — exactly the per-step overhead a
+serving system handling repeated shapes must amortize (the Acc-SpMM /
+cuTeSpMM preprocess-once pattern).
+
+``plan_cache_info()`` exposes hit/miss counters plus the number of task
+decompositions actually performed, so tests can prove planning runs once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ops.config import OpConfig, current_config
+from repro.ops.tiling import resolve_bn
+from repro.sparse.structure import SparseStructure
+
+__all__ = ["Plan", "make_plan", "plan_cache_info", "clear_plan_cache",
+           "PlanCacheInfo"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Plan:
+    """One memoized host-side plan for spmm over a fixed structure + n."""
+
+    structure: SparseStructure
+    n: int
+    bn: int
+    chunks_per_task: Optional[int]  # wcsr only
+    tasks: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]  # wcsr only
+
+    @property
+    def num_tasks(self) -> int:
+        return 0 if self.tasks is None else len(self.tasks[0])
+
+
+@dataclasses.dataclass
+class PlanCacheInfo:
+    hits: int
+    misses: int
+    task_decompositions: int
+    size: int
+
+
+_PLANS: dict = {}
+_TASKS: dict = {}
+_HITS = 0
+_MISSES = 0
+_DECOMPOSITIONS = 0
+
+
+def clear_plan_cache() -> None:
+    global _HITS, _MISSES, _DECOMPOSITIONS
+    _PLANS.clear()
+    _TASKS.clear()
+    _HITS = 0
+    _MISSES = 0
+    _DECOMPOSITIONS = 0
+
+
+def plan_cache_info() -> PlanCacheInfo:
+    return PlanCacheInfo(hits=_HITS, misses=_MISSES,
+                         task_decompositions=_DECOMPOSITIONS,
+                         size=len(_PLANS))
+
+
+def _tasks_for(structure: SparseStructure, chunks_per_task: int):
+    """The §III-C decomposition, once per (structure, chunks_per_task)."""
+    global _DECOMPOSITIONS
+    key = (structure, chunks_per_task)
+    tasks = _TASKS.get(key)
+    if tasks is None:
+        _DECOMPOSITIONS += 1
+        tasks = structure.tasks(chunks_per_task)
+        _TASKS[key] = tasks
+    return tasks
+
+
+def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
+              dtype=None) -> Plan:
+    """Build (or fetch) the execution plan for ``spmm`` over ``structure``.
+
+    ``structure`` may be a ``SparseStructure`` or anything carrying one
+    (``SparseTensor`` — whose value dtype is then the default ``dtype``).
+    ``cfg`` defaults to the ambient ``current_config()``; only its ``bn`` /
+    ``chunks_per_task`` planning-relevant fields key the cache. ``dtype``
+    is the value dtype (tile selection is byte-width aware; bare-structure
+    default: bfloat16); a cast re-plans ``bn`` cheaply but shares the task
+    cache.
+    """
+    global _HITS, _MISSES
+    if not isinstance(structure, SparseStructure):
+        inner = getattr(structure, "structure", None)
+        if not isinstance(inner, SparseStructure):
+            raise TypeError(
+                f"make_plan: expected SparseStructure (or SparseTensor), "
+                f"got {type(structure).__name__}")
+        if dtype is None:
+            dtype = getattr(structure, "dtype", None)
+        structure = inner
+    if dtype is None:
+        dtype = jnp.bfloat16
+    cfg = current_config() if cfg is None else cfg
+    cpt = (cfg.chunks_per_task or 8) if structure.fmt == "wcsr" else None
+    key = (structure, int(n), str(np.dtype(dtype)), cfg.bn, cpt)
+    plan = _PLANS.get(key)
+    if plan is not None:
+        _HITS += 1
+        return plan
+    _MISSES += 1
+    bm, bk = structure.block
+    bn = resolve_bn(cfg.bn, int(n), bm, bk, dtype, op="spmm",
+                    fmt=structure.fmt, shape=structure.shape, impl="kernel")
+    tasks = _tasks_for(structure, cpt) if structure.fmt == "wcsr" else None
+    plan = Plan(structure=structure, n=int(n), bn=bn, chunks_per_task=cpt,
+                tasks=tasks)
+    _PLANS[key] = plan
+    return plan

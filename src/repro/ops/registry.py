@@ -100,25 +100,39 @@ def registered_backends(op: str) -> List[str]:
 # ---------------------------------------------------------------------------
 # Format dispatch (spmm polymorphism)
 # ---------------------------------------------------------------------------
-
-_FORMATS: Dict[type, str] = {}
+#
+# The per-type table moved into the SparseFormat registry
+# (repro.sparse.registry): each format descriptor names its spmm op family,
+# so dispatch, fill-ratio accounting and conversion share one registration.
+# The imports are lazy to keep repro.ops importable before repro.sparse.
 
 
 def register_format(fmt_type: type, op: str) -> None:
-    """Route ``spmm`` calls whose sparse operand is ``fmt_type`` to ``op``."""
-    _FORMATS[fmt_type] = op
+    """Route ``spmm`` calls whose sparse operand is ``fmt_type`` to ``op``.
+
+    Compatibility hook: registers a minimal ``SparseFormat`` descriptor (or
+    re-points an existing one's op family) in ``repro.sparse.registry``.
+    """
+    from repro.sparse import registry as sreg
+
+    existing = sreg._BY_TYPE.get(fmt_type)
+    if existing is not None:
+        sreg.register_sparse_format(dataclasses.replace(existing, op=op))
+    else:
+        sreg.register_sparse_format(sreg.SparseFormat(
+            name=fmt_type.__name__.lower(), fmt_type=fmt_type, op=op))
 
 
 def resolve_format(a) -> str:
-    """Op family for a sparse operand, by (exact or subclass) type."""
-    op = _FORMATS.get(type(a))
-    if op is None:
-        for t, name in _FORMATS.items():
-            if isinstance(a, t):
-                op = name
-                break
-    if op is None:
+    """Op family for a sparse operand, via the ``SparseFormat`` registry."""
+    from repro.sparse.registry import format_of, registered_sparse_formats
+
+    try:
+        fmt = format_of(a)
+    except TypeError:
+        fmt = None
+    if fmt is None or fmt.op is None:
         raise TypeError(
             f"spmm: unsupported sparse format {type(a).__name__}; "
-            f"registered formats: {[t.__name__ for t in _FORMATS]}")
-    return op
+            f"registered formats: {registered_sparse_formats()}")
+    return fmt.op

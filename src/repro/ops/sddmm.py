@@ -9,13 +9,14 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.formats import BCSR
 from repro.kernels.sddmm.kernel import sddmm_kernel
 from repro.kernels.sddmm.ref import sddmm_ref
 from repro.ops.config import (OpConfig, resolve_interpret,
                               resolved_config)
 from repro.ops.registry import on_tpu, register_backend, resolve_backend
 from repro.ops.tiling import pad_cols, resolve_bn
+from repro.sparse.formats import BCSR
+from repro.sparse.tensor import SparseTensor
 
 __all__ = ["sddmm"]
 
@@ -25,6 +26,8 @@ def sddmm(dc: jax.Array, b: jax.Array, a_struct: BCSR, *, impl=None, bn=None,
     """``dvalues[nnz, bm, bk] = (dC @ B^T)`` sampled at ``a_struct``'s blocks."""
     cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
                           interpret=interpret)
+    if isinstance(a_struct, SparseTensor):
+        a_struct = a_struct.raw
     backend = resolve_backend("sddmm", cfg.impl)
     return backend.fn(dc, b, a_struct, cfg)
 

@@ -1,10 +1,18 @@
-"""Format-polymorphic SpMM: ``spmm(a, b)`` for BCSR and WCSR operands.
+"""Format-polymorphic SpMM: ``spmm(a, b)`` for BCSR / WCSR / SparseTensor.
 
 The single public entry point for the paper's two co-designed kernels
 (§III): ``BCSR`` operands route to the block-streaming kernel, ``WCSR``
 operands to the window-gather kernel, each with ``kernel`` /
 ``kernel_interpret`` / ``ref`` backends in the registry. Tile width
 defaults to ``bn="auto"`` (§IV-C selection, tuning-cached per shape).
+
+``SparseTensor`` operands (the ``repro.sparse`` layer) are unwrapped here:
+their pre-extracted ``SparseStructure`` rides along to the backend, so all
+host-side planning (tile selection, the WCSR §III-C task decomposition)
+hits the ``make_plan`` cache — planned once per layer, reused every step.
+Because that structure is concrete static metadata, a ``SparseTensor`` also
+makes the WCSR kernel path traceable under ``jit`` (raw WCSR operands still
+raise: their ``window_ptr`` would be a tracer).
 """
 
 from __future__ import annotations
@@ -12,16 +20,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BCSR, WCSR, make_wcsr_tasks
 from repro.kernels.bcsr.kernel import bcsr_spmm_kernel
 from repro.kernels.bcsr.ref import bcsr_spmm_ref
 from repro.kernels.wcsr.kernel import wcsr_spmm_kernel
 from repro.kernels.wcsr.ref import wcsr_spmm_ref
 from repro.ops.config import (OpConfig, resolve_interpret,
                               resolved_config)
-from repro.ops.registry import (on_tpu, register_backend, register_format,
+from repro.ops.plan import make_plan
+from repro.ops.registry import (on_tpu, register_backend,
                                 resolve_backend, resolve_format)
 from repro.ops.tiling import pad_cols, resolve_bn, unpad_cols
+from repro.sparse.formats import BCSR, WCSR
+from repro.sparse.structure import wcsr_planning_structure
+from repro.sparse.tensor import SparseTensor
 
 __all__ = ["spmm"]
 
@@ -37,14 +48,12 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
     cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
                           chunks_per_task=chunks_per_task,
                           interpret=interpret)
+    if isinstance(a, SparseTensor):
+        extras.setdefault("structure", a.structure)
+        a = a.raw
     op = resolve_format(a)
     backend = resolve_backend(op, cfg.impl)
     return backend.fn(a, b, cfg, **extras)
-
-
-register_format(BCSR, "spmm/bcsr")
-register_format(WCSR, "spmm/wcsr")
-
 
 
 # ---------------------------------------------------------------------------
@@ -53,15 +62,21 @@ register_format(WCSR, "spmm/wcsr")
 
 
 @register_backend("spmm/bcsr", "ref", priority=50)
-def _bcsr_spmm_ref(a: BCSR, b, cfg: OpConfig):
+def _bcsr_spmm_ref(a: BCSR, b, cfg: OpConfig, *, structure=None):
+    del structure  # planning applies to the kernel paths only
     return bcsr_spmm_ref(a, b, out_dtype=cfg.out_dtype)
 
 
-def _bcsr_spmm_pallas(a: BCSR, b, cfg: OpConfig, interpret: bool):
+def _bcsr_spmm_pallas(a: BCSR, b, cfg: OpConfig, interpret: bool,
+                      structure=None):
     bm, bk = a.block
     n = b.shape[1]
-    bn = resolve_bn(cfg.bn, n, bm, bk, a.dtype, op="spmm", fmt="bcsr",
-                    shape=a.shape, impl="kernel")
+    if structure is not None:
+        # same resolve_bn inputs as below -> bit-identical tile selection
+        bn = make_plan(structure, n, cfg, dtype=a.dtype).bn
+    else:
+        bn = resolve_bn(cfg.bn, n, bm, bk, a.dtype, op="spmm", fmt="bcsr",
+                        shape=a.shape, impl="kernel")
     (b,), bn_eff, pad = pad_cols([b], n, bn)
     out = bcsr_spmm_kernel(
         a.block_rows,
@@ -78,13 +93,15 @@ def _bcsr_spmm_pallas(a: BCSR, b, cfg: OpConfig, interpret: bool):
 
 
 @register_backend("spmm/bcsr", "kernel", available=on_tpu, priority=100)
-def _bcsr_spmm_kernel(a: BCSR, b, cfg: OpConfig):
-    return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()))
+def _bcsr_spmm_kernel(a: BCSR, b, cfg: OpConfig, *, structure=None):
+    return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
+                             structure)
 
 
 @register_backend("spmm/bcsr", "kernel_interpret", priority=10)
-def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig):
-    return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True))
+def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig, *, structure=None):
+    return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True),
+                             structure)
 
 
 # ---------------------------------------------------------------------------
@@ -93,25 +110,30 @@ def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig):
 
 
 @register_backend("spmm/wcsr", "ref", priority=50)
-def _wcsr_spmm_ref(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False):
-    del pipeline_gather  # kernel-path knob; irrelevant to the jnp reference
+def _wcsr_spmm_ref(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False,
+                   structure=None):
+    del pipeline_gather, structure  # kernel-path knobs; irrelevant to jnp ref
     return wcsr_spmm_ref(a, b, out_dtype=cfg.out_dtype)
 
 
 def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
-                      pipeline_gather: bool = False):
-    if isinstance(a.window_ptr, jax.core.Tracer):
-        raise ValueError(
-            "spmm on WCSR with impl='kernel'/'kernel_interpret' derives its "
-            "static task decomposition from concrete window_ptr values, so "
-            "it cannot run under an enclosing jit/vmap trace. Call it "
-            "outside jit, or use impl='ref' (fully traceable).")
-    chunks_per_task = cfg.chunks_per_task or 8
-    t_win, t_start, t_n = make_wcsr_tasks(a, chunks_per_task)
+                      pipeline_gather: bool = False, structure=None):
+    if structure is None:
+        if isinstance(a.window_ptr, jax.core.Tracer):
+            raise ValueError(
+                "spmm on WCSR with impl='kernel'/'kernel_interpret' derives "
+                "its static task decomposition from concrete window_ptr "
+                "values, so it cannot run under an enclosing jit/vmap trace. "
+                "Call it outside jit, wrap the operand in a SparseTensor "
+                "(its static structure makes this path traceable), or use "
+                "impl='ref' (fully traceable).")
+        # ptrs-only structure: O(num_windows) per call, like the old
+        # make_wcsr_tasks loop (SparseTensor callers amortize even this)
+        structure = wcsr_planning_structure(a)
     n = b.shape[1]
-    bn = resolve_bn(cfg.bn, n, a.b_row, a.b_col, a.dtype, op="spmm",
-                    fmt="wcsr", shape=a.shape, impl="kernel")
-    (b,), bn_eff, pad = pad_cols([b], n, bn)
+    plan = make_plan(structure, n, cfg, dtype=a.dtype)
+    t_win, t_start, t_n = plan.tasks
+    (b,), bn_eff, pad = pad_cols([b], n, plan.bn)
     partial = wcsr_spmm_kernel(
         jnp.asarray(t_start),
         jnp.asarray(t_n),
@@ -121,7 +143,7 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
         b_row=a.b_row,
         b_col=a.b_col,
         bn=bn_eff,
-        chunks_per_task=chunks_per_task,
+        chunks_per_task=plan.chunks_per_task,
         out_dtype=jnp.float32,
         interpret=interpret,
         pipeline_gather=pipeline_gather,
@@ -134,13 +156,14 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
 
 
 @register_backend("spmm/wcsr", "kernel", available=on_tpu, priority=100)
-def _wcsr_spmm_kernel(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False):
+def _wcsr_spmm_kernel(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False,
+                      structure=None):
     return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
-                             pipeline_gather)
+                             pipeline_gather, structure)
 
 
 @register_backend("spmm/wcsr", "kernel_interpret", priority=10)
 def _wcsr_spmm_kernel_interpret(a: WCSR, b, cfg: OpConfig, *,
-                                pipeline_gather=False):
+                                pipeline_gather=False, structure=None):
     return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True),
-                             pipeline_gather)
+                             pipeline_gather, structure)

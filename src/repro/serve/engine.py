@@ -5,6 +5,13 @@ free slots (their prompt prefilled into the slot's cache region), decode
 steps run the whole pool every tick, finished sequences free their slots.
 This is the serving-side end-to-end driver for the paper's inference story
 (§IV-D): the FFN can be block-sparse and the prefill attention block-sparse.
+
+Sparse-op amortization: ops traced under the engine inherit its
+``op_config`` (``repro.ops`` precedence), and any host-side planning they
+trigger — §IV-C tile selection, the WCSR §III-C task decomposition — is
+memoized per ``SparseStructure`` in the ``repro.ops.make_plan`` cache, so a
+deployment plans each layer once and decodes forever. ``stats()`` surfaces
+those cache counters for serving dashboards.
 """
 
 from __future__ import annotations
@@ -124,6 +131,22 @@ class ServeEngine:
                 req.done = True
                 self.active[s] = None
                 self.pos[s] = 0  # slot reset (ring caches tolerate reuse)
+
+    def stats(self) -> dict:
+        """Serving counters + host-side planning cache state.
+
+        ``plan_cache.task_decompositions`` staying flat across ticks is the
+        amortization invariant: repeated serve steps over the same sparse
+        structures must never re-run host-side planning.
+        """
+        from repro.ops import plan_cache_info, tuning_cache_info
+
+        return {
+            "active_slots": sum(a is not None for a in self.active),
+            "free_slots": sum(a is None for a in self.active),
+            "plan_cache": plan_cache_info(),
+            "tuning_cache": tuning_cache_info(),
+        }
 
     def run(self, requests: List[Request], max_ticks: int = 10_000):
         pending = list(requests)

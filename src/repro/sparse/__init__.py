@@ -1,0 +1,53 @@
+"""``repro.sparse`` — the format-agnostic sparse-tensor layer.
+
+Built on ``repro.ops`` (which supplies execution: dispatch, config,
+auto-tiling, plan caching), this package supplies *representation*:
+
+* raw formats: ``BCSR`` / ``WCSR`` pytrees + host-side constructors
+  (``formats``);
+* the ``SparseFormat`` protocol + registry (``registry``) — per-format
+  behavior declared once, new formats plug in without touching dispatch;
+* the conversion graph — ``convert(x, "wcsr", block=...)`` routes through
+  registered edges (``convert``), and ``sparsify(dense, format=...,
+  method=...)`` prunes straight into either format (``sparsify``);
+* structure/values separation — hashable ``SparseStructure`` as the
+  planning key (``structure``), and the ``SparseTensor`` wrapper with
+  ``A @ B`` / ``.T`` / ``.astype`` / ``.to`` ergonomics (``tensor``).
+
+``repro.core.formats`` and ``repro.core.sparsify`` re-export the old names
+as deprecation shims.
+"""
+
+from repro.sparse.convert import (convert, register_conversion,
+                                  registered_conversions)
+from repro.sparse.formats import (BCSR, WCSR, bcsr_from_dense, bcsr_from_mask,
+                                  bcsr_to_dense, bcsr_transpose,
+                                  block_mask_from_dense, rcm_permutation,
+                                  wcsr_from_dense, wcsr_to_dense,
+                                  wcsr_transpose)
+from repro.sparse.registry import (SparseFormat, fill_ratio, format_name_of,
+                                   format_of, get_format,
+                                   register_sparse_format,
+                                   registered_sparse_formats)
+from repro.sparse.sparsify import (apply_block_mask, banded_block_mask,
+                                   magnitude_block_mask, random_block_mask,
+                                   sparsify)
+from repro.sparse.structure import (SparseStructure, make_wcsr_tasks,
+                                    structure_of)
+from repro.sparse.tensor import SparseTensor
+
+__all__ = [
+    # containers + constructors
+    "BCSR", "WCSR", "bcsr_from_dense", "bcsr_from_mask", "bcsr_to_dense",
+    "bcsr_transpose", "wcsr_from_dense", "wcsr_to_dense", "wcsr_transpose",
+    "block_mask_from_dense", "rcm_permutation",
+    # format registry
+    "SparseFormat", "register_sparse_format", "registered_sparse_formats",
+    "get_format", "format_of", "format_name_of", "fill_ratio",
+    # conversion + pruning
+    "convert", "register_conversion", "registered_conversions", "sparsify",
+    "apply_block_mask", "banded_block_mask", "magnitude_block_mask",
+    "random_block_mask",
+    # structure/values separation
+    "SparseStructure", "structure_of", "make_wcsr_tasks", "SparseTensor",
+]

@@ -1,0 +1,154 @@
+"""Format conversion graph: ``convert(x, "wcsr", block=...)``.
+
+Conversions are registered edges between format names; ``convert`` finds the
+shortest edge path (BFS) and applies it, so ``BCSR -> WCSR`` routes through
+the registered ``bcsr -> dense -> wcsr`` hop without a dedicated direct
+conversion. New formats plug in by registering ``dense`` edges and
+immediately become reachable from every existing format.
+
+Registered edges:
+
+    dense -> bcsr   (block=..., mask=... for an explicit block mask,
+                     pad_to=..., cover_empty_rows=...)
+    bcsr  -> dense
+    dense -> wcsr   (block=(b_row, b_col) or b_row=/b_col=, pad_cols_to=...)
+    wcsr  -> dense
+
+Keyword arguments are forwarded to the edges that accept them (by
+signature); a keyword no edge on the path accepts is an error, so typos
+don't silently vanish. ``SparseTensor`` inputs convert through their raw
+container and are re-wrapped on the way out.
+"""
+
+from __future__ import annotations
+
+import inspect
+from collections import deque
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.sparse import formats as F
+from repro.sparse.registry import format_name_of, get_format
+
+__all__ = ["register_conversion", "registered_conversions", "convert"]
+
+_EDGES: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_conversion(src: str, dst: str):
+    """Decorator: register ``fn(x, **kw)`` as the ``src -> dst`` edge."""
+
+    def deco(fn):
+        fn._accepts = frozenset(
+            p.name for p in inspect.signature(fn).parameters.values()
+            if p.kind == inspect.Parameter.KEYWORD_ONLY)
+        _EDGES[(src.lower(), dst.lower())] = fn
+        return fn
+
+    return deco
+
+
+def registered_conversions() -> List[Tuple[str, str]]:
+    return sorted(_EDGES)
+
+
+def _find_path(src: str, dst: str) -> List[Tuple[str, str]]:
+    """Shortest edge sequence from src to dst (BFS over the edge graph)."""
+    frontier = deque([(src, ())])
+    seen = {src}
+    while frontier:
+        node, path = frontier.popleft()
+        if node == dst:
+            return list(path)
+        for (a, b_) in _EDGES:
+            if a == node and b_ not in seen:
+                seen.add(b_)
+                frontier.append((b_, path + ((a, b_),)))
+    raise ValueError(
+        f"no conversion path {src!r} -> {dst!r}; registered edges: "
+        f"{registered_conversions()}")
+
+
+def convert(x, to: str, **kwargs):
+    """Convert ``x`` (dense array, raw format, or SparseTensor) to ``to``.
+
+    ``to`` is a registered format name ("dense", "bcsr", "wcsr", ...).
+    Returns the same flavor as the input: raw in -> raw out, SparseTensor
+    in -> SparseTensor out (unless ``to="dense"``, which always returns a
+    dense array).
+    """
+    from repro.sparse.tensor import SparseTensor
+
+    orig = x
+    rewrap = isinstance(x, SparseTensor)
+    if rewrap:
+        x = x.raw
+    dst = get_format(to).name  # validates the target name
+    src = format_name_of(x)
+    if src == dst:
+        if not kwargs:
+            return orig  # identity (keeps any cached SparseTensor structure)
+        # keywords request a re-pack (e.g. new block geometry): route
+        # through dense so they apply — and typos still get validated
+        path = _find_path(src, "dense") + _find_path("dense", dst)
+    else:
+        path = _find_path(src, dst)
+    consumed = set()
+    for edge in path:
+        consumed |= _EDGES[edge]._accepts
+    unknown = set(kwargs) - consumed
+    if unknown:
+        raise TypeError(
+            f"convert {src!r} -> {dst!r}: unexpected keyword(s) "
+            f"{sorted(unknown)}; path {path} accepts {sorted(consumed)}")
+    for edge in path:
+        fn = _EDGES[edge]
+        kw = {k: v for k, v in kwargs.items() if k in fn._accepts}
+        x = fn(x, **kw)
+    if rewrap and dst != "dense":
+        return SparseTensor.wrap(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Built-in edges
+# ---------------------------------------------------------------------------
+
+
+@register_conversion("dense", "bcsr")
+def _dense_to_bcsr(x, *, block=(128, 128), mask=None, pad_to=None,
+                   cover_empty_rows=True):
+    x = np.asarray(x)
+    block = tuple(block)
+    if mask is None:
+        mask = F.block_mask_from_dense(x, block)
+    else:
+        # an explicit mask defines the stored pattern: zero the rest so
+        # coverage blocks (empty block-rows) don't leak unmasked values
+        from repro.sparse.sparsify import apply_block_mask
+
+        x = apply_block_mask(x, mask, block)
+    return F.bcsr_from_mask(x, mask, block, pad_to=pad_to,
+                            cover_empty_rows=cover_empty_rows)
+
+
+@register_conversion("bcsr", "dense")
+def _bcsr_to_dense(x):
+    return F.bcsr_to_dense(x)
+
+
+@register_conversion("dense", "wcsr")
+def _dense_to_wcsr(x, *, block=None, b_row=None, b_col=None,
+                   pad_cols_to=None):
+    if block is not None:
+        b_row, b_col = block
+    b_row = 128 if b_row is None else int(b_row)
+    b_col = 8 if b_col is None else int(b_col)
+    return F.wcsr_from_dense(np.asarray(x), b_row=b_row, b_col=b_col,
+                             pad_cols_to=pad_cols_to)
+
+
+@register_conversion("wcsr", "dense")
+def _wcsr_to_dense(x):
+    return F.wcsr_to_dense(x)

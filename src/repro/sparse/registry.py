@@ -1,0 +1,159 @@
+"""The ``SparseFormat`` protocol + registry: one descriptor per format.
+
+This subsumes the scattered isinstance checks that used to live in
+``repro.ops.registry.resolve_format`` (spmm dispatch) and
+``core.formats.fill_ratio`` (stored-element counting): every per-format
+behavior — which spmm op family handles it, how to densify it, how to count
+stored values, how to extract/reattach its structure, how to transpose it —
+is declared once here, and new formats plug in with
+``register_sparse_format`` without touching any dispatch site.
+
+``"dense"`` is registered too (with ``op=None``) so the conversion graph in
+``repro.sparse.convert`` can route through it; attempting to ``spmm`` a
+dense array still raises the usual TypeError.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.sparse import formats as F
+from repro.sparse.structure import SparseStructure, structure_of
+
+__all__ = [
+    "SparseFormat",
+    "register_sparse_format",
+    "registered_sparse_formats",
+    "get_format",
+    "format_of",
+    "format_name_of",
+    "fill_ratio",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseFormat:
+    """Descriptor of one sparse format.
+
+    Attributes:
+      name:            registry key ("bcsr", "wcsr", "dense", ...).
+      fmt_type:        the pytree container class (None for dense arrays).
+      op:              spmm op family ("spmm/bcsr", ...) or None if the
+                       format cannot be a spmm operand.
+      stored_elements: raw -> number of physically stored values (incl.
+                       format padding); fill-ratio denominator (§II-C).
+      to_dense:        raw -> dense jax array.
+      structure_of:    raw -> SparseStructure (host transfer, done once).
+      values_of:       raw -> tuple of value leaves (the trainable /
+                       swappable part).
+      transpose:       raw -> raw of the same format, transposed.
+    """
+
+    name: str
+    fmt_type: Optional[type]
+    op: Optional[str] = None
+    stored_elements: Optional[Callable[[Any], int]] = None
+    to_dense: Optional[Callable] = None
+    structure_of: Optional[Callable[[Any], SparseStructure]] = None
+    values_of: Optional[Callable[[Any], tuple]] = None
+    transpose: Optional[Callable] = None
+
+
+_BY_NAME: Dict[str, SparseFormat] = {}
+_BY_TYPE: Dict[type, SparseFormat] = {}
+
+
+def register_sparse_format(fmt: SparseFormat) -> SparseFormat:
+    """Register (or replace) a format descriptor by name and by type."""
+    _BY_NAME[fmt.name] = fmt
+    if fmt.fmt_type is not None:
+        _BY_TYPE[fmt.fmt_type] = fmt
+    return fmt
+
+
+def registered_sparse_formats():
+    """Registered format names, dense last."""
+    return sorted(_BY_NAME, key=lambda n: (n == "dense", n))
+
+
+def get_format(name: str) -> SparseFormat:
+    """Look up a format descriptor by name."""
+    try:
+        return _BY_NAME[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown sparse format {name!r}; registered: "
+            f"{registered_sparse_formats()}") from None
+
+
+def _is_dense(x) -> bool:
+    return isinstance(x, (np.ndarray, jax.Array)) or np.isscalar(x)
+
+
+def format_of(x) -> SparseFormat:
+    """Descriptor for a value: raw format container, SparseTensor or array."""
+    fmt = _BY_TYPE.get(type(x))
+    if fmt is not None:
+        return fmt
+    for t, f in _BY_TYPE.items():
+        if isinstance(x, t):
+            return f
+    structure = getattr(x, "structure", None)
+    if isinstance(structure, SparseStructure):  # SparseTensor, duck-typed
+        return get_format(structure.fmt)
+    if _is_dense(x):
+        return _BY_NAME["dense"]
+    raise TypeError(
+        f"unsupported sparse format {type(x).__name__}; registered "
+        f"formats: {registered_sparse_formats()}")
+
+
+def format_name_of(x) -> str:
+    return format_of(x).name
+
+
+def fill_ratio(dense: np.ndarray, fmt) -> float:
+    """Fraction of stored values that are true nonzeros (paper §II-C)."""
+    nnz = int((np.asarray(dense) != 0).sum())
+    desc = format_of(fmt)
+    if desc.stored_elements is None:
+        raise TypeError(f"fill_ratio: format {desc.name!r} has no storage "
+                        f"accounting")
+    return nnz / max(desc.stored_elements(fmt), 1)
+
+
+# ---------------------------------------------------------------------------
+# Built-in formats
+# ---------------------------------------------------------------------------
+
+register_sparse_format(SparseFormat(
+    name="bcsr",
+    fmt_type=F.BCSR,
+    op="spmm/bcsr",
+    stored_elements=lambda a: a.nnz_blocks * a.block[0] * a.block[1],
+    to_dense=F.bcsr_to_dense,
+    structure_of=structure_of,
+    values_of=lambda a: (a.blocks,),
+    transpose=F.bcsr_transpose,
+))
+
+register_sparse_format(SparseFormat(
+    name="wcsr",
+    fmt_type=F.WCSR,
+    op="spmm/wcsr",
+    stored_elements=lambda a: a.padded_cols * a.b_row,
+    to_dense=F.wcsr_to_dense,
+    structure_of=structure_of,
+    values_of=lambda a: (a.values,),
+    transpose=F.wcsr_transpose,
+))
+
+register_sparse_format(SparseFormat(
+    name="dense",
+    fmt_type=None,  # matched structurally by format_of
+    op=None,        # spmm rejects dense operands
+))

@@ -1,0 +1,247 @@
+"""Structure/values separation: the hashable, host-side half of a sparse
+matrix.
+
+A ``SparseStructure`` captures everything about a sparse operand that is
+*static* — shape, block geometry, CSR-style pointers and index arrays — and
+none of the value data. Two tensors with the same pruning pattern share one
+structure object, so:
+
+* it is the memoization key for host-side planning
+  (``repro.ops.make_plan``): tile-width selection and the WCSR task
+  decomposition (paper §III-C) run once per structure, not once per call —
+  the per-step overhead a serving system amortizes across repeated shapes;
+* swapping values (weight updates, dtype casts) never re-plans: a
+  ``SparseTensor.astype`` / value replacement keeps the same structure
+  object;
+* it is hashable and equality-comparable by content, which also makes it
+  valid jax pytree aux data — ``SparseTensor`` flows through ``jit`` with
+  the structure as static metadata and only values as traced leaves.
+
+Index data is stored as read-only int32 numpy arrays (not boxed python
+ints) and hashed/compared through their raw bytes, so a structure costs the
+same memory as its source index arrays and hashing is one memoized C pass.
+
+The WCSR load-balancing task decomposition (formerly
+``core.formats.make_wcsr_tasks``) lives here as ``SparseStructure.tasks``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import BCSR, WCSR
+
+__all__ = ["SparseStructure", "structure_of", "wcsr_planning_structure",
+           "make_wcsr_tasks"]
+
+
+def _frozen_i32(x) -> np.ndarray:
+    a = np.ascontiguousarray(np.asarray(x, np.int32))
+    a.setflags(write=False)
+    return a
+
+
+class SparseStructure:
+    """Immutable, hashable structure of a BCSR or WCSR matrix.
+
+    Fields (all host-side, no device arrays):
+      fmt:     "bcsr" | "wcsr"
+      shape:   (m, k) of the logical dense matrix
+      block:   (b_row, b_col) block geometry
+      nnz:     bcsr: real (non-padding) stored blocks; wcsr: padded_cols
+      ptrs:    bcsr: block_row_ptr; wcsr: window_ptr (read-only i32 array)
+      indices: bcsr: (block_rows, block_cols) incl. padding entries;
+               wcsr: (col_idx,) — read-only i32 arrays
+
+    The hash covers the full content (via the arrays' bytes) and is
+    computed once; a structure is hashed on every planned op call.
+    """
+
+    __slots__ = ("fmt", "shape", "block", "nnz", "ptrs", "indices",
+                 "_hash", "_dev")
+
+    def __init__(self, fmt: str, shape: Tuple[int, int],
+                 block: Tuple[int, int], nnz: int, ptrs, indices):
+        self.fmt = str(fmt)
+        self.shape = (int(shape[0]), int(shape[1]))
+        self.block = (int(block[0]), int(block[1]))
+        self.nnz = int(nnz)
+        self.ptrs = _frozen_i32(ptrs)
+        self.indices = tuple(_frozen_i32(ix) for ix in indices)
+        self._hash = None
+        self._dev = None  # memoized device index arrays
+
+    # -- identity ----------------------------------------------------------
+    def _key(self):
+        return (self.fmt, self.shape, self.block, self.nnz,
+                self.ptrs.tobytes(),
+                tuple(ix.tobytes() for ix in self.indices))
+
+    def __eq__(self, other):
+        if not isinstance(other, SparseStructure):
+            return NotImplemented
+        return self._key() == other._key()
+
+    def __hash__(self):
+        if self._hash is None:
+            self._hash = hash(self._key())
+        return self._hash
+
+    def __repr__(self):
+        return (f"SparseStructure(fmt={self.fmt!r}, shape={self.shape}, "
+                f"block={self.block}, nnz={self.nnz})")
+
+    # -- derived geometry --------------------------------------------------
+    @property
+    def stored_elements(self) -> int:
+        """Values physically stored (incl. format padding) — fill-ratio
+        denominator (paper §II-C)."""
+        if self.fmt == "bcsr":
+            return self.nnz * self.block[0] * self.block[1]
+        return self.nnz * self.block[0]  # wcsr: padded_cols * b_row
+
+    @property
+    def density(self) -> float:
+        m, k = self.shape
+        return self.stored_elements / (m * k)
+
+    @property
+    def num_windows(self) -> int:
+        return self.shape[0] // self.block[0]
+
+    # -- device index arrays (memoized uploads) ----------------------------
+    def index_arrays(self) -> Dict[str, jax.Array]:
+        """The structure's index arrays as device arrays, uploaded once."""
+        if self._dev is None:
+            if self.fmt == "bcsr":
+                rows, cols = self.indices
+                self._dev = {
+                    "block_rows": jnp.asarray(rows),
+                    "block_cols": jnp.asarray(cols),
+                    "block_row_ptr": jnp.asarray(self.ptrs),
+                }
+            elif self.fmt == "wcsr":
+                (col_idx,) = self.indices
+                self._dev = {
+                    "col_idx": jnp.asarray(col_idx),
+                    "window_ptr": jnp.asarray(self.ptrs),
+                }
+            else:
+                raise ValueError(f"unknown structure format {self.fmt!r}")
+        return self._dev
+
+    # -- raw-format reconstruction -----------------------------------------
+    def attach_values(self, *data) -> "BCSR | WCSR":
+        """Rebuild the raw format container from this structure + values."""
+        ix = self.index_arrays()
+        if self.fmt == "bcsr":
+            (blocks,) = data
+            return BCSR(
+                blocks=blocks,
+                block_rows=ix["block_rows"],
+                block_cols=ix["block_cols"],
+                block_row_ptr=ix["block_row_ptr"],
+                shape=self.shape,
+                block=self.block,
+                nnz_blocks=self.nnz,
+            )
+        (values,) = data
+        return WCSR(
+            values=values,
+            col_idx=ix["col_idx"],
+            window_ptr=ix["window_ptr"],
+            shape=self.shape,
+            b_row=self.block[0],
+            b_col=self.block[1],
+            padded_cols=self.nnz,
+        )
+
+    # -- WCSR task decomposition (paper §III-C) ----------------------------
+    def tasks(self, chunks_per_task: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Split windows into fixed-size sub-tasks (§III-C load balancing).
+
+        Each task covers up to ``chunks_per_task`` packed-column chunks of
+        ``b_col`` columns within one window. Empty windows simply emit no
+        task (the kernel's zero-initialized output covers them). Returns
+        (task_window, task_chunk_start, task_nchunks) host arrays.
+
+        This is the expensive host-side planning step; callers go through
+        ``repro.ops.make_plan`` so it runs once per structure.
+        """
+        if self.fmt != "wcsr":
+            raise ValueError(f"tasks(): not a wcsr structure ({self.fmt!r})")
+        b_col = self.block[1]
+        ptr = self.ptrs
+        t_win, t_start, t_n = [], [], []
+        for w in range(len(ptr) - 1):
+            c0, c1 = int(ptr[w]), int(ptr[w + 1])
+            nchunks = (c1 - c0) // b_col
+            g = 0
+            while g < nchunks:
+                take = min(chunks_per_task, nchunks - g)
+                t_win.append(w)
+                t_start.append(c0 // b_col + g)
+                t_n.append(take)
+                g += take
+        if not t_win:  # fully-empty matrix: one no-op task keeps grids non-empty
+            t_win, t_start, t_n = [0], [0], [0]
+        return (
+            np.asarray(t_win, np.int32),
+            np.asarray(t_start, np.int32),
+            np.asarray(t_n, np.int32),
+        )
+
+
+def structure_of(x) -> SparseStructure:
+    """Extract the ``SparseStructure`` of a raw BCSR / WCSR (host transfer).
+
+    ``SparseTensor`` carries its structure; this is the one-time extraction
+    used when wrapping a raw format.
+    """
+    if isinstance(x, BCSR):
+        return SparseStructure(
+            fmt="bcsr", shape=x.shape, block=x.block, nnz=x.nnz_blocks,
+            ptrs=jax.device_get(x.block_row_ptr),
+            indices=(jax.device_get(x.block_rows),
+                     jax.device_get(x.block_cols)),
+        )
+    if isinstance(x, WCSR):
+        return SparseStructure(
+            fmt="wcsr", shape=x.shape, block=(x.b_row, x.b_col),
+            nnz=x.padded_cols,
+            ptrs=jax.device_get(x.window_ptr),
+            indices=(jax.device_get(x.col_idx),),
+        )
+    structure = getattr(x, "structure", None)
+    if isinstance(structure, SparseStructure):
+        return structure
+    raise TypeError(f"structure_of: unsupported type {type(x).__name__}")
+
+
+def wcsr_planning_structure(a: WCSR) -> SparseStructure:
+    """Ptrs-only structure for planning a *raw* WCSR call.
+
+    Task decomposition and tile selection only need ``window_ptr`` and the
+    geometry, so the per-call cost is O(num_windows) — the same order as
+    the old ``make_wcsr_tasks`` loop — instead of pulling the full
+    ``col_idx`` to the host. (``SparseTensor`` operands skip even this:
+    their full structure is extracted once at wrap time.)
+    """
+    return SparseStructure(
+        fmt="wcsr", shape=a.shape, block=(a.b_row, a.b_col),
+        nnz=a.padded_cols, ptrs=jax.device_get(a.window_ptr), indices=((),))
+
+
+def make_wcsr_tasks(a, chunks_per_task: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Task decomposition for a raw WCSR (compat wrapper).
+
+    Prefer ``repro.ops.make_plan`` — it memoizes the decomposition per
+    structure; this wrapper re-derives it from ``window_ptr`` every call.
+    """
+    return wcsr_planning_structure(a).tasks(chunks_per_task)

@@ -1,0 +1,147 @@
+"""``SparseTensor`` — the format-agnostic sparse operand.
+
+One wrapper over the co-designed formats with array-API ergonomics::
+
+    st = repro.sparse.sparsify(w, format="bcsr", sparsity=0.9, block=(64, 64))
+    y = st @ x                     # routes into repro.ops.spmm (OpConfig
+                                   # precedence applies: use_config / env)
+    st.T, st.astype(jnp.bfloat16), st.density, st.fill_ratio(w)
+    st.to("wcsr", block=(64, 8))   # conversion graph
+
+Structure/values separation is the point: ``st.structure`` is a hashable
+``SparseStructure`` shared across value swaps (weight updates, dtype casts),
+so host-side planning (``repro.ops.make_plan``) memoizes per layer — serving
+plans once and decodes forever. ``SparseTensor`` is a registered pytree with
+*only the values as leaves*; under ``jit`` the structure rides along as
+static aux data, which also makes the WCSR kernel path traceable (its task
+decomposition comes from the concrete structure, not from a traced
+``window_ptr``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.sparse.registry import fill_ratio as _fill_ratio
+from repro.sparse.registry import format_of
+from repro.sparse.structure import SparseStructure
+
+__all__ = ["SparseTensor"]
+
+
+class SparseTensor:
+    """structure: static ``SparseStructure``; data: tuple of value leaves."""
+
+    __slots__ = ("structure", "data", "_raw")
+
+    def __init__(self, structure: SparseStructure, data):
+        self.structure = structure
+        self.data = tuple(data)
+        self._raw = None
+
+    @classmethod
+    def wrap(cls, raw) -> "SparseTensor":
+        """Wrap a raw BCSR/WCSR container (one-time structure extraction)."""
+        if isinstance(raw, SparseTensor):
+            return raw
+        desc = format_of(raw)
+        if desc.structure_of is None or desc.values_of is None:
+            raise TypeError(
+                f"SparseTensor.wrap: format {desc.name!r} does not support "
+                "structure/values separation")
+        st = cls(desc.structure_of(raw), desc.values_of(raw))
+        st._raw = raw
+        return st
+
+    @classmethod
+    def from_dense(cls, dense, format: str = "bcsr", **kw) -> "SparseTensor":
+        """Convert a dense matrix and wrap it: ``from_dense(d, "wcsr", block=...)``."""
+        from repro.sparse.convert import convert
+
+        return cls.wrap(convert(dense, format, **kw))
+
+    # -- views -------------------------------------------------------------
+    @property
+    def raw(self):
+        """The raw format container (rebuilt lazily after pytree round-trips)."""
+        if self._raw is None:
+            self._raw = self.structure.attach_values(*self.data)
+        return self._raw
+
+    @property
+    def format(self) -> str:
+        return self.structure.fmt
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.structure.shape
+
+    @property
+    def block(self) -> Tuple[int, int]:
+        return self.structure.block
+
+    @property
+    def dtype(self):
+        return self.data[0].dtype
+
+    @property
+    def density(self) -> float:
+        """Stored fraction of the logical dense matrix (incl. padding)."""
+        return self.structure.density
+
+    def fill_ratio(self, dense) -> float:
+        """Fraction of stored values that are true nonzeros of ``dense``."""
+        return _fill_ratio(dense, self.raw)
+
+    # -- transforms --------------------------------------------------------
+    def with_values(self, *data) -> "SparseTensor":
+        """Same structure, new value leaves — never re-plans."""
+        return SparseTensor(self.structure, data)
+
+    def astype(self, dtype) -> "SparseTensor":
+        return self.with_values(*(x.astype(dtype) for x in self.data))
+
+    @property
+    def T(self) -> "SparseTensor":
+        desc = format_of(self.raw)
+        if desc.transpose is None:
+            raise TypeError(f"format {desc.name!r} has no transpose")
+        return SparseTensor.wrap(desc.transpose(self.raw))
+
+    def to(self, format: str, **kw) -> "SparseTensor":
+        """Convert through the registered conversion graph."""
+        from repro.sparse.convert import convert
+
+        return convert(self, format, **kw)
+
+    def todense(self) -> jax.Array:
+        from repro.sparse.convert import convert
+
+        return convert(self.raw, "dense")
+
+    # -- ops ---------------------------------------------------------------
+    def __matmul__(self, b) -> jax.Array:
+        """``self @ B`` via ``repro.ops.spmm`` (ambient OpConfig applies)."""
+        from repro.ops import spmm
+
+        return spmm(self, b)
+
+    def matmul(self, b, **kw) -> jax.Array:
+        """``spmm`` with per-call keyword overrides (impl=, bn=, ...)."""
+        from repro.ops import spmm
+
+        return spmm(self, b, **kw)
+
+    def __repr__(self):
+        return (f"SparseTensor({self.format}, shape={self.shape}, "
+                f"block={self.block}, dtype={self.dtype}, "
+                f"density={self.density:.4f})")
+
+
+jax.tree_util.register_pytree_node(
+    SparseTensor,
+    lambda st: (st.data, st.structure),
+    lambda structure, data: SparseTensor(structure, data),
+)

@@ -1,18 +1,20 @@
-"""Format round-trips + hypothesis property tests on the core invariants."""
+"""Format round-trips + hypothesis property tests on the core invariants,
+now through the ``repro.sparse`` layer (conversion graph, transposes, the
+structure-side task decomposition)."""
+
+import warnings
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.formats import (
-    BCSR, WCSR, bcsr_from_dense, bcsr_from_mask, bcsr_to_dense,
-    bcsr_transpose, block_mask_from_dense, fill_ratio, make_wcsr_tasks,
-    rcm_permutation, wcsr_from_dense, wcsr_to_dense,
-)
-from repro.core.sparsify import (
-    apply_block_mask, banded_block_mask, magnitude_block_mask,
-    random_block_mask,
+from repro.sparse import (
+    BCSR, WCSR, SparseStructure, apply_block_mask, banded_block_mask,
+    bcsr_from_dense, bcsr_from_mask, bcsr_to_dense, bcsr_transpose,
+    block_mask_from_dense, convert, fill_ratio, magnitude_block_mask,
+    make_wcsr_tasks, random_block_mask, rcm_permutation, structure_of,
+    wcsr_from_dense, wcsr_to_dense, wcsr_transpose,
 )
 
 
@@ -53,6 +55,33 @@ def test_wcsr_roundtrip(rng):
     assert w.padded_cols % 8 == 0
 
 
+def test_wcsr_transpose(rng):
+    d = rng.normal(size=(96, 160)).astype(np.float32)
+    d *= rng.random(d.shape) > 0.9
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    wt = wcsr_transpose(w)
+    assert wt.shape == (160, 96)
+    assert np.allclose(np.asarray(wcsr_to_dense(wt)), d.T)
+
+
+def test_wcsr_transpose_involution(rng):
+    d = rng.normal(size=(64, 64)).astype(np.float32)
+    d *= rng.random(d.shape) > 0.85
+    w = wcsr_from_dense(d, b_row=16, b_col=8)
+    wtt = wcsr_transpose(wcsr_transpose(w))
+    assert np.array_equal(np.asarray(wcsr_to_dense(wtt)), d)
+
+
+def test_wcsr_transpose_non_divisible_raises(rng):
+    d = rng.normal(size=(32, 40)).astype(np.float32)  # k=40, b_row=32
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    with pytest.raises(ValueError, match="not divisible"):
+        wcsr_transpose(w)
+    # an explicit transposed window height that divides k works
+    wt = wcsr_transpose(w, b_row=8)
+    assert np.allclose(np.asarray(wcsr_to_dense(wt)), np.asarray(d).T)
+
+
 def test_fill_ratio_ordering(rng):
     """WCSR is never less compact than BCSR for scattered sparsity."""
     d = rng.normal(size=(128, 256)).astype(np.float32)
@@ -60,6 +89,11 @@ def test_fill_ratio_ordering(rng):
     a = bcsr_from_dense(d, (32, 32), pad_to=None)
     w = wcsr_from_dense(d, b_row=32, b_col=8)
     assert fill_ratio(d, w) >= fill_ratio(d, a) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# WCSR task decomposition (now on SparseStructure)
+# ---------------------------------------------------------------------------
 
 
 def test_wcsr_tasks_cover_all_chunks(rng):
@@ -75,6 +109,86 @@ def test_wcsr_tasks_cover_all_chunks(rng):
             for c in range(ptr[wi], ptr[wi + 1])}
     assert covered == want
     assert all(n <= 3 for n in t_n)
+
+
+def test_wcsr_tasks_empty_window(rng):
+    """A window with no nonzero columns emits no task (zero-init covers it)."""
+    d = np.zeros((96, 64), np.float32)
+    d[:32] = rng.normal(size=(32, 64))   # window 0 dense
+    d[64:] = rng.normal(size=(32, 64))   # window 2 dense; window 1 empty
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    t_win, t_start, t_n = make_wcsr_tasks(w, chunks_per_task=4)
+    assert 1 not in set(t_win.tolist())
+    assert set(t_win.tolist()) == {0, 2}
+    assert (t_n > 0).all()
+    # and tasks from the structure are identical to the compat wrapper's
+    s = structure_of(w)
+    got = s.tasks(4)
+    for a_, b_ in zip(got, (t_win, t_start, t_n)):
+        assert np.array_equal(a_, b_)
+
+
+def test_wcsr_tasks_fully_empty_matrix():
+    """A fully-empty matrix yields the single no-op task (non-empty grid)."""
+    w = wcsr_from_dense(np.zeros((64, 64), np.float32), b_row=32, b_col=8)
+    t_win, t_start, t_n = make_wcsr_tasks(w, chunks_per_task=2)
+    assert t_win.tolist() == [0]
+    assert t_start.tolist() == [0]
+    assert t_n.tolist() == [0]
+
+
+# ---------------------------------------------------------------------------
+# Conversion graph round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_convert_roundtrip_both_formats(rng):
+    d = _sparse_dense(rng, 64, 96, 16, 16, 0.5)
+    for fmt, kw in (("bcsr", {"block": (16, 16)}),
+                    ("wcsr", {"block": (16, 8)})):
+        back = np.asarray(convert(convert(d, fmt, **kw), "dense"))
+        assert np.array_equal(back, d), fmt
+
+
+def test_convert_cross_format_via_dense_hop(rng):
+    d = _sparse_dense(rng, 64, 64, 16, 16, 0.6)
+    a = convert(d, "bcsr", block=(16, 16))
+    w = convert(a, "wcsr", block=(16, 8))
+    assert isinstance(w, WCSR)
+    assert np.array_equal(np.asarray(wcsr_to_dense(w)), d)
+    a2 = convert(w, "bcsr", block=(16, 16))
+    assert isinstance(a2, BCSR)
+    assert np.array_equal(np.asarray(bcsr_to_dense(a2)), d)
+
+
+def test_convert_mask_edge(rng):
+    d = rng.normal(size=(64, 64)).astype(np.float32)
+    mask = np.zeros((4, 4), bool)
+    mask[0, 0] = mask[2, 3] = True
+    a = convert(d, "bcsr", block=(16, 16), mask=mask)
+    want = apply_block_mask(d, mask, (16, 16))
+    assert np.allclose(np.asarray(bcsr_to_dense(a)), want)
+
+
+def test_convert_rejects_unknown_kwargs_and_formats(rng):
+    d = rng.normal(size=(32, 32)).astype(np.float32)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        convert(d, "bcsr", blokc=(16, 16))
+    with pytest.raises(ValueError, match="unknown sparse format"):
+        convert(d, "csr5")
+
+
+def test_convert_non_divisible_raises(rng):
+    d = rng.normal(size=(48, 40)).astype(np.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        convert(d, "bcsr", block=(32, 32))
+    with pytest.raises(ValueError, match="not divisible"):
+        convert(d, "wcsr", block=(32, 8))
+
+
+# ---------------------------------------------------------------------------
+# Misc invariants (masks, RCM)
+# ---------------------------------------------------------------------------
 
 
 def test_rcm_reduces_bandwidth():
@@ -102,6 +216,38 @@ def test_banded_mask_shape():
     m = banded_block_mask((128, 128), (32, 32), bandwidth_blocks=1)
     assert m.shape == (4, 4)
     assert m[0, 0] and not m[0, 3]
+
+
+# ---------------------------------------------------------------------------
+# Deprecated core.formats / core.sparsify shims
+# ---------------------------------------------------------------------------
+
+
+def test_core_formats_shims_warn_and_forward(rng):
+    from repro.core import formats as old_formats
+    from repro.core import sparsify as old_sparsify
+
+    assert old_formats.BCSR is BCSR  # same pytree classes, no wrapping
+    assert old_formats.WCSR is WCSR
+    d = _sparse_dense(rng, 64, 64, 16, 16, 0.5)
+    with pytest.warns(DeprecationWarning, match="repro.sparse"):
+        a_old = old_formats.bcsr_from_dense(d, (16, 16))
+    a_new = bcsr_from_dense(d, (16, 16))
+    assert np.array_equal(np.asarray(a_old.blocks), np.asarray(a_new.blocks))
+    with pytest.warns(DeprecationWarning):
+        old_a = old_sparsify.sparsify_to_bcsr(d, (16, 16), 0.5, seed=3)
+    from repro.sparse import sparsify
+    new_a = sparsify(d, format="bcsr", block=(16, 16), sparsity=0.5,
+                     seed=3).raw
+    assert np.array_equal(np.asarray(old_a.blocks), np.asarray(new_a.blocks))
+    with pytest.warns(DeprecationWarning):
+        old_w = old_sparsify.sparsify_to_wcsr(d, 16, 8, 0.5, method="random")
+    assert isinstance(old_w, WCSR)
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
 
 
 @settings(max_examples=15, deadline=None)
@@ -136,3 +282,54 @@ def test_property_wcsr_roundtrip(wb, k, density, seed):
     # every real packed column has a valid source column
     ci = np.asarray(w.col_idx)
     assert ((ci >= -1) & (ci < k)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mb=st.integers(1, 4), kb=st.integers(1, 4),
+    bm=st.sampled_from([8, 16]), bk=st.sampled_from([8, 16]),
+    sparsity=st.floats(0.0, 1.0), seed=st.integers(0, 100),
+)
+def test_property_convert_roundtrip_equals_masked_dense(mb, kb, bm, bk,
+                                                        sparsity, seed):
+    """convert(convert(x, fmt), "dense") recovers the block-masked dense
+    exactly, for both formats (satellite: conversion-graph round-trip)."""
+    rng = np.random.default_rng(seed)
+    d0 = rng.normal(size=(mb * bm, kb * bk)).astype(np.float32)
+    mask = random_block_mask(d0.shape, (bm, bk), sparsity, seed=seed,
+                             ensure_row_nonempty=False)
+    d = apply_block_mask(d0, mask, (bm, bk))
+    for fmt, kw in (("bcsr", {"block": (bm, bk)}),
+                    ("wcsr", {"block": (bm, 8)})):
+        back = np.asarray(convert(convert(d, fmt, **kw), "dense"))
+        assert np.array_equal(back, d), fmt
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mb=st.integers(1, 3), kb=st.integers(1, 3),
+    sparsity=st.floats(0.0, 0.9), seed=st.integers(0, 100),
+)
+def test_property_bcsr_transpose_involution(mb, kb, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    d = _sparse_dense(rng, mb * 16, kb * 16, 16, 16, sparsity)
+    a = bcsr_from_dense(d, (16, 16))
+    att = bcsr_transpose(bcsr_transpose(a))
+    assert att.shape == a.shape and att.block == a.block
+    assert np.array_equal(np.asarray(bcsr_to_dense(att)), d)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    wb=st.integers(1, 3), kb=st.integers(1, 3),
+    density=st.floats(0.0, 0.6), seed=st.integers(0, 100),
+)
+def test_property_wcsr_transpose(wb, kb, density, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(wb * 16, kb * 16)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    w = wcsr_from_dense(d, b_row=16, b_col=8)
+    wt = wcsr_transpose(w, b_row=16)
+    assert np.array_equal(np.asarray(wcsr_to_dense(wt)), d.T)
+    wtt = wcsr_transpose(wt, b_row=16)
+    assert np.array_equal(np.asarray(wcsr_to_dense(wtt)), d)

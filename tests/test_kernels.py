@@ -8,8 +8,8 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.formats import bcsr_from_dense, wcsr_from_dense
-from repro.core.sparsify import apply_block_mask, random_block_mask
+from repro.sparse import (apply_block_mask, bcsr_from_dense,
+                          random_block_mask, wcsr_from_dense)
 from repro.kernels.bcsr.kernel import run_bcsr_spmm
 from repro.kernels.bcsr.ref import bcsr_spmm_ref, bcsr_spmm_dense_ref
 from repro.kernels.sddmm.ops import sddmm

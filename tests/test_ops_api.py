@@ -1,18 +1,20 @@
 """Unified ``repro.ops`` API: format dispatch, config layering, env-var
 precedence, auto-tiling + tuning cache, and deprecation-shim forwarding."""
 
+import warnings
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 import repro.ops as ops
-from repro.core.formats import BCSR, bcsr_from_dense, wcsr_from_dense
 from repro.kernels.bcsr.ref import bcsr_spmm_ref
 from repro.kernels.sddmm.ref import sddmm_ref
 from repro.kernels.wcsr.ref import wcsr_spmm_ref
 from repro.ops import (OpConfig, auto_bn, clear_tuning_cache, current_config,
                        sddmm, spmm, tuning_cache_info, use_config)
+from repro.sparse import BCSR, bcsr_from_dense, wcsr_from_dense
 
 
 def _mats(rng, m=128, k=128, n=96, density=0.3):
@@ -282,3 +284,29 @@ def test_old_structure_imports_still_work():
 
     assert BCSRStructure is ops.BCSRStructure
     assert structure_of is ops.structure_of
+
+
+def test_shim_warnings_point_at_caller(rng):
+    """Every kernels/*/ops.py shim warns with stacklevel=2, so the reported
+    frame is the *caller's* file — not the shim module (the BCSR shim used
+    to differ from the other three)."""
+    _, a, w, b = _mats(rng)
+    from repro.kernels.bcsr.ops import bcsr_spmm
+    from repro.kernels.sddmm.ops import sddmm as old_sddmm
+    from repro.kernels.wcsr.ops import wcsr_spmm
+
+    dc = jnp.asarray(rng.normal(size=(128, 96)).astype(np.float32))
+    calls = [
+        lambda: bcsr_spmm(a, b, impl="ref"),
+        lambda: wcsr_spmm(w, b, impl="ref"),
+        lambda: old_sddmm(dc, b, a, impl="ref"),
+    ]
+    for call in calls:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            call()
+        dep = [r for r in rec if issubclass(r.category, DeprecationWarning)
+               and "deprecated" in str(r.message)]
+        assert dep, "no DeprecationWarning emitted"
+        assert dep[0].filename == __file__, (
+            f"warning points at {dep[0].filename}, not the caller")

@@ -1,0 +1,291 @@
+"""The ``repro.sparse`` layer: SparseTensor ergonomics, the SparseFormat
+registry, structure/values separation, and cached execution plans
+(``repro.ops.make_plan``)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.ops as ops
+from repro.sparse import (
+    BCSR, WCSR, SparseStructure, SparseTensor, apply_block_mask, convert,
+    format_of, get_format, random_block_mask, registered_sparse_formats,
+    sparsify, structure_of, wcsr_from_dense,
+)
+
+
+def _mats(rng, m=128, k=128, n=96, density=0.3):
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    sa = SparseTensor.from_dense(d, "bcsr", block=(32, 32))
+    sw = SparseTensor.from_dense(d, "wcsr", block=(32, 8))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    return d, sa, sw, b
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: __matmul__ == spmm bit-for-bit under every available backend
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_matches_spmm_bitwise_every_backend(rng):
+    d, sa, sw, b = _mats(rng)
+    for st in (sa, sw):
+        raw = st.raw
+        backends = ops.available_backends(f"spmm/{st.format}")
+        assert backends, st.format
+        for impl in backends:
+            with ops.use_config(impl=impl):
+                got = np.asarray(st @ b)
+            want = np.asarray(ops.spmm(raw, b, impl=impl))
+            assert np.array_equal(got, want), (st.format, impl)
+            # per-call override form too
+            got2 = np.asarray(st.matmul(b, impl=impl))
+            assert np.array_equal(got2, want), (st.format, impl)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: make_plan decomposes tasks once per structure across steps
+# ---------------------------------------------------------------------------
+
+
+def test_make_plan_task_decomposition_once_across_serve_steps(rng):
+    _, _, sw, b = _mats(rng)
+    ops.clear_plan_cache()
+    for _ in range(6):  # repeated serve steps, same layer
+        sw.matmul(b, impl="kernel_interpret")
+    info = ops.plan_cache_info()
+    assert info.task_decompositions == 1
+    assert info.misses == 1 and info.hits == 5
+
+    # value swaps (weight update) and dtype casts share the structure ->
+    # never re-derive the task decomposition
+    sw_updated = sw.with_values(sw.data[0] * 2.0)
+    sw_cast = sw.astype(jnp.bfloat16)
+    assert sw_updated.structure is sw.structure
+    assert sw_cast.structure is sw.structure
+    sw_updated.matmul(b, impl="kernel_interpret")
+    sw_cast.matmul(b.astype(jnp.bfloat16), impl="kernel_interpret")
+    assert ops.plan_cache_info().task_decompositions == 1
+
+    # a different structure does plan again
+    d2 = np.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    d2 *= np.asarray(rng.random(d2.shape) < 0.2)
+    sw2 = SparseTensor.from_dense(d2, "wcsr", block=(32, 8))
+    sw2.matmul(b, impl="kernel_interpret")
+    assert ops.plan_cache_info().task_decompositions == 2
+
+
+def test_make_plan_inspectable(rng):
+    _, sa, sw, b = _mats(rng)
+    pa = ops.make_plan(sa, b.shape[1], dtype=sa.dtype)
+    assert pa.tasks is None and pa.bn > 0
+    pw = ops.make_plan(sw.structure, b.shape[1], dtype=sw.dtype)
+    assert pw.num_tasks == len(pw.tasks[0]) > 0
+    with pytest.raises(TypeError, match="SparseStructure"):
+        ops.make_plan(np.zeros((4, 4)), 8)
+
+
+def test_make_plan_infers_tensor_dtype(rng):
+    """make_plan(SparseTensor, n) keys on the tensor's value dtype, so the
+    inspectable plan is the one the matmul actually executed with."""
+    _, _, sw, b = _mats(rng)
+    ops.clear_plan_cache()
+    sw.matmul(b, impl="kernel_interpret")  # plans with float32 values
+    assert ops.plan_cache_info().misses == 1
+    ops.make_plan(sw, b.shape[1])  # dtype inferred -> cache hit, no re-plan
+    info = ops.plan_cache_info()
+    assert info.hits == 1 and info.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# Structure/values separation
+# ---------------------------------------------------------------------------
+
+
+def test_structure_hashable_and_content_equal(rng):
+    d, sa, sw, _ = _mats(rng)
+    s1 = structure_of(sa.raw)
+    assert s1 == sa.structure and hash(s1) == hash(sa.structure)
+    assert s1 != sw.structure
+    # usable as dict key
+    cache = {sa.structure: "a", sw.structure: "w"}
+    assert cache[s1] == "a"
+
+
+def test_attach_values_roundtrip(rng):
+    d, sa, sw, _ = _mats(rng)
+    for st, cls in ((sa, BCSR), (sw, WCSR)):
+        rebuilt = st.structure.attach_values(*st.data)
+        assert isinstance(rebuilt, cls)
+        assert np.array_equal(np.asarray(st.todense()),
+                              np.asarray(SparseTensor.wrap(rebuilt).todense()))
+
+
+def test_pytree_roundtrip_and_jit(rng):
+    d, sa, sw, b = _mats(rng)
+    leaves, treedef = jax.tree_util.tree_flatten(sa)
+    assert len(leaves) == 1  # values only; structure is static aux data
+    sa2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert sa2.structure is sa.structure
+
+    f = jax.jit(lambda t, x: ops.spmm(t, x, impl="ref"))
+    np.testing.assert_allclose(np.asarray(f(sa, b)),
+                               np.asarray(sa.matmul(b, impl="ref")),
+                               atol=1e-5)
+    # the WCSR *kernel* path is traceable through SparseTensor: the task
+    # decomposition comes from the static structure, not a traced window_ptr
+    g = jax.jit(lambda t, x: ops.spmm(t, x, impl="kernel_interpret"))
+    np.testing.assert_allclose(
+        np.asarray(g(sw, b)),
+        np.asarray(sw.matmul(b, impl="kernel_interpret")), atol=1e-5)
+    # ... while a raw WCSR under jit still raises the clear error
+    with pytest.raises(ValueError, match="SparseTensor"):
+        jax.jit(lambda w_, x: ops.spmm(w_, x, impl="kernel_interpret"))(
+            sw.raw, b)
+
+
+# ---------------------------------------------------------------------------
+# SparseTensor ergonomics
+# ---------------------------------------------------------------------------
+
+
+def test_tensor_properties_and_transpose(rng):
+    d, sa, sw, _ = _mats(rng)
+    assert sa.format == "bcsr" and sw.format == "wcsr"
+    assert sa.shape == d.shape and sw.shape == d.shape
+    assert 0 < sa.density <= 1.0
+    assert sa.fill_ratio(d) <= 1.0 + 1e-9
+    at = sa.T
+    assert at.shape == (d.shape[1], d.shape[0])
+    assert np.allclose(np.asarray(at.todense()), d.T)
+    wt = sw.T
+    assert np.allclose(np.asarray(wt.todense()), d.T)
+
+
+def test_tensor_to_conversion(rng):
+    d, sa, _, _ = _mats(rng)
+    sw = sa.to("wcsr", block=(32, 8))
+    assert isinstance(sw, SparseTensor) and sw.format == "wcsr"
+    assert np.allclose(np.asarray(sw.todense()), d)
+    assert sa.to("bcsr") is sa  # same-format convert is the identity
+
+
+def test_same_format_convert_with_kwargs_reblocks(rng):
+    d, sa, _, _ = _mats(rng)
+    rb = sa.to("bcsr", block=(64, 64))  # re-pack through the dense hop
+    assert rb is not sa and rb.block == (64, 64)
+    assert np.array_equal(np.asarray(rb.todense()), np.asarray(sa.todense()))
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        sa.to("bcsr", blokc=(64, 64))  # typos never silently no-op
+
+
+def test_astype_same_structure_new_dtype(rng):
+    _, sa, _, _ = _mats(rng)
+    sb = sa.astype(jnp.bfloat16)
+    assert sb.dtype == jnp.bfloat16
+    assert sb.structure is sa.structure
+    assert sa.dtype == jnp.float32  # original untouched
+
+
+def test_sparsify_returns_tensor_both_formats(rng):
+    w = rng.normal(size=(128, 64)).astype(np.float32)
+    a = sparsify(w, format="bcsr", block=(32, 32), sparsity=0.75)
+    # 25% of 8 blocks kept (+ zero coverage blocks for empty block-rows)
+    assert a.format == "bcsr" and 2 <= a.raw.nnz_blocks <= 4
+    assert a.fill_ratio(np.asarray(a.todense())) <= 1.0 + 1e-9
+    ww = sparsify(w, format="wcsr", block=(32, 8), sparsity=0.9,
+                  method="random", seed=1)
+    assert ww.format == "wcsr"
+    band = sparsify(w, format="bcsr", block=(32, 32), method="banded",
+                    bandwidth_blocks=0)
+    assert band.raw.nnz_blocks >= 4
+    with pytest.raises(ValueError, match="unknown format"):
+        sparsify(w, format="csr5", sparsity=0.5)
+
+
+def test_sparse_linear_from_sparse_tensor(rng):
+    from repro.core.sparse_linear import (SparseLinear, SparseLinearSpec,
+                                          sparse_linear_from_dense)
+
+    w = rng.normal(size=(128, 64)).astype(np.float32)
+    layer = sparse_linear_from_dense(
+        w, SparseLinearSpec(64, 128, sparsity=0.5, block=(32, 32)))
+    st = layer.to_sparse()
+    assert st.format == "bcsr"
+    layer2 = SparseLinear.from_sparse(st)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    with ops.use_config(impl="ref"):
+        np.testing.assert_allclose(np.asarray(layer(x)),
+                                   np.asarray(layer2(x)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SparseFormat registry
+# ---------------------------------------------------------------------------
+
+
+def test_format_registry_lookup(rng):
+    d, sa, sw, _ = _mats(rng)
+    assert format_of(sa.raw).name == "bcsr"
+    assert format_of(sw).name == "wcsr"  # SparseTensor via its structure
+    assert format_of(d).name == "dense"
+    assert {"bcsr", "wcsr", "dense"} <= set(registered_sparse_formats())
+    with pytest.raises(ValueError, match="unknown sparse format"):
+        get_format("csr5")
+    with pytest.raises(TypeError, match="unsupported sparse format"):
+        format_of(object())
+
+
+def test_spmm_dispatch_via_registry_rejects_dense(rng):
+    with pytest.raises(TypeError, match="unsupported sparse format"):
+        ops.spmm(np.zeros((4, 4)), jnp.zeros((4, 4)))
+
+
+def test_register_format_compat_hook(rng):
+    """ops.register_format still plugs a new type into spmm dispatch."""
+    from repro.sparse import registry as sreg
+
+    class FakeFmt:
+        pass
+
+    calls = []
+
+    @ops.register_backend("spmm/fake", "only")
+    def _fake_backend(a, b, cfg):
+        calls.append(a)
+        return jnp.zeros((1, 1))
+
+    try:
+        ops.register_format(FakeFmt, "spmm/fake")
+        ops.spmm(FakeFmt(), jnp.zeros((4, 4)), impl="only")
+        assert len(calls) == 1
+    finally:
+        from repro.ops import registry as oreg
+        oreg._BACKENDS.pop("spmm/fake", None)
+        sreg._BY_NAME.pop("fakefmt", None)
+        sreg._BY_TYPE.pop(FakeFmt, None)
+
+
+def test_serve_engine_stats_exposes_plan_cache():
+    from repro.serve.engine import ServeEngine
+
+    stats_keys = {"active_slots", "free_slots", "plan_cache", "tuning_cache"}
+    # a minimal engine over a stub model (stats() must not require traffic)
+    class _Cache:
+        kv = ssm = prev1 = prev2 = None
+
+    class _Model:
+        cfg = None
+
+        def init_decode_cache(self, slots, max_len):
+            return _Cache()
+
+        def decode_step(self, p, c, tok, pos):
+            return jnp.zeros((tok.shape[0], 4)), c
+
+    eng = ServeEngine(_Model(), params={}, slots=2, max_len=8)
+    s = eng.stats()
+    assert stats_keys <= set(s)
+    assert s["free_slots"] == 2

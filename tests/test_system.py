@@ -125,8 +125,8 @@ def test_sparse_ffn_training_reduces_loss(rng):
 
 def test_paper_trend_sparsity_reduces_work(rng):
     """Table III trend: stored-block count (kernel work) drops with sparsity."""
-    from repro.core.formats import bcsr_from_dense
-    from repro.core.sparsify import apply_block_mask, random_block_mask
+    from repro.sparse import (apply_block_mask, bcsr_from_dense,
+                              random_block_mask)
 
     m, k = 512, 256
     work = []
