@@ -1,0 +1,98 @@
+"""Multi-device SpMM scaling smoke: sharded vs single-device on a host mesh.
+
+Device count must be fixed before jax initializes, so the measurement runs
+in a child process launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the parent (the
+``benchmarks/run.py`` harness) only parses its CSV. On a CPU container the
+"devices" are host threads sharing one socket, so ``us_per_call`` is a
+plumbing smoke (does the sharded path run, does it stay numerically sane),
+not a speedup claim — the ``derived`` column reports the partitioner's
+worst/mean shard-balance ratio, which *is* meaningful at any scale.
+
+Standalone: ``python benchmarks/dist_scaling.py`` (add ``--devices 8`` or
+``--smoke``).
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+_SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+_DEVICES = 4
+
+
+def _child() -> None:
+    """Runs inside the forced multi-device process; prints CSV rows."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import suite_matrix, time_call
+
+    from repro.ops import make_partition, spmm
+    from repro.sparse import SparseTensor
+
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("data",))
+    m, k, n = (256, 256, 64) if _SMOKE else (1024, 1024, 256)
+    d = suite_matrix("powerlaw", m, k, 0.05, seed=0)
+    b = jnp.asarray(np.random.default_rng(1).normal(size=(k, n)),
+                    jnp.float32)
+    for fmt, block in [("bcsr", (32, 32)), ("wcsr", (32, 8))]:
+        st = SparseTensor.from_dense(d, fmt, block=block)
+        ratio = make_partition(st.structure, ndev).balance()["ratio"]
+        f1 = jax.jit(lambda x: spmm(st, x))
+        us1 = time_call(f1, b)
+        sst = st.shard(mesh, "data")
+        fs = jax.jit(lambda x: spmm(sst, x))
+        uss = time_call(fs, b)
+        # sanity: the two paths agree before either time means anything
+        np.testing.assert_allclose(np.asarray(fs(b)), np.asarray(f1(b)),
+                                   atol=2e-3, rtol=1e-3)
+        print(f"dist/{fmt}/single,{us1:.1f},devices=1")
+        print(f"dist/{fmt}/sharded_x{ndev},{uss:.1f},"
+              f"balance_ratio={ratio:.3f}")
+
+
+def run(rows) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_DEVICES}")
+    if _SMOKE:
+        env["REPRO_BENCH_SMOKE"] = "1"
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(repo / "src"), env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    p = subprocess.run(
+        [sys.executable, __file__, "--child"],
+        capture_output=True, text=True, env=env, timeout=900)
+    if p.returncode != 0:
+        raise RuntimeError(
+            f"dist_scaling child failed:\n{p.stdout}\n{p.stderr}")
+    for line in p.stdout.splitlines():
+        if line.startswith("dist/"):
+            name, us, derived = line.split(",", 2)
+            rows.append((name, float(us), derived))
+
+
+def main() -> None:
+    global _SMOKE, _DEVICES
+    if "--smoke" in sys.argv:
+        _SMOKE = True
+    if "--devices" in sys.argv:
+        _DEVICES = int(sys.argv[sys.argv.index("--devices") + 1])
+    if "--child" in sys.argv:
+        _child()
+        return
+    rows = []
+    run(rows)
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

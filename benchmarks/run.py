@@ -21,8 +21,9 @@ def main() -> None:
         # suite constants) are imported below
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     only = args[0] if args else None
-    from benchmarks import (fig7_tilewidth, fig8_prefill, table1_suitesparse,
-                            table2_ablation, table3_gateproj)
+    from benchmarks import (dist_scaling, fig7_tilewidth, fig8_prefill,
+                            table1_suitesparse, table2_ablation,
+                            table3_gateproj)
 
     modules = {
         "table1": table1_suitesparse,
@@ -30,6 +31,8 @@ def main() -> None:
         "table3": table3_gateproj,
         "fig7": fig7_tilewidth,
         "fig8": fig8_prefill,
+        # multi-device scaling smoke (forced host mesh in a child process)
+        "dist": dist_scaling,
     }
     rows = [("name", "us_per_call", "derived")]
     for name, mod in modules.items():

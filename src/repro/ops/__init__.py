@@ -22,7 +22,47 @@ Tile widths default to ``bn="auto"`` (paper §IV-C selection), memoized in
 a per-process tuning cache keyed by (op, format, shape, dtype, impl).
 ``make_plan(structure, n, cfg)`` memoizes all host-side planning (tile
 selection + the WCSR §III-C task decomposition) per ``SparseStructure`` —
-serving plans once per layer and swaps values freely.
+serving plans once per layer and swaps values freely. ``make_partition``
+does the same for the mesh-scale shard split (``repro.parallel.sparse``).
+
+Exported symbols (one-liners; see each docstring for the full story):
+
+**Ops** — every entry point accepts call-site keyword overrides
+(``impl=``, ``bn=``, ...) that win over the ambient config:
+
+* ``spmm(a, b)`` — sparse @ dense for any registered format:
+  ``spmm(a_bcsr, x)``; sharded operands run multi-device.
+* ``sddmm(dc, b, a_struct)`` — sampled dense-dense matmul onto a block
+  structure: ``sddmm(grad_c, b, a)`` (training backward).
+* ``sparse_attention(q, k, v, block_mask)`` — block-sparse prefill
+  attention over a CSR-encoded block mask.
+* ``bcsr_matmul(values, b, structure)`` — differentiable SpMM; values
+  carry gradients via SDDMM + transposed-SpMM ``custom_vjp``.
+* ``local_bcsr_matmul_t(values, x, structure)`` — shard-local transposed
+  SpMM used inside ``shard_map`` model code.
+* ``csr_encode_block_mask(mask)`` — boolean block mask -> CSR arrays for
+  ``sparse_attention``.
+
+**Structure** — ``BCSRStructure`` (static host-side block layout) and
+``structure_of(a)`` (extract it from a BCSR: ``s = structure_of(a)``).
+
+**Config** — ``OpConfig`` (frozen knob bag), ``use_config(impl=...)``
+(ambient context: ``with use_config(impl="ref"): ...``),
+``current_config()`` / ``resolved_config(**kw)`` (layered resolution),
+``ENV_IMPL_VAR`` (the ``REPRO_SPARSE_IMPL`` env-var name).
+
+**Registry** — ``register_backend(op, name)`` (decorator:
+``@register_backend("spmm/bcsr", "ref")``), ``register_format(type, op)``,
+``resolve_backend(op, impl)``, ``resolve_format(a)``,
+``available_backends(op)`` / ``registered_backends(op)`` (introspection).
+
+**Planning + tiling** — ``Plan`` / ``make_plan(structure, n)`` (memoized
+host-side plan: ``make_plan(st.structure, n).bn``), ``make_partition(
+structure, num_shards)`` (memoized mesh shard split),
+``plan_cache_info()`` / ``clear_plan_cache()`` (counters),
+``partition_balance_report()`` (per-partition shard-load stats),
+``auto_bn(n)`` / ``resolve_bn(bn, n, ...)`` (§IV-C tile width),
+``tuning_cache_info()`` / ``clear_tuning_cache()``.
 """
 
 from repro.ops.attention import csr_encode_block_mask, sparse_attention
@@ -30,7 +70,8 @@ from repro.ops.config import (ENV_IMPL_VAR, OpConfig, current_config,
                               resolve_interpret, resolved_config, use_config)
 from repro.ops.matmul import (BCSRStructure, bcsr_matmul,
                               local_bcsr_matmul_t, structure_of)
-from repro.ops.plan import (Plan, clear_plan_cache, make_plan,
+from repro.ops.plan import (Plan, clear_plan_cache, make_partition,
+                            make_plan, partition_balance_report,
                             plan_cache_info)
 from repro.ops.registry import (available_backends, register_backend,
                                 register_format, registered_backends,
@@ -53,6 +94,7 @@ __all__ = [
     "register_backend", "register_format", "resolve_backend",
     "resolve_format", "available_backends", "registered_backends",
     # planning + tiling
-    "Plan", "make_plan", "plan_cache_info", "clear_plan_cache",
+    "Plan", "make_plan", "make_partition", "plan_cache_info",
+    "partition_balance_report", "clear_plan_cache",
     "auto_bn", "resolve_bn", "tuning_cache_info", "clear_tuning_cache",
 ]

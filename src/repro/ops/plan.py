@@ -14,8 +14,15 @@ the task decomposition has its own cache keyed only by
 serving system handling repeated shapes must amortize (the Acc-SpMM /
 cuTeSpMM preprocess-once pattern).
 
-``plan_cache_info()`` exposes hit/miss counters plus the number of task
-decompositions actually performed, so tests can prove planning runs once.
+``make_partition(structure, num_shards)`` extends the same contract to the
+mesh scale: the structure-aware shard split
+(``repro.parallel.sparse.partition_structure``) is memoized per
+(structure, num_shards), so sharded serving partitions each layer once and
+swaps values forever.
+
+``plan_cache_info()`` exposes hit/miss counters (plans, task
+decompositions, partitions), so tests can prove planning runs once;
+``partition_balance_report()`` lists per-shard load stats for dashboards.
 """
 
 from __future__ import annotations
@@ -30,8 +37,8 @@ from repro.ops.config import OpConfig, current_config
 from repro.ops.tiling import resolve_bn
 from repro.sparse.structure import SparseStructure
 
-__all__ = ["Plan", "make_plan", "plan_cache_info", "clear_plan_cache",
-           "PlanCacheInfo"]
+__all__ = ["Plan", "make_plan", "make_partition", "plan_cache_info",
+           "clear_plan_cache", "partition_balance_report", "PlanCacheInfo"]
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -55,28 +62,53 @@ class PlanCacheInfo:
     misses: int
     task_decompositions: int
     size: int
+    partition_hits: int = 0
+    partition_misses: int = 0
+    partitions: int = 0
 
 
 _PLANS: dict = {}
 _TASKS: dict = {}
+_PARTITIONS: dict = {}
 _HITS = 0
 _MISSES = 0
 _DECOMPOSITIONS = 0
+_P_HITS = 0
+_P_MISSES = 0
 
 
 def clear_plan_cache() -> None:
-    global _HITS, _MISSES, _DECOMPOSITIONS
+    """Drop all cached plans, task splits and partitions; zero counters."""
+    global _HITS, _MISSES, _DECOMPOSITIONS, _P_HITS, _P_MISSES
     _PLANS.clear()
     _TASKS.clear()
+    _PARTITIONS.clear()
     _HITS = 0
     _MISSES = 0
     _DECOMPOSITIONS = 0
+    _P_HITS = 0
+    _P_MISSES = 0
 
 
 def plan_cache_info() -> PlanCacheInfo:
+    """Hit/miss/size counters for the plan, task and partition caches."""
     return PlanCacheInfo(hits=_HITS, misses=_MISSES,
                          task_decompositions=_DECOMPOSITIONS,
-                         size=len(_PLANS))
+                         size=len(_PLANS),
+                         partition_hits=_P_HITS, partition_misses=_P_MISSES,
+                         partitions=len(_PARTITIONS))
+
+
+def _as_structure(structure, caller: str) -> SparseStructure:
+    """Unwrap a ``SparseStructure`` carrier (``SparseTensor`` & co.)."""
+    if isinstance(structure, SparseStructure):
+        return structure
+    inner = getattr(structure, "structure", None)
+    if not isinstance(inner, SparseStructure):
+        raise TypeError(
+            f"{caller}: expected SparseStructure (or SparseTensor), "
+            f"got {type(structure).__name__}")
+    return inner
 
 
 def _tasks_for(structure: SparseStructure, chunks_per_task: int):
@@ -105,11 +137,7 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     """
     global _HITS, _MISSES
     if not isinstance(structure, SparseStructure):
-        inner = getattr(structure, "structure", None)
-        if not isinstance(inner, SparseStructure):
-            raise TypeError(
-                f"make_plan: expected SparseStructure (or SparseTensor), "
-                f"got {type(structure).__name__}")
+        inner = _as_structure(structure, "make_plan")
         if dtype is None:
             dtype = getattr(structure, "dtype", None)
         structure = inner
@@ -131,3 +159,38 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
                 tasks=tasks)
     _PLANS[key] = plan
     return plan
+
+
+def make_partition(structure, num_shards: int):
+    """Build (or fetch) the device-mesh partition of ``structure``.
+
+    The mesh-scale sibling of ``make_plan``: the structure-aware
+    partitioner (``repro.parallel.sparse.partition_structure``) runs once
+    per (structure, num_shards) and the resulting ``SparsePartition`` is
+    reused across value swaps, dtype casts and every subsequent sharded
+    spmm call — serving partitions each layer once. ``structure`` may be a
+    ``SparseStructure`` or anything carrying one (``SparseTensor``).
+    """
+    global _P_HITS, _P_MISSES
+    structure = _as_structure(structure, "make_partition")
+    key = (structure, int(num_shards))
+    part = _PARTITIONS.get(key)
+    if part is not None:
+        _P_HITS += 1
+        return part
+    _P_MISSES += 1
+    from repro.parallel.sparse import partition_structure
+
+    part = partition_structure(structure, int(num_shards))
+    _PARTITIONS[key] = part
+    return part
+
+
+def partition_balance_report() -> list:
+    """Shard-balance dicts for every cached partition (serving dashboards).
+
+    Each entry is ``SparsePartition.balance()``: per-shard stored-element
+    loads plus the worst/mean ratio — flat counters here across serve ticks
+    are the mesh-scale amortization invariant.
+    """
+    return [p.balance() for p in _PARTITIONS.values()]

@@ -94,6 +94,7 @@ def available_backends(op: str) -> List[str]:
 
 
 def registered_backends(op: str) -> List[str]:
+    """All backend names registered for ``op``, available or not."""
     return sorted(_BACKENDS.get(op, {}))
 
 

@@ -13,9 +13,18 @@ hits the ``make_plan`` cache — planned once per layer, reused every step.
 Because that structure is concrete static metadata, a ``SparseTensor`` also
 makes the WCSR kernel path traceable under ``jit`` (raw WCSR operands still
 raise: their ``window_ptr`` would be a tracer).
+
+Multi-device: a ``repro.parallel.sparse.ShardedSparseTensor`` operand
+dispatches to the ``"spmm/sharded"`` op family (local kernels per device +
+collective combine), and inside a ``use_sparse_mesh(mesh)`` scope plain
+``SparseTensor`` operands are auto-sharded over the active mesh — the
+partition comes from the ``make_partition`` cache, so repeated calls pay
+the structure-aware partitioner once.
 """
 
 from __future__ import annotations
+
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -49,11 +58,31 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
                           chunks_per_task=chunks_per_task,
                           interpret=interpret)
     if isinstance(a, SparseTensor):
+        a = _maybe_autoshard(a)
+    if isinstance(a, SparseTensor):
         extras.setdefault("structure", a.structure)
         a = a.raw
     op = resolve_format(a)
     backend = resolve_backend(op, cfg.impl)
     return backend.fn(a, b, cfg, **extras)
+
+
+def _maybe_autoshard(a: SparseTensor):
+    """Shard ``a`` over the active ``use_sparse_mesh`` mesh, if any.
+
+    The sparse-mesh context lives in ``repro.parallel.sparse``; if that
+    module was never imported no context can be active, so the
+    ``sys.modules`` probe keeps ``repro.ops`` free of a hard dependency on
+    the parallel layer.
+    """
+    ps = sys.modules.get("repro.parallel.sparse")
+    if ps is None:
+        return a
+    ctx = ps.current_sparse_mesh()
+    if ctx is None:
+        return a
+    mesh, axis = ctx
+    return a.shard(mesh, axis)
 
 
 # ---------------------------------------------------------------------------

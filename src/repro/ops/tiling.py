@@ -39,6 +39,7 @@ _MISSES = 0
 
 
 def clear_tuning_cache() -> None:
+    """Drop all memoized §IV-C tile selections; zero the counters."""
     global _HITS, _MISSES
     _CACHE.clear()
     _HITS = 0
@@ -46,6 +47,7 @@ def clear_tuning_cache() -> None:
 
 
 def tuning_cache_info() -> TuningCacheInfo:
+    """Hit/miss/size counters for the §IV-C tile-selection cache."""
     return TuningCacheInfo(hits=_HITS, misses=_MISSES, size=len(_CACHE))
 
 

@@ -1,0 +1,14 @@
+"""``repro.parallel`` — mesh-scale distribution (see docs/architecture.md).
+
+Submodules (imported explicitly; this package has no re-exports so that
+importing one layer never drags in another's jax state):
+
+* ``repro.parallel.sharding`` — logical-axis -> mesh-axis rules and
+  ``NamedSharding`` construction for params, batches and sparse operands.
+* ``repro.parallel.collectives`` — explicit shard_map collectives:
+  hierarchical psum, bf16/int8 compressed reductions.
+* ``repro.parallel.pipeline`` — GPipe-style pipeline parallelism.
+* ``repro.parallel.sparse`` — structure-aware sharded SpMM: the
+  nonzero-balanced partitioner, ``ShardedSparseTensor``,
+  ``use_sparse_mesh`` and the shard_map spmm path.
+"""

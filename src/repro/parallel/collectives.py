@@ -1,5 +1,8 @@
 """Explicit collectives for shard_map contexts: hierarchical and compressed
-gradient reduction (DESIGN.md §6 distributed-optimization tricks).
+gradient reduction (distributed-optimization tricks; see
+docs/architecture.md, parallel layer). The sharded SpMM path
+(``repro.parallel.sparse``) combines its partial outputs through these as
+well (``reduce="bf16"`` -> ``compressed_psum_bf16``).
 
 * ``hierarchical_psum``    — reduce-scatter inside the pod, all-reduce across
                              pods, all-gather back in-pod: crosses the (slow)

@@ -6,7 +6,8 @@ stages the schedule runs M + S - 1 ticks (bubble fraction (S-1)/(M+S-1)).
 Autodiff flows through ppermute, so the same schedule trains.
 
 This is the optional PP layout: the production default keeps the pod axis as
-data-parallel (DESIGN.md §6); ``launch/train.py --pipeline`` and the tests
+data-parallel (see docs/architecture.md, parallel layer);
+``launch/train.py --pipeline`` and the tests
 exercise this module.
 """
 

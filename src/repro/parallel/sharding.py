@@ -7,10 +7,18 @@ Logical axes used by the model zoo (models/*/ *_axes functions):
   embed          : d_model dim                   -> None, or "data" under FSDP
   fsdp           : explicit FSDP dim for big tensors -> "data" under FSDP
   layers / expert_lead / seq : never sharded by default
+  sparse_shard   : leading shard dim of stacked sparse-operand slices
+                   (repro.parallel.sparse) -> "data"
 
 FSDP (ZeRO-3-ish): parameters additionally sharded over the data axis on
 their non-TP dim; GSPMD inserts the all-gathers in forward/backward and the
-reduce-scatters on gradients. Used for the >=80B archs (DESIGN.md §6).
+reduce-scatters on gradients. Used for the >=80B archs (see
+docs/architecture.md, parallel layer).
+
+Sparse operands: a ``ShardedSparseTensor`` stacks its per-shard value /
+index slices on a leading shard dim; ``sparse_operand_sharding`` is the
+placement rule for those leaves (shard dim over one mesh axis, everything
+else replicated) — the sparse analogue of ``param_shardings``.
 """
 
 from __future__ import annotations
@@ -22,7 +30,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import logical_to_pspec
 
-__all__ = ["make_rules", "param_shardings", "batch_shardings", "make_mesh_rules"]
+__all__ = ["make_rules", "param_shardings", "batch_shardings",
+           "make_mesh_rules", "sparse_operand_sharding",
+           "sparse_operand_shardings"]
 
 
 def make_rules(multi_pod: bool, fsdp: bool = False,
@@ -47,6 +57,8 @@ def make_rules(multi_pod: bool, fsdp: bool = False,
         "seq_sp": "model",
         # flash-decoding-style: KV-cache sequence dim over model
         "kv_seq": "model",
+        # stacked per-device sparse-operand shards (repro.parallel.sparse)
+        "sparse_shard": "data",
     }
     return rules
 
@@ -118,3 +130,23 @@ def batch_shardings(mesh, batch_spec, rules):
 def make_mesh_rules(mesh, fsdp: bool = False, seq_shard: bool = False):
     multi_pod = "pod" in mesh.axis_names
     return make_rules(multi_pod, fsdp=fsdp, seq_shard=seq_shard)
+
+
+def sparse_operand_sharding(mesh, axis: str = "data") -> NamedSharding:
+    """Placement for one stacked sparse-operand leaf: shard dim 0 on ``axis``.
+
+    The ``sparse_shard`` logical-axis rule as a concrete ``NamedSharding``:
+    a ``ShardedSparseTensor``'s stacked value/index arrays carry their
+    per-device slices on the leading dim, which maps to exactly one mesh
+    axis; all trailing dims are replicated.
+    """
+    if axis not in mesh.shape:
+        raise ValueError(f"sparse_operand_sharding: axis {axis!r} not in "
+                         f"mesh axes {tuple(mesh.axis_names)}")
+    return NamedSharding(mesh, P(axis))
+
+
+def sparse_operand_shardings(mesh, sharded, axis: Optional[str] = None):
+    """Sharding tuple for a ``ShardedSparseTensor``'s data leaves."""
+    sh = sparse_operand_sharding(mesh, axis or sharded.axis)
+    return tuple(sh for _ in sharded.data)

@@ -1,0 +1,594 @@
+"""``repro.parallel.sparse`` — structure-aware sharded SpMM over a mesh.
+
+The paper's WCSR kernel wins on irregular sparsity by splitting large
+row-windows across thread blocks so every block carries the same amount of
+nonzero work (§III-C). This module applies the same principle one level up:
+distributing one SpMM across a device mesh, partitioned **by stored nonzero
+work, not by row count** (the merge-based balancing of Yang et al. and the
+workload-aware split of Acc-SpMM, at mesh scale).
+
+Three pieces:
+
+* ``partition_structure(structure, num_shards)`` — the structure-aware
+  partitioner. WCSR is split at packed-column-chunk granularity (a giant
+  window splits across devices, exactly like the paper's intra-GPU task
+  split); BCSR at stored-block granularity. Split boundaries snap to
+  window / block-row starts when the snap costs less than ``snap_tol`` of a
+  mean shard, so shards stay row-aligned whenever balance allows — giving a
+  worst-shard guarantee of ``<= (1 + 2*snap_tol) * mean + one work unit``
+  stored elements (a chunk of ``b_row*b_col`` values for WCSR, one block
+  for BCSR). The unit term only matters when a layer has so little stored
+  work that units per shard are single digits — there the partition is
+  still optimal for integral units, but the *ratio* can exceed 1.5 (one
+  chunk over four devices is a ratio of 4 by definition).
+  Partitions are memoized per structure via ``repro.ops.make_partition``
+  (the plan-cache contract: partition once, swap values freely).
+
+* ``ShardedSparseTensor`` / ``SparseTensor.shard(mesh, axis)`` — the
+  device-sharded operand: per-shard value slices stacked on a leading shard
+  dim and placed along one mesh axis; per-shard index arrays ride along as
+  partition metadata (uploaded once).
+
+* the sharded ``spmm`` path — ``repro.ops.spmm`` dispatches here for
+  sharded operands (and auto-shards plain ``SparseTensor`` operands inside
+  a ``use_sparse_mesh(...)`` scope). Each device runs the existing local
+  kernel (BCSR block-streaming / WCSR window-gather, same backends and
+  §IV-C tile selection) on its shard's partial problem, and partial outputs
+  are combined with ``repro.parallel.collectives`` (plain ``psum`` or the
+  bf16-compressed variant)::
+
+      mesh = jax.make_mesh((4,), ("data",))
+      sst = st.shard(mesh, "data")        # partitioned by nonzero work
+      y = repro.ops.spmm(sst, b)          # == st @ b, computed on 4 devices
+
+      with use_sparse_mesh(mesh):         # or flip a whole model/engine
+          y = st @ b                      # auto-sharded, partition cached
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.kernels.bcsr.kernel import bcsr_spmm_kernel
+from repro.kernels.bcsr.ref import bcsr_spmm_ref
+from repro.kernels.wcsr.kernel import wcsr_spmm_kernel
+from repro.kernels.wcsr.ref import wcsr_spmm_ref
+from repro.ops.config import OpConfig, resolve_interpret
+from repro.ops.plan import make_partition, make_plan
+from repro.ops.registry import on_tpu, register_backend, resolve_backend
+from repro.ops.tiling import pad_cols, resolve_bn, unpad_cols
+from repro.parallel.collectives import compressed_psum_bf16
+from repro.sparse.formats import BCSR, WCSR
+from repro.sparse.structure import SparseStructure
+from repro.sparse.tensor import SparseTensor
+
+__all__ = [
+    "SparsePartition",
+    "partition_structure",
+    "ShardedSparseTensor",
+    "shard_tensor",
+    "use_sparse_mesh",
+    "current_sparse_mesh",
+    "sharded_spmm",
+]
+
+
+# ---------------------------------------------------------------------------
+# Structure-aware partitioner
+# ---------------------------------------------------------------------------
+
+
+def _balanced_boundaries(total: int, num_shards: int, snap: np.ndarray,
+                         snap_tol: float) -> np.ndarray:
+    """Contiguous split of ``total`` uniform work units into ``num_shards``.
+
+    Ideal boundaries land every ``total / num_shards`` units; each one snaps
+    to the nearest value in ``snap`` (window / block-row starts) if that
+    moves it by at most ``snap_tol`` mean shards. Boundaries are forced
+    non-decreasing, so empty shards are possible (tiny matrices) but never
+    mis-ordered.
+    """
+    mean = total / max(num_shards, 1)
+    tol = snap_tol * mean
+    snap = np.unique(np.asarray(snap, np.int64))
+    bounds = np.zeros(num_shards + 1, np.int64)
+    bounds[-1] = total
+    for i in range(1, num_shards):
+        ideal = round(i * mean)
+        j = int(np.searchsorted(snap, ideal))
+        cands = [c for c in (snap[j - 1] if j > 0 else None,
+                             snap[j] if j < len(snap) else None)
+                 if c is not None]
+        best = min(cands, key=lambda c: abs(c - ideal)) if cands else ideal
+        bounds[i] = best if abs(best - ideal) <= tol else ideal
+        bounds[i] = min(max(bounds[i], bounds[i - 1]), total)
+    return bounds
+
+
+class SparsePartition:
+    """Per-device shards of one ``SparseStructure``, balanced by stored work.
+
+    Immutable; identity is (structure, num_shards) — the memoization key of
+    ``repro.ops.make_partition``. Holds the per-shard ``SparseStructure``
+    list (each a valid local structure over the full logical shape, so the
+    existing ``make_plan`` cache plans each shard once) plus the stacked
+    index arrays the sharded kernels consume (uploaded to device once).
+    """
+
+    __slots__ = ("structure", "num_shards", "bounds", "shards", "_dev")
+
+    def __init__(self, structure: SparseStructure, num_shards: int,
+                 bounds: np.ndarray, shards: List[SparseStructure]):
+        self.structure = structure
+        self.num_shards = int(num_shards)
+        self.bounds = bounds
+        self.shards = tuple(shards)
+        self._dev = None
+
+    def __eq__(self, other):
+        if not isinstance(other, SparsePartition):
+            return NotImplemented
+        return (self.structure, self.num_shards) == (other.structure,
+                                                     other.num_shards)
+
+    def __hash__(self):
+        return hash((self.structure, self.num_shards))
+
+    def __repr__(self):
+        b = self.balance()
+        return (f"SparsePartition({self.structure.fmt}, "
+                f"shards={self.num_shards}, ratio={b['ratio']:.3f})")
+
+    # -- balance accounting -------------------------------------------------
+    @property
+    def stored_per_shard(self) -> List[int]:
+        """Stored elements (incl. format padding) carried by each shard."""
+        return [s.stored_elements for s in self.shards]
+
+    def balance(self) -> Dict[str, object]:
+        """Worst/mean shard-load report (``serve.engine.stats()`` surface)."""
+        stored = self.stored_per_shard
+        mean = sum(stored) / max(len(stored), 1)
+        return {
+            "fmt": self.structure.fmt,
+            "shape": self.structure.shape,
+            "num_shards": self.num_shards,
+            "stored_per_shard": stored,
+            "mean_stored": mean,
+            "max_stored": max(stored) if stored else 0,
+            "ratio": (max(stored) / mean) if mean else 1.0,
+        }
+
+    # -- padded sizes (uniform across shards: SPMD needs one program) -------
+    @property
+    def _shard_units(self) -> List[Tuple[int, int]]:
+        """Per-shard (start, end) in stored units (chunks*b_col or blocks)."""
+        scale = self.structure.block[1] if self.structure.fmt == "wcsr" else 1
+        return [(int(self.bounds[s]) * scale, int(self.bounds[s + 1]) * scale)
+                for s in range(self.num_shards)]
+
+    @property
+    def padded_size(self) -> int:
+        """Common padded per-shard extent (packed cols / stored blocks)."""
+        sizes = [e - s for s, e in self._shard_units]
+        floor = self.structure.block[1] if self.structure.fmt == "wcsr" else 1
+        return max(max(sizes, default=0), floor)
+
+    # -- stacked device index arrays (uploaded once) ------------------------
+    def index_arrays(self) -> Dict[str, jax.Array]:
+        """Stacked per-shard index arrays, leading dim = num_shards.
+
+        Memoized only when built eagerly; under an enclosing trace the
+        arrays become traced constants, which must not outlive the trace.
+        """
+        if self._dev is not None:
+            return self._dev
+        arrs = {k: jnp.asarray(v) for k, v in self._host_index_arrays().items()}
+        if not any(isinstance(a, jax.core.Tracer) for a in arrs.values()):
+            self._dev = arrs
+        return arrs
+
+    def _host_index_arrays(self) -> Dict[str, np.ndarray]:
+        g = self.structure
+        size = self.padded_size
+        if g.fmt == "wcsr":
+            ci = np.full((self.num_shards, size), -1, np.int32)
+            wp = np.zeros((self.num_shards, len(g.ptrs)), np.int32)
+            for s, (c0, c1) in enumerate(self._shard_units):
+                ci[s, : c1 - c0] = g.indices[0][c0:c1]
+                wp[s] = np.clip(g.ptrs, c0, c1) - c0
+            return {"col_idx": ci, "window_ptr": wp}
+        else:
+            m_blocks = g.shape[0] // g.block[0]
+            rows = np.zeros((self.num_shards, size), np.int32)
+            cols = np.zeros((self.num_shards, size), np.int32)
+            ptr = np.zeros((self.num_shards, m_blocks + 1), np.int32)
+            mask = np.zeros((self.num_shards, g.shape[0]), bool)
+            for s, (s0, s1) in enumerate(self._shard_units):
+                r = g.indices[0][s0:s1]
+                rows[s, : s1 - s0] = r
+                # padding repeats the last covered block-row (same scheme as
+                # bcsr_from_mask: the kernel revisits an already-open tile)
+                rows[s, s1 - s0:] = r[-1] if len(r) else 0
+                cols[s, : s1 - s0] = g.indices[1][s0:s1]
+                ptr[s] = np.clip(g.ptrs, s0, s1) - s0
+                cover = np.zeros(m_blocks, bool)
+                if len(r):
+                    cover[np.unique(r)] = True
+                mask[s] = np.repeat(cover, g.block[0])
+            return {"block_rows": rows, "block_cols": cols,
+                    "block_row_ptr": ptr, "row_mask": mask}
+
+    # -- value slicing ------------------------------------------------------
+    def stack_values(self, data: Tuple[jax.Array, ...]) -> Tuple[jax.Array, ...]:
+        """Slice global value leaves into stacked per-shard leaves.
+
+        Slice offsets are static (from the structure), so this traces under
+        ``jit`` — value swaps inside a compiled step re-slice for free.
+        """
+        size = self.padded_size
+        if self.structure.fmt == "wcsr":
+            (values,) = data  # [b_row, C]
+            parts = []
+            for c0, c1 in self._shard_units:
+                v = values[:, c0:c1]
+                parts.append(jnp.pad(v, ((0, 0), (0, size - (c1 - c0)))))
+            return (jnp.stack(parts),)
+        (blocks,) = data  # [nnz_padded, bm, bk]; slice only real blocks
+        parts = []
+        for s0, s1 in self._shard_units:
+            v = blocks[s0:s1]
+            parts.append(jnp.pad(v, ((0, size - (s1 - s0)), (0, 0), (0, 0))))
+        return (jnp.stack(parts),)
+
+
+def partition_structure(structure: SparseStructure, num_shards: int, *,
+                        snap_tol: float = 0.2) -> SparsePartition:
+    """Split a ``SparseStructure`` into ``num_shards`` balanced shards.
+
+    WCSR: 1D row-window partition at packed-column-chunk granularity —
+    contiguous chunk ranges of near-equal stored work, so a single giant
+    window splits across devices (the paper's §III-C split at mesh scale)
+    and empty windows cost nothing. BCSR: block-row partition at stored-
+    block granularity, boundaries snapped to block-row starts when balance
+    allows. Every shard keeps the full logical ``shape``; shards therefore
+    produce *partial* outputs that the sharded spmm path sums.
+
+    Prefer ``repro.ops.make_partition`` — it memoizes this per
+    (structure, num_shards), the same once-per-structure contract as
+    ``make_plan``.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    g = structure
+    if g.fmt == "wcsr":
+        b_col = g.block[1]
+        total_chunks = g.nnz // b_col
+        snap = np.asarray(g.ptrs, np.int64) // b_col
+        bounds = _balanced_boundaries(total_chunks, num_shards, snap, snap_tol)
+        shards = []
+        for s in range(num_shards):
+            c0, c1 = int(bounds[s]) * b_col, int(bounds[s + 1]) * b_col
+            shards.append(SparseStructure(
+                fmt="wcsr", shape=g.shape, block=g.block, nnz=c1 - c0,
+                ptrs=np.clip(g.ptrs, c0, c1) - c0,
+                indices=(g.indices[0][c0:c1],)))
+    elif g.fmt == "bcsr":
+        total = g.nnz  # real (non-padding) stored blocks
+        bounds = _balanced_boundaries(total, num_shards,
+                                      np.asarray(g.ptrs, np.int64), snap_tol)
+        shards = []
+        for s in range(num_shards):
+            s0, s1 = int(bounds[s]), int(bounds[s + 1])
+            shards.append(SparseStructure(
+                fmt="bcsr", shape=g.shape, block=g.block, nnz=s1 - s0,
+                ptrs=np.clip(g.ptrs, s0, s1) - s0,
+                indices=(g.indices[0][s0:s1], g.indices[1][s0:s1])))
+    else:
+        raise ValueError(
+            f"partition_structure: unsupported format {g.fmt!r}")
+    return SparsePartition(g, num_shards, bounds, shards)
+
+
+# ---------------------------------------------------------------------------
+# Sharded operand + mesh context
+# ---------------------------------------------------------------------------
+
+
+class ShardedSparseTensor:
+    """A ``SparseTensor`` distributed over one mesh axis by stored work.
+
+    ``data`` holds the per-shard value slices stacked on a leading shard
+    dim (the only pytree leaves); structure, partition, mesh and axis ride
+    along as static aux data, so a sharded operand flows through ``jit``
+    exactly like a ``SparseTensor`` does. Built via
+    ``SparseTensor.shard(mesh, axis)``.
+    """
+
+    __slots__ = ("structure", "partition", "mesh", "axis", "data")
+
+    def __init__(self, structure: SparseStructure, partition: SparsePartition,
+                 mesh, axis: str, data):
+        self.structure = structure
+        self.partition = partition
+        self.mesh = mesh
+        self.axis = str(axis)
+        self.data = tuple(data)
+
+    @property
+    def format(self) -> str:
+        return self.structure.fmt
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.structure.shape
+
+    @property
+    def block(self) -> Tuple[int, int]:
+        return self.structure.block
+
+    @property
+    def dtype(self):
+        return self.data[0].dtype
+
+    @property
+    def num_shards(self) -> int:
+        return self.partition.num_shards
+
+    def balance(self) -> Dict[str, object]:
+        """Per-shard stored-work report (worst/mean ratio and friends)."""
+        return self.partition.balance()
+
+    def with_values(self, *global_data) -> "ShardedSparseTensor":
+        """Same partition, new *global* value leaves — never re-partitions."""
+        return ShardedSparseTensor(
+            self.structure, self.partition, self.mesh, self.axis,
+            self.partition.stack_values(tuple(global_data)))
+
+    def astype(self, dtype) -> "ShardedSparseTensor":
+        return ShardedSparseTensor(
+            self.structure, self.partition, self.mesh, self.axis,
+            tuple(x.astype(dtype) for x in self.data))
+
+    def __matmul__(self, b) -> jax.Array:
+        """``self @ B`` via the sharded ``repro.ops.spmm`` path."""
+        from repro.ops import spmm
+
+        return spmm(self, b)
+
+    def matmul(self, b, **kw) -> jax.Array:
+        """Sharded ``spmm`` with per-call keyword overrides (impl=, ...)."""
+        from repro.ops import spmm
+
+        return spmm(self, b, **kw)
+
+    def __repr__(self):
+        return (f"ShardedSparseTensor({self.format}, shape={self.shape}, "
+                f"shards={self.num_shards}, axis={self.axis!r}, "
+                f"dtype={self.dtype})")
+
+
+jax.tree_util.register_pytree_node(
+    ShardedSparseTensor,
+    lambda t: (t.data, (t.structure, t.partition, t.mesh, t.axis)),
+    lambda aux, data: ShardedSparseTensor(*aux, data),
+)
+
+
+def _is_traced(data) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in data)
+
+
+def shard_tensor(st: SparseTensor, mesh, axis: str = "data"
+                 ) -> ShardedSparseTensor:
+    """Partition a ``SparseTensor`` over one mesh axis by stored work.
+
+    The partition comes from the ``repro.ops.make_partition`` cache (once
+    per structure); value slicing is static, so this also works on traced
+    tensors inside ``jit`` (the eager path additionally places the stacked
+    leaves along the mesh axis via ``parallel.sharding`` rules).
+    """
+    if axis not in mesh.shape:
+        raise ValueError(
+            f"shard_tensor: axis {axis!r} not in mesh axes "
+            f"{tuple(mesh.axis_names)}")
+    part = make_partition(st.structure, int(mesh.shape[axis]))
+    data = part.stack_values(st.data)
+    sst = ShardedSparseTensor(st.structure, part, mesh, axis, data)
+    if not _is_traced(data):
+        from repro.parallel.sharding import sparse_operand_shardings
+
+        sst.data = tuple(jax.device_put(x, sh) for x, sh in
+                         zip(data, sparse_operand_shardings(mesh, sst)))
+    return sst
+
+
+_SPARSE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sparse_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_sparse_mesh(mesh, axis: str = "data"):
+    """Route ``SparseTensor`` spmm through the sharded path in this scope.
+
+    Inside the context, ``repro.ops.spmm`` (and ``st @ b``) auto-shards
+    plain ``SparseTensor`` operands over ``mesh``'s ``axis`` — partitions
+    are memoized per structure, so repeated calls (a serving loop) pay the
+    partitioner once. ``ShardedSparseTensor`` operands are unaffected (they
+    carry their own mesh).
+
+    Like ``use_config``, the scope applies when an op *traces*: a function
+    already compiled outside the scope keeps its single-device program
+    inside it (and vice versa) — enter the scope before the first traced
+    call, or shard explicitly with ``st.shard(mesh, axis)`` so the sharded
+    operand itself keys the jit cache.
+    """
+    if axis not in mesh.shape:
+        raise ValueError(f"use_sparse_mesh: axis {axis!r} not in mesh axes "
+                         f"{tuple(mesh.axis_names)}")
+    token = _SPARSE_MESH.set((mesh, str(axis)))
+    try:
+        yield
+    finally:
+        _SPARSE_MESH.reset(token)
+
+
+def current_sparse_mesh() -> Optional[Tuple[object, str]]:
+    """The active ``use_sparse_mesh`` (mesh, axis), or None."""
+    return _SPARSE_MESH.get()
+
+
+# ---------------------------------------------------------------------------
+# Sharded spmm execution
+# ---------------------------------------------------------------------------
+
+
+def _reduce(x: jax.Array, axis: str, method: str) -> jax.Array:
+    """Cross-device partial-output combine (repro.parallel.collectives)."""
+    if method in (None, "psum"):
+        return jax.lax.psum(x, axis)
+    if method == "bf16":
+        return compressed_psum_bf16(x, axis)
+    raise ValueError(f"unknown sharded-spmm reduce {method!r} "
+                     "(use 'psum' or 'bf16')")
+
+
+def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
+                 inner_impl: Optional[str] = None, reduce: str = "psum",
+                 pipeline_gather: bool = False) -> jax.Array:
+    """``C = A_sharded @ B`` over ``a.mesh``: local kernels + collective sum.
+
+    Each device runs the single-device backend (resolved from
+    ``inner_impl`` / ``cfg.impl`` exactly like unsharded ``spmm``) on its
+    shard's partial problem — same §IV-C tile width as the unsharded call,
+    per-shard §III-C task plans from the ``make_plan`` cache — then partial
+    [m, n] outputs are combined with ``reduce`` ("psum", or "bf16" for the
+    compressed collective) over the mesh axis. The result is replicated.
+    """
+    g = a.structure
+    mesh, axis = a.mesh, a.axis
+    impl = resolve_backend(f"spmm/{g.fmt}", inner_impl or cfg.impl).name
+    m, k = g.shape
+    if b.shape[0] != k:
+        raise ValueError(f"A {g.shape} @ B {b.shape}: inner dims differ")
+    n = b.shape[1]
+    bm, bk = g.block
+    # one global tile width, identical to the unsharded selection (shards
+    # must run one SPMD program; per-shard bn would diverge the grid)
+    bn = resolve_bn(cfg.bn, n, bm, bk, a.dtype, op="spmm", fmt=g.fmt,
+                    shape=g.shape, impl="kernel")
+    (b_pad,), bn_eff, pad = pad_cols([b], n, bn)
+    interpret = resolve_interpret(cfg, True if impl == "kernel_interpret"
+                                  else not on_tpu())
+    idx = a.partition.index_arrays()
+    specs = lambda n_ops: (P(axis),) * n_ops + (P(),)
+
+    if g.fmt == "wcsr":
+        cfg_bn = dataclasses.replace(cfg, bn=bn)
+        plans = [make_plan(s, n, cfg_bn, dtype=a.dtype)
+                 for s in a.partition.shards]
+        cpt = plans[0].chunks_per_task
+        num_tasks = max(p.num_tasks for p in plans)
+        t_win = np.zeros((a.num_shards, num_tasks), np.int32)
+        t_start = np.zeros((a.num_shards, num_tasks), np.int32)
+        t_n = np.zeros((a.num_shards, num_tasks), np.int32)  # 0 => no-op task
+        for s, p in enumerate(plans):
+            w, st_, nn = p.tasks
+            t_win[s, : len(w)], t_start[s, : len(w)], t_n[s, : len(w)] = \
+                w, st_, nn
+        padded_cols = a.partition.padded_size
+        num_windows = g.num_windows
+
+        def local(tw, ts, tn, ci, wp, v, bmat):
+            tw, ts, tn, ci, wp, v = (x[0] for x in (tw, ts, tn, ci, wp, v))
+            if impl == "ref":
+                w_loc = WCSR(values=v, col_idx=ci, window_ptr=wp,
+                             shape=(m, k), b_row=bm, b_col=bk,
+                             padded_cols=padded_cols)
+                out = wcsr_spmm_ref(w_loc, bmat, out_dtype=jnp.float32)
+            else:
+                partial = wcsr_spmm_kernel(
+                    ts, tn, ci, v, bmat, b_row=bm, b_col=bk, bn=bn_eff,
+                    chunks_per_task=cpt, out_dtype=jnp.float32,
+                    interpret=interpret, pipeline_gather=pipeline_gather)
+                out = jax.ops.segment_sum(partial, tw,
+                                          num_segments=num_windows)
+                out = out.reshape(m, -1)
+            return _reduce(out, axis, reduce)
+
+        out = shard_map(
+            local, mesh=mesh, in_specs=specs(6), out_specs=P(),
+            check_vma=False,
+        )(jnp.asarray(t_win), jnp.asarray(t_start), jnp.asarray(t_n),
+          idx["col_idx"], idx["window_ptr"], a.data[0], b_pad)
+    else:
+        nnz_p = a.partition.padded_size
+        m_blocks = m // bm
+
+        def local(r, c, pt, mask, bl, bmat):
+            r, c, pt, mask, bl = (x[0] for x in (r, c, pt, mask, bl))
+            if impl == "ref":
+                a_loc = BCSR(blocks=bl, block_rows=r, block_cols=c,
+                             block_row_ptr=pt, shape=(m, k), block=(bm, bk),
+                             nnz_blocks=nnz_p)
+                out = bcsr_spmm_ref(a_loc, bmat, out_dtype=jnp.float32)
+            else:
+                out = bcsr_spmm_kernel(
+                    r, c, bl, bmat, m_blocks=m_blocks, block=(bm, bk),
+                    bn=bn_eff, out_dtype=jnp.float32, interpret=interpret)
+                # rows no shard-block covers are never written by the
+                # kernel: select zeros there instead of trusting the buffer
+                out = jnp.where(mask[:, None], out, 0.0)
+            return _reduce(out, axis, reduce)
+
+        out = shard_map(
+            local, mesh=mesh, in_specs=specs(5), out_specs=P(),
+            check_vma=False,
+        )(idx["block_rows"], idx["block_cols"], idx["block_row_ptr"],
+          idx["row_mask"], a.data[0], b_pad)
+
+    out = out.astype(cfg.out_dtype or b.dtype)
+    return unpad_cols(out, n, pad)
+
+
+# ---------------------------------------------------------------------------
+# Registry wiring: sharded operands dispatch like any other format
+# ---------------------------------------------------------------------------
+
+
+def _register():
+    from repro.sparse.registry import SparseFormat, register_sparse_format
+
+    register_sparse_format(SparseFormat(
+        name="sharded",
+        fmt_type=ShardedSparseTensor,
+        op="spmm/sharded",
+        stored_elements=lambda a: a.structure.stored_elements,
+    ))
+
+    @register_backend("spmm/sharded", "kernel", available=on_tpu,
+                      priority=100)
+    def _sharded_kernel(a, b, cfg: OpConfig, **extras):
+        return sharded_spmm(a, b, cfg, inner_impl="kernel", **extras)
+
+    @register_backend("spmm/sharded", "ref", priority=50)
+    def _sharded_ref(a, b, cfg: OpConfig, **extras):
+        return sharded_spmm(a, b, cfg, inner_impl="ref", **extras)
+
+    @register_backend("spmm/sharded", "kernel_interpret", priority=10)
+    def _sharded_kernel_interpret(a, b, cfg: OpConfig, **extras):
+        return sharded_spmm(a, b, cfg, inner_impl="kernel_interpret",
+                            **extras)
+
+
+_register()

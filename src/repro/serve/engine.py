@@ -12,6 +12,13 @@ trigger — §IV-C tile selection, the WCSR §III-C task decomposition — is
 memoized per ``SparseStructure`` in the ``repro.ops.make_plan`` cache, so a
 deployment plans each layer once and decodes forever. ``stats()`` surfaces
 those cache counters for serving dashboards.
+
+Multi-device serving: pass ``mesh=`` and decode steps trace inside a
+``repro.parallel.sparse.use_sparse_mesh`` scope — every ``SparseTensor``
+spmm in the model auto-shards over the mesh (partitioned by nonzero work
+via the ``make_partition`` cache, so the partitioner too runs once per
+layer). ``stats()["sparse_shards"]`` reports the per-layer shard-balance
+(worst/mean stored-work ratio per cached partition).
 """
 
 from __future__ import annotations
@@ -39,7 +46,8 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 512,
                  frontend_inputs: Optional[dict] = None, greedy: bool = True,
-                 op_config: Optional[OpConfig] = None):
+                 op_config: Optional[OpConfig] = None,
+                 mesh=None, mesh_axis: str = "data"):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -49,6 +57,10 @@ class ServeEngine:
         # serving deployment can flip kernel backends engine-wide without
         # touching the model code (repro.ops.use_config semantics)
         self.op_config = op_config
+        # device mesh for sharded sparse operands: decode traces under
+        # use_sparse_mesh so SparseTensor spmm distributes over mesh_axis
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
         kw = frontend_inputs or {}
         self.cache = model.init_decode_cache(slots, max_len, **kw)
         self.pos = np.zeros(slots, np.int64)  # next position per slot
@@ -61,9 +73,14 @@ class ServeEngine:
         self.last_token = np.zeros(slots, np.int64)
 
     def _decode(self, p, c, tok, pos):
-        ctx = (use_config(self.op_config) if self.op_config is not None
-               else contextlib.nullcontext())
-        with ctx:
+        with contextlib.ExitStack() as stack:
+            if self.op_config is not None:
+                stack.enter_context(use_config(self.op_config))
+            if self.mesh is not None:
+                from repro.parallel.sparse import use_sparse_mesh
+
+                stack.enter_context(use_sparse_mesh(self.mesh,
+                                                    self.mesh_axis))
             return self._decode_jit(p, c, tok, pos)
 
     # -- admission ---------------------------------------------------------
@@ -137,15 +154,22 @@ class ServeEngine:
 
         ``plan_cache.task_decompositions`` staying flat across ticks is the
         amortization invariant: repeated serve steps over the same sparse
-        structures must never re-run host-side planning.
+        structures must never re-run host-side planning (nor, with a mesh,
+        the structure-aware partitioner — ``plan_cache.partition_misses``).
+        ``sparse_shards`` lists the shard-balance of every cached partition
+        — per-shard stored work and the worst/mean ratio. Like the other
+        cache counters it is process-global: partitions created outside
+        this engine (another engine, benchmarks) appear too.
         """
-        from repro.ops import plan_cache_info, tuning_cache_info
+        from repro.ops import (partition_balance_report, plan_cache_info,
+                               tuning_cache_info)
 
         return {
             "active_slots": sum(a is not None for a in self.active),
             "free_slots": sum(a is None for a in self.active),
             "plan_cache": plan_cache_info(),
             "tuning_cache": tuning_cache_info(),
+            "sparse_shards": partition_balance_report(),
         }
 
     def run(self, requests: List[Request], max_ticks: int = 10_000):

@@ -12,10 +12,64 @@ auto-tiling, plan caching), this package supplies *representation*:
   method=...)`` prunes straight into either format (``sparsify``);
 * structure/values separation — hashable ``SparseStructure`` as the
   planning key (``structure``), and the ``SparseTensor`` wrapper with
-  ``A @ B`` / ``.T`` / ``.astype`` / ``.to`` ergonomics (``tensor``).
+  ``A @ B`` / ``.T`` / ``.astype`` / ``.to`` / ``.shard`` ergonomics
+  (``tensor``).
 
 ``repro.core.formats`` and ``repro.core.sparsify`` re-export the old names
-as deprecation shims.
+as deprecation shims. Multi-device distribution of these operands lives in
+``repro.parallel.sparse`` (``SparseTensor.shard`` lazily routes there).
+
+Exported symbols (one-liners; see each docstring for the full story):
+
+**Containers + constructors**
+
+* ``BCSR`` / ``WCSR`` — the raw format pytrees (paper §II-C); see
+  docs/formats.md for the memory-layout walkthrough.
+* ``bcsr_from_dense(d, block)`` / ``wcsr_from_dense(d, b_row, b_col)`` —
+  host-side builders: ``a = bcsr_from_dense(d, (64, 64))``.
+* ``bcsr_from_mask(d, mask, block)`` — keep exactly the blocks ``mask``
+  selects (plus empty-row coverage).
+* ``bcsr_to_dense(a)`` / ``wcsr_to_dense(w)`` — pure-jnp densify oracles.
+* ``bcsr_transpose(a)`` / ``wcsr_transpose(w)`` — format-preserving
+  transpose (WCSR re-packs windows via a host-side dense hop).
+* ``block_mask_from_dense(d, block)`` — boolean block-occupancy mask.
+* ``rcm_permutation(d)`` — Reverse Cuthill-McKee row/col order (the
+  paper's preprocessing): ``p = rcm_permutation(d); d[p][:, p]``.
+
+**Format registry**
+
+* ``SparseFormat`` — one descriptor per format (op family, densify,
+  storage accounting, structure/values split, transpose).
+* ``register_sparse_format(fmt)`` — plug a new format into dispatch,
+  ``fill_ratio`` and conversion without touching call sites.
+* ``registered_sparse_formats()`` / ``get_format(name)`` /
+  ``format_of(x)`` / ``format_name_of(x)`` — lookups:
+  ``format_name_of(a) == "bcsr"``.
+* ``fill_ratio(dense, fmt)`` — true nonzeros / stored values (§II-C):
+  the format-choice metric.
+
+**Conversion + pruning**
+
+* ``convert(x, "wcsr", block=...)`` — route through the conversion graph
+  (dense ↔ bcsr/wcsr, mask → bcsr, cross-format via dense hop).
+* ``register_conversion(src, dst, fn)`` / ``registered_conversions()`` —
+  extend/inspect the graph.
+* ``sparsify(w, format=..., sparsity=0.9, method="magnitude")`` — prune a
+  dense matrix straight into either format, returns a ``SparseTensor``.
+* ``apply_block_mask(w, mask, block)`` — zero everything outside ``mask``.
+* ``magnitude_block_mask`` / ``random_block_mask`` / ``banded_block_mask``
+  — block-mask generators for the three pruning methods.
+
+**Structure/values separation**
+
+* ``SparseStructure`` — the hashable, host-side half of a sparse matrix;
+  memoization key for ``repro.ops.make_plan`` / ``make_partition``.
+* ``structure_of(x)`` — one-time extraction from a raw container.
+* ``make_wcsr_tasks(w, cpt)`` — compat wrapper for the §III-C task split
+  (prefer ``repro.ops.make_plan``, which memoizes it).
+* ``SparseTensor`` — the format-agnostic operand: ``st @ b``, ``.T``,
+  ``.astype``, ``.to("wcsr", block=...)``, ``.todense()``,
+  ``.shard(mesh, axis)``; a pytree with only values as leaves.
 """
 
 from repro.sparse.convert import (convert, register_conversion,

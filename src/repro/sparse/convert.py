@@ -50,6 +50,7 @@ def register_conversion(src: str, dst: str):
 
 
 def registered_conversions() -> List[Tuple[str, str]]:
+    """Registered (src, dst) conversion edges: ``("dense", "bcsr"), ...``."""
     return sorted(_EDGES)
 
 

@@ -113,6 +113,7 @@ def format_of(x) -> SparseFormat:
 
 
 def format_name_of(x) -> str:
+    """Registry name of a value's format: ``format_name_of(a) == "bcsr"``."""
     return format_of(x).name
 
 

@@ -1,22 +1,25 @@
-"""Distributed semantics on an 8-device host mesh (subprocess: device count
-must be fixed before jax initializes). Covers: sharded train step numerics
-vs single device, MoE shard_map path, compressed/hierarchical collectives,
-GPipe equivalence, elastic checkpoint restore onto a mesh."""
+"""Distributed semantics on a forced multi-device host mesh (subprocess:
+device count must be fixed before jax initializes). Covers: sharded train
+step numerics vs single device, MoE shard_map path, compressed/hierarchical
+collectives, GPipe equivalence, elastic checkpoint restore onto a mesh, the
+structure-aware sparse partitioner (in-process: pure host-side numpy), and
+sharded-vs-single-device spmm equality on a 4-device mesh."""
 
 import os
 import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(body: str):
+def _run(body: str, devices: int = 8):
     src = textwrap.dedent(body)
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     p = subprocess.run([sys.executable, "-c", src], capture_output=True,
                        text=True, env=env, timeout=560)
@@ -147,6 +150,138 @@ def test_gpipe_matches_sequential():
     assert np.isfinite(np.asarray(g)).all()
     print("OK")
     """)
+
+
+# ---------------------------------------------------------------------------
+# Structure-aware sparse partitioner (host-side; no multi-device needed)
+# ---------------------------------------------------------------------------
+
+
+def _skewed(m, k, density, seed=0):
+    """Power-law row-degree synthetic (the irregular-sparsity regime)."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros((m, k), np.float32)
+    row_nnz = np.maximum(1, (k * density * m *
+                             (np.arange(1, m + 1) ** -0.9)
+                             / (np.arange(1, m + 1) ** -0.9).sum())).astype(int)
+    for i in range(m):
+        cols = rng.choice(k, size=min(int(row_nnz[i]), k), replace=False)
+        a[i, cols] = rng.normal(size=len(cols))
+    return a
+
+
+def test_partitioner_balance_on_skewed_matrix():
+    from repro.parallel.sparse import partition_structure
+    from repro.sparse import SparseTensor
+
+    d = _skewed(256, 256, 0.08)
+    for fmt, block in [("bcsr", (16, 16)), ("wcsr", (16, 8))]:
+        st = SparseTensor.from_dense(d, fmt, block=block)
+        part = partition_structure(st.structure, 4)
+        bal = part.balance()
+        # acceptance bound: worst shard carries <= 1.5x the mean stored work
+        assert bal["ratio"] <= 1.5, (fmt, bal)
+        # shards exactly tile the stored work (nothing dropped or duplicated)
+        assert sum(bal["stored_per_shard"]) == st.structure.stored_elements
+        assert len(part.shards) == 4
+        for s in part.shards:
+            assert s.shape == st.structure.shape  # full logical shape
+
+
+def test_partitioner_giant_row_and_empty_windows():
+    from repro.parallel.sparse import partition_structure
+    from repro.sparse import SparseTensor
+
+    # single giant row: all work in one window / block-row must still split
+    d = np.zeros((128, 128), np.float32)
+    d[5, :] = 1.0
+    st = SparseTensor.from_dense(d, "wcsr", block=(16, 8))
+    bal = partition_structure(st.structure, 4).balance()
+    # the giant window splits at chunk granularity across all shards
+    assert bal["ratio"] <= 1.5, bal
+    assert min(bal["stored_per_shard"]) > 0
+
+    stb = SparseTensor.from_dense(d, "bcsr", block=(16, 16))
+    balb = partition_structure(stb.structure, 4).balance()
+    assert balb["ratio"] <= 1.5, balb
+
+    # mostly-empty windows: partition stays valid (some shards may be empty)
+    d2 = np.zeros((128, 128), np.float32)
+    d2[64:80, 10:20] = 1.0
+    st2 = SparseTensor.from_dense(d2, "wcsr", block=(16, 8))
+    part2 = partition_structure(st2.structure, 4)
+    assert sum(part2.balance()["stored_per_shard"]) == \
+        st2.structure.stored_elements
+
+    # fully-empty matrix: no crash, work conserved
+    st3 = SparseTensor.from_dense(np.zeros((64, 64), np.float32),
+                                  "wcsr", block=(16, 8))
+    part3 = partition_structure(st3.structure, 4)
+    assert sum(part3.balance()["stored_per_shard"]) == \
+        st3.structure.stored_elements
+
+
+def test_partition_cache_memoizes_per_structure():
+    from repro.ops import clear_plan_cache, make_partition, plan_cache_info
+    from repro.sparse import SparseTensor
+
+    d = _skewed(64, 64, 0.1, seed=1)
+    st = SparseTensor.from_dense(d, "wcsr", block=(16, 8))
+    clear_plan_cache()
+    p1 = make_partition(st.structure, 4)
+    p2 = make_partition(st, 4)  # SparseTensor accepted, same key
+    assert p1 is p2
+    info = plan_cache_info()
+    assert info.partition_misses == 1 and info.partition_hits == 1
+    assert info.partitions == 1
+    # a value swap keeps the structure object -> same cached partition
+    assert make_partition(st.with_values(st.data[0] * 2).structure, 4) is p1
+    clear_plan_cache()
+    assert plan_cache_info().partitions == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharded spmm vs single device (forced 4-device host mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_spmm_matches_single_device():
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.sparse import SparseTensor
+    from repro.ops import spmm, plan_cache_info
+    from repro.parallel.sparse import use_sparse_mesh
+
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(256, 128)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.12
+    b = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    mesh = jax.make_mesh((4,), ("data",))
+    assert mesh.shape["data"] == 4
+    for fmt, block in [("bcsr", (32, 32)), ("wcsr", (32, 8))]:
+        st = SparseTensor.from_dense(d, fmt, block=block)
+        y0 = np.asarray(spmm(st, b))  # single-device, default backend
+        sst = st.shard(mesh, "data")
+        for impl in ("ref", "kernel_interpret"):
+            y1 = np.asarray(spmm(sst, b, impl=impl))
+            np.testing.assert_allclose(y1, y0, atol=2e-4, rtol=1e-4)
+        # jit over the sharded operand (structure/partition are static aux)
+        yj = np.asarray(jax.jit(lambda s, x: spmm(s, x))(sst, b))
+        np.testing.assert_allclose(yj, y0, atol=2e-4, rtol=1e-4)
+        # auto-shard: plain SparseTensor inside a sparse-mesh scope
+        with use_sparse_mesh(mesh):
+            y2 = np.asarray(st @ b)
+        np.testing.assert_allclose(y2, y0, atol=2e-4, rtol=1e-4)
+    info = plan_cache_info()
+    assert info.partitions == 2, info       # one partition per structure
+    assert info.partition_misses == 2, info
+    # value swaps reuse the cached partition (the serving contract)
+    sst2 = st.shard(mesh, "data").with_values(st.data[0] * 2.0)
+    y3 = np.asarray(spmm(sst2, b, impl="ref"))
+    np.testing.assert_allclose(y3, 2.0 * y0, atol=4e-4, rtol=1e-4)
+    assert plan_cache_info().partition_misses == 2
+    print("OK")
+    """, devices=4)
 
 
 def test_elastic_checkpoint_restore_onto_mesh(tmp_path):

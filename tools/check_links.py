@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in README.md and docs/*.md.
+
+Checks every markdown link whose target is a relative path (http(s),
+mailto and pure-anchor links are skipped; a ``#fragment`` on a relative
+target is stripped before the existence check). Exit code 1 lists every
+broken link. Run from anywhere: paths resolve against the repo root.
+
+    python tools/check_links.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(md: pathlib.Path) -> list:
+    broken = []
+    for target in LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            broken.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return broken
+
+
+def main() -> int:
+    files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+    broken = []
+    for md in files:
+        if md.exists():
+            broken.extend(check(md))
+    for b in broken:
+        print(b, file=sys.stderr)
+    print(f"checked {len(files)} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
