@@ -1,13 +1,23 @@
 """Pallas TPU block-sparse flash attention (MInference-analogue, paper §IV-D).
 
 Per (head, q-block) the set of active k-blocks is CSR-encoded and scalar-
-prefetched; the K/V BlockSpec index_maps chase the active list so *only
-active blocks are DMA'd* — the TPU equivalent of MInference's Triton kernel
-computing "only the dynamically selected sparse subset of query-key blocks".
-Online softmax runs in VMEM scratch across the active-block grid dimension.
+prefetched; K/V are *indirect* operands (block index chased through
+``kcols``). Two load paths:
 
-Grid = (B*H, num_q_blocks, max_active_kblocks); padding steps (j >= the
-q-block's active count) re-DMA the last active block and are compute-masked.
+* ``pipeline_depth=0`` (default) — the K/V BlockSpec index_maps chase the
+  active list so *only active blocks are DMA'd* (Mosaic double-buffers the
+  stream) — the TPU equivalent of MInference's Triton kernel computing
+  "only the dynamically selected sparse subset of query-key blocks".
+  Padding steps (j >= the q-block's active count) re-DMA the last active
+  block and are compute-masked.
+* ``pipeline_depth>=1`` — K/V stay in HBM (ANY memory space) and each
+  active block pair is gathered by the shared Q-deep producer/consumer
+  emitter (``repro.kernels.pipeline``, paper §III-A): the K/V DMAs of
+  active block ``j+Q`` overlap the softmax/MXU work of block ``j``, and
+  padding steps issue no DMA at all.
+
+Online softmax runs in VMEM scratch across the active-block grid dimension.
+Grid = (B*H, num_q_blocks, max_active_kblocks).
 """
 
 from __future__ import annotations
@@ -20,8 +30,59 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.pipeline import (emit_gather_pipeline, gather_slots,
+                                    validate_depth)
 
 NEG_INF = -1e30
+
+
+def _scores(q, k_blk, kidx, *, bq, bk, qb, causal, scale):
+    """Scaled (and causally masked) QK^T scores for one active k-block."""
+    s = (
+        jax.lax.dot_general(
+            q,
+            k_blk,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        * scale
+    )  # [bq, bk]
+    if causal:
+        qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kidx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    return s
+
+
+def _finish_store(o_ref, m_ref, l_ref, acc_ref):
+    """Normalize the online-softmax accumulator into the output tile.
+
+    Fully-masked rows (l == 0, e.g. a q-block with no active k-blocks)
+    emit zeros.
+    """
+    del m_ref
+    l = l_ref[:, :1]
+    norm = jnp.where(l > 0, 1.0 / jnp.where(l > 0, l, 1.0), 0.0)
+    o_ref[0] = (acc_ref[...] * norm).astype(o_ref.dtype)
+
+
+def _softmax_step(s, m_ref, l_ref, acc_ref, v, v_dtype):
+    """One online-softmax update with scores ``s`` and value block ``v``."""
+    m_prev = m_ref[:, :1]  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)  # [bq, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    # rows that are still fully masked keep exp(NEG_INF - NEG_INF) = 1
+    # on masked lanes; kill them explicitly
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
 
 def _kernel(
@@ -60,40 +121,87 @@ def _kernel(
     @pl.when(active)
     def _step():
         kidx = kcols_ref[base + jnp.minimum(j, count - 1)]
-        s = (
-            jax.lax.dot_general(
-                q_ref[0],
-                k_ref[0],
-                dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            * scale
-        )  # [bq, bk]
-        if causal:
-            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = kidx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(kpos <= qpos, s, NEG_INF)
-        m_prev = m_ref[:, :1]  # [bq, 1]
-        m_cur = jnp.max(s, axis=1, keepdims=True)  # [bq, 1]
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new)  # [bq, bk]
-        # rows that are still fully masked keep exp(NEG_INF - NEG_INF) = 1
-        # on masked lanes; kill them explicitly
-        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
-        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
-        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
-        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-            p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
-        )
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        s = _scores(q_ref[0], k_ref[0], kidx, bq=bq, bk=bk, qb=qb,
+                    causal=causal, scale=scale)
+        _softmax_step(s, m_ref, l_ref, acc_ref, v_ref[0], v_ref.dtype)
 
     @pl.when(j == max_active - 1)
     def _finish():
-        l = l_ref[:, :1]
-        norm = jnp.where(l > 0, 1.0 / jnp.where(l > 0, l, 1.0), 0.0)
-        o_ref[0] = (acc_ref[...] * norm).astype(o_ref.dtype)
+        _finish_store(o_ref, m_ref, l_ref, acc_ref)
+
+
+def _kernel_pipelined(
+    ptr_ref,  # [H*nqb + 1] i32 CSR pointers into kcols
+    kcols_ref,  # [total_active] i32 active k-block indices
+    q_ref,  # [1, bq, d]
+    k_hbm_ref,  # [B*KVH, S, D] (ANY/HBM — gathered by the pipeline)
+    v_hbm_ref,  # [B*KVH, S, D] (ANY/HBM)
+    o_ref,  # [1, bq, d]
+    k_slots_ref,  # [depth, bk, d] VMEM gather slots for K blocks
+    v_slots_ref,  # [depth, bk, d] VMEM gather slots for V blocks
+    sem,  # [depth] DMA semaphores (each slot waits K+V together)
+    m_ref,  # [bq, 128] f32 running max
+    l_ref,  # [bq, 128] f32 running denominator
+    acc_ref,  # [bq, d] f32 running numerator
+    *,
+    bq: int,
+    bk: int,
+    max_active: int,
+    heads: int,
+    kv_heads: int,
+    nqb: int,
+    causal: bool,
+    scale: float,
+    depth: int,
+):
+    bh = pl.program_id(0)
+    qb = pl.program_id(1)
+    j = pl.program_id(2)
+    h = bh % heads
+    kv_row = (bh // heads) * kv_heads + h // (heads // kv_heads)
+    base = ptr_ref[h * nqb + qb]
+    count = ptr_ref[h * nqb + qb + 1] - base
+    total = kcols_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def kidx_of(chunk):
+        # lookahead chunks run past the active count (and count may be 0);
+        # clamp into both this q-block's list and the global kcols array
+        c = jnp.maximum(base + jnp.minimum(chunk, count - 1), 0)
+        return kcols_ref[jnp.minimum(c, total - 1)]
+
+    def copies(chunk, slot):
+        kidx = kidx_of(chunk)
+        return [
+            pltpu.make_async_copy(
+                k_hbm_ref.at[kv_row, pl.ds(kidx * bk, bk), :],
+                k_slots_ref.at[slot],
+                sem.at[slot],
+            ),
+            pltpu.make_async_copy(
+                v_hbm_ref.at[kv_row, pl.ds(kidx * bk, bk), :],
+                v_slots_ref.at[slot],
+                sem.at[slot],
+            ),
+        ]
+
+    def compute(chunk, slot):
+        s = _scores(q_ref[0], k_slots_ref[slot], kidx_of(chunk), bq=bq,
+                    bk=bk, qb=qb, causal=causal, scale=scale)
+        _softmax_step(s, m_ref, l_ref, acc_ref, v_slots_ref[slot],
+                      v_slots_ref.dtype)
+
+    emit_gather_pipeline(step=j, nchunks=count, depth=depth,
+                         copies=copies, compute=compute)
+
+    @pl.when(j == max_active - 1)
+    def _finish():
+        _finish_store(o_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(
@@ -107,6 +215,7 @@ def _kernel(
         "causal",
         "scale",
         "interpret",
+        "pipeline_depth",
     ),
 )
 def block_sparse_attention_kernel(
@@ -124,30 +233,34 @@ def block_sparse_attention_kernel(
     causal: bool,
     scale: float,
     interpret: bool = True,
+    pipeline_depth: int = 0,
 ) -> jax.Array:
+    depth = validate_depth(pipeline_depth, allow_zero=True)
     bh, s, d = q.shape
     nqb = s // block_q
     group = heads // kv_heads
     grid = (bh, nqb, max_active)
-    kv_index = lambda b, qb, j, ptr, kcols: (
-        # kv row for this q head; padding steps clamp to the last active block
-        (b // heads) * kv_heads + (b % heads) // group,
-        kcols[
-            ptr[(b % heads) * nqb + qb]
-            + jnp.minimum(
-                j,
-                jnp.maximum(
-                    ptr[(b % heads) * nqb + qb + 1]
-                    - ptr[(b % heads) * nqb + qb]
-                    - 1,
-                    0,
-                ),
-            )
-        ],
-        0,
-    )
-    return pl.pallas_call(
-        functools.partial(
+    q_spec = pl.BlockSpec((1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0))
+    if depth == 0:
+        kv_index = lambda b, qb, j, ptr, kcols: (
+            # kv row for this q head; padding steps clamp to the last active
+            # block
+            (b // heads) * kv_heads + (b % heads) // group,
+            kcols[
+                ptr[(b % heads) * nqb + qb]
+                + jnp.minimum(
+                    j,
+                    jnp.maximum(
+                        ptr[(b % heads) * nqb + qb + 1]
+                        - ptr[(b % heads) * nqb + qb]
+                        - 1,
+                        0,
+                    ),
+                )
+            ],
+            0,
+        )
+        body = functools.partial(
             _kernel,
             bq=block_q,
             bk=block_k,
@@ -156,19 +269,44 @@ def block_sparse_attention_kernel(
             nqb=nqb,
             causal=causal,
             scale=scale,
-        ),
+        )
+        in_specs = [
+            q_spec,
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ]
+        scratch = []
+    else:
+        body = functools.partial(
+            _kernel_pipelined,
+            bq=block_q,
+            bk=block_k,
+            max_active=max_active,
+            heads=heads,
+            kv_heads=kv_heads,
+            nqb=nqb,
+            causal=causal,
+            scale=scale,
+            depth=depth,
+        )
+        in_specs = [
+            q_spec,
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ]
+        k_slots, kv_sems = gather_slots(depth, (block_k, d), k.dtype)
+        v_slots, _ = gather_slots(depth, (block_k, d), v.dtype)
+        scratch = [k_slots, v_slots, kv_sems]
+    return pl.pallas_call(
+        body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0)),
-                pl.BlockSpec((1, block_k, d), kv_index),
-                pl.BlockSpec((1, block_k, d), kv_index),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0)
             ),
-            scratch_shapes=[
+            scratch_shapes=scratch + [
                 pltpu.VMEM((block_q, 128), jnp.float32),
                 pltpu.VMEM((block_q, 128), jnp.float32),
                 pltpu.VMEM((block_q, d), jnp.float32),

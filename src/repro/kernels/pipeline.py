@@ -1,0 +1,154 @@
+"""Reusable Q-deep producer/consumer gather pipeline (paper §III-A).
+
+The paper's headline mechanism is the *asynchronous* producer/consumer
+pipeline: TMA loads of step ``i+Q`` overlap WGMMA compute of step ``i``
+through a ``Q=3`` circular buffer (§III-A; Table 2 ablates exactly this).
+On TPU the analogue for *indirect* operands — accesses a BlockSpec cannot
+express, like the WCSR row gather — is a scalar-core-issued
+``pltpu.make_async_copy`` stream into a ``Q``-slot VMEM scratch, with one
+DMA semaphore per slot.
+
+``emit_gather_pipeline`` generates all four pipeline phases from a single
+body description:
+
+* **prime**    — at step 0, issue the copies for chunks ``0..Q-1``;
+* **produce**  — at step ``g``, issue chunk ``g+Q`` into the slot chunk
+  ``g`` just vacated (the TMA-of-step-i+Q analogue);
+* **consume**  — wait chunk ``g``'s slot, then run the caller's compute
+  (the WGMMA analogue);
+* **drain**    — steps past ``nchunks`` (grids are padded to a static
+  trip count) do nothing: every issued copy has been consumed.
+
+Because chunk ``g`` and chunk ``g+Q`` occupy the *same* slot
+(``(g+Q) % Q == g % Q``), one handle list serves both sides of the step:
+the consumer waits on the very handles the producer holds — a DMA wait
+depends only on the destination slice and semaphore, never the source —
+so the wait side does not re-construct descriptors (the old double-buffer
+kernel re-derived every ``make_async_copy`` on its wait branches).
+
+Depth semantics:
+
+* ``depth=1`` — serial load-then-compute (the paper's WCSR §III-C choice):
+  one slot, the wait immediately follows the issue, no overlap.
+* ``depth=2`` — the classic double buffer (the old ``pipeline_gather``).
+* ``depth>=3`` — the paper's Q-deep circular buffer (§III-A uses Q=3).
+
+All phases are emitted from one trace of the caller's callbacks, so there
+is no per-slot branch duplication: the even/odd ``_prefetch_*`` /
+``_consume_*`` pairs of the old WCSR double-buffer kernel collapse into a
+dynamic ``step % depth`` slot index into a stacked ``[Q, ...]`` scratch
+buffer and a ``SemaphoreType.DMA((Q,))`` array.
+
+BCSR note: the block-streaming kernels (``kernels/bcsr``, and the
+default paths of ``kernels/sddmm`` / ``kernels/block_attn``) keep their
+*contiguous* operands on Mosaic's implicit multi-buffered grid pipeline,
+which is this same producer/consumer scheme applied automatically to
+BlockSpec streams; this module is for the operands BlockSpecs cannot
+reach.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["emit_gather_pipeline", "gather_slots", "validate_depth",
+           "MAX_DEPTH"]
+
+# VMEM is the binding resource (§IV-C): each extra slot costs a full
+# gather buffer. 4 covers the paper's Q=3 plus one experiment slot.
+MAX_DEPTH = 4
+
+
+def validate_depth(depth: int, *, allow_zero: bool = False) -> int:
+    """Check a static pipeline depth; returns it as a plain int."""
+    depth = int(depth)
+    lo = 0 if allow_zero else 1
+    if not lo <= depth <= MAX_DEPTH:
+        raise ValueError(
+            f"pipeline depth must be in [{lo}, {MAX_DEPTH}], got {depth}")
+    return depth
+
+
+def gather_slots(depth: int, shape: Sequence[int], dtype):
+    """Scratch shapes for one ``depth``-deep gather pipeline.
+
+    Returns ``(vmem_slots, dma_sems)`` to splice into ``scratch_shapes``:
+    a stacked ``[depth, *shape]`` VMEM buffer and a matching DMA-semaphore
+    array. Kernels using several pipelined operands call this once per
+    operand (slots may share a semaphore array only if every slot's copies
+    are always waited together).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    depth = validate_depth(depth)
+    return (pltpu.VMEM((depth, *shape), dtype),
+            pltpu.SemaphoreType.DMA((depth,)))
+
+
+def emit_gather_pipeline(
+    *,
+    step,
+    nchunks,
+    depth: int,
+    copies: Callable[[object, object], List],
+    compute: Callable[[object, object], None],
+) -> None:
+    """Emit prime/produce/consume/drain for a Q-deep circular buffer.
+
+    Designed to be called once inside a Pallas kernel body whose innermost
+    grid dimension is the chunk loop (one grid step per chunk, padded to a
+    static trip count).
+
+    Args:
+      step: the traced chunk index of this grid step (the pipeline clock).
+      nchunks: number of active chunks (traced or static). Steps with
+        ``step >= nchunks`` are drain steps: no wait, no compute, no issue.
+        ``nchunks`` may be 0 (empty task) and may be smaller than
+        ``depth`` — the prime phase guards each chunk individually.
+      depth: static pipeline depth Q (1 = serial, 2 = double buffer,
+        3 = the paper's circular buffer).
+      copies: ``copies(chunk, slot) -> [handle, ...]`` builds the
+        *un-started* async-copy handles that move chunk ``chunk``'s
+        indirect operand into buffer slot ``slot`` (a traced index into
+        the stacked scratch from ``gather_slots``). It is invoked with
+        lookahead chunks up to ``nchunks + depth - 1``, so implementations
+        must clamp any data-dependent index loads. Every handle's
+        destination and semaphore must depend on ``slot`` only (not
+        ``chunk``): that invariant is what lets the consumer wait on the
+        producer's handles.
+      compute: ``compute(chunk, slot)`` — the consume body; runs after
+        chunk ``chunk`` is resident in slot ``slot``.
+    """
+    depth = validate_depth(depth)
+
+    # prime: fill the Q slots with the first Q chunks (chunk d -> slot d)
+    @pl.when(step == 0)
+    def _prime():
+        for d in range(depth):
+
+            @pl.when(d < nchunks)
+            def _start(d=d):
+                for cp in copies(d, d):
+                    cp.start()
+
+    slot = jax.lax.rem(step, depth) if depth > 1 else 0
+    active = step < nchunks
+    # chunk `step` and chunk `step + depth` share slot `step % depth`, so
+    # this one handle list is both the consumer's wait set (dst/sem are
+    # slot-determined) and the producer's issue set.
+    handles = copies(step + depth, slot)
+
+    @pl.when(active)
+    def _consume():
+        for h in handles:
+            h.wait()
+        compute(step, slot)
+
+    @pl.when(jnp.logical_and(active, step + depth < nchunks))
+    def _produce():
+        for h in handles:
+            h.start()

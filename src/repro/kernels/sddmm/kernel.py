@@ -2,9 +2,19 @@
 
 Grid = (nnz_padded, n_tiles), n innermost: each stored block (r, c)
 accumulates dC[r-tile, n-slice] @ B[c-tile, n-slice]^T over the n slices in a
-VMEM accumulator, then stores its [bm, bk] block. Both operand streams are
-BlockSpec-driven (scalar-prefetched block indices), double-buffered by
-Mosaic — the same TMA-analogue machinery as the forward kernel.
+VMEM accumulator, then stores its [bm, bk] block.
+
+Two load paths for the indirect B operand (``block_cols``-indexed tiles):
+
+* ``pipeline_depth=0`` (default) — BlockSpec-driven stream, double-buffered
+  by Mosaic: the same implicit TMA-analogue machinery as the forward BCSR
+  kernel.
+* ``pipeline_depth>=1`` — B stays in HBM (ANY memory space) and its tiles
+  are gathered by the shared Q-deep producer/consumer emitter
+  (``repro.kernels.pipeline``, paper §III-A): the DMA of n-slice ``nt+Q``
+  overlaps the MXU contraction of slice ``nt``. Depth 1 is the serial
+  load-then-compute instance; the dC stream stays on Mosaic's pipeline
+  either way.
 """
 
 from __future__ import annotations
@@ -17,6 +27,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.pipeline import (emit_gather_pipeline, gather_slots,
+                                    validate_depth)
+
+
+def _contract(dc, b):
+    """dC[bm, bn] @ B[bk, bn]^T -> [bm, bk] f32."""
+    return jax.lax.dot_general(
+        dc,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
 
 
 def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
@@ -28,12 +50,7 @@ def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        dc_ref[...],
-        b_ref[...],
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    acc_ref[...] += _contract(dc_ref[...], b_ref[...])
 
     @pl.when(nt == n_tiles - 1)
     def _store():
@@ -41,8 +58,43 @@ def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
         o_ref[0] = jnp.where(valid, acc_ref[...], 0).astype(o_ref.dtype)
 
 
+def _kernel_pipelined(rows_ref, cols_ref, dc_ref, b_hbm_ref, o_ref,
+                      b_slots_ref, sem, acc_ref, *,
+                      n_tiles, nnz, bk, bn, depth):
+    del rows_ref  # dc is BlockSpec-streamed; rows drive its index_map only
+    nt = pl.program_id(1)
+    i = pl.program_id(0)
+
+    @pl.when(nt == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def copies(chunk, slot):
+        # lookahead chunks run past the last n-tile; clamp the column slice
+        c = jnp.minimum(chunk, n_tiles - 1)
+        return [pltpu.make_async_copy(
+            b_hbm_ref.at[pl.ds(cols_ref[i] * bk, bk), pl.ds(c * bn, bn)],
+            b_slots_ref.at[slot],
+            sem.at[slot],
+        )]
+
+    def compute(chunk, slot):
+        del chunk  # dc_ref already holds this n-slice
+        acc_ref[...] += _contract(dc_ref[...], b_slots_ref[slot])
+
+    emit_gather_pipeline(step=nt, nchunks=n_tiles, depth=depth,
+                         copies=copies, compute=compute)
+
+    @pl.when(nt == n_tiles - 1)
+    def _store():
+        valid = i < nnz
+        o_ref[0] = jnp.where(valid, acc_ref[...], 0).astype(o_ref.dtype)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block", "nnz", "bn", "out_dtype", "interpret")
+    jax.jit,
+    static_argnames=("block", "nnz", "bn", "out_dtype", "interpret",
+                     "pipeline_depth"),
 )
 def sddmm_kernel(
     block_rows: jax.Array,
@@ -55,7 +107,9 @@ def sddmm_kernel(
     bn: int = 512,
     out_dtype=None,
     interpret: bool = True,
+    pipeline_depth: int = 0,
 ) -> jax.Array:
+    depth = validate_depth(pipeline_depth, allow_zero=True)
     bm, bk = block
     nnz_p = block_rows.shape[0]
     m, n = dc.shape
@@ -63,17 +117,27 @@ def sddmm_kernel(
         raise ValueError(f"n={n} must be a multiple of bn={bn}")
     n_tiles = n // bn
     out_dtype = out_dtype or dc.dtype
+    if depth == 0:
+        body = functools.partial(_kernel, n_tiles=n_tiles, nnz=nnz)
+        b_spec = pl.BlockSpec((bk, bn), lambda i, nt, rows, cols: (cols[i], nt))
+        scratch = [pltpu.VMEM((bm, bk), jnp.float32)]
+    else:
+        body = functools.partial(_kernel_pipelined, n_tiles=n_tiles, nnz=nnz,
+                                 bk=bk, bn=bn, depth=depth)
+        b_spec = pl.BlockSpec(memory_space=pl.ANY)
+        slots, sems = gather_slots(depth, (bk, bn), b.dtype)
+        scratch = [slots, sems, pltpu.VMEM((bm, bk), jnp.float32)]
     return pl.pallas_call(
-        functools.partial(_kernel, n_tiles=n_tiles, nnz=nnz),
+        body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(nnz_p, n_tiles),
             in_specs=[
                 pl.BlockSpec((bm, bn), lambda i, nt, rows, cols: (rows[i], nt)),
-                pl.BlockSpec((bk, bn), lambda i, nt, rows, cols: (cols[i], nt)),
+                b_spec,
             ],
             out_specs=pl.BlockSpec((1, bm, bk), lambda i, nt, rows, cols: (i, 0, 0)),
-            scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+            scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((nnz_p, bm, bk), out_dtype),
         compiler_params=CompilerParams(

@@ -7,10 +7,22 @@ BlockSpec. The paper falls back to a cooperative thread gather; the TPU
 analogue implemented here is a **scalar-core-driven row gather**: per packed
 column, a ``pltpu.make_async_copy`` DMA from the HBM-resident B (ANY memory
 space) into a VMEM scratch, indexed by the scalar-prefetched ``col_idx``.
-Like the paper's WCSR kernel, each iteration is load-then-compute within a
-single "warpgroup" (no producer/consumer split — §III-C explains why that
-does not pay off when the gather occupies all lanes); the contiguous A
-stream is still pipelined by Mosaic.
+
+The gather runs through the shared Q-deep producer/consumer emitter
+(``repro.kernels.pipeline``, paper §III-A):
+
+* ``pipeline_depth=1`` — load-then-compute within each step, the paper's
+  WCSR choice (§III-C explains why a producer/consumer split does not pay
+  off when the gather occupies all lanes);
+* ``pipeline_depth=2`` — the double-buffered gather (formerly the
+  ``pipeline_gather`` flag): chunk ``g+1``'s row DMAs are in flight while
+  chunk ``g`` runs on the MXU — the producer/consumer idea of the paper's
+  BCSR pipeline applied to the indirect operand;
+* ``pipeline_depth=3`` — the paper's Q=3 circular buffer.
+
+All depths share one kernel body; the emitter generates the
+prime/produce/consume/drain phases, so there are no per-slot (even/odd)
+branch copies. The contiguous A stream is still pipelined by Mosaic.
 
 Load balancing (paper §III-C): windows are pre-split into fixed-size tasks of
 at most ``chunks_per_task`` packed-column chunks; ``program_id(0)`` indexes
@@ -29,6 +41,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.pipeline import (emit_gather_pipeline, gather_slots,
+                                    validate_depth)
 
 
 def _kernel(
@@ -42,132 +56,50 @@ def _kernel(
     # output
     o_ref,  # [1, b_row, bn] partial output tile of this task
     # scratch
-    gather_ref,  # [b_col, bn] VMEM gather buffer for B rows
-    sem,  # DMA semaphore
+    gather_ref,  # [depth, b_col, bn] VMEM gather slots for B rows
+    sem,  # [depth] DMA semaphores
     acc_ref,  # [b_row, bn] f32 accumulator
     *,
     b_col: int,
     bn: int,
     chunks_per_task: int,
+    depth: int,
 ):
-    g = pl.program_id(2)
-    nt = pl.program_id(1)
-    t = pl.program_id(0)
-
-    @pl.when(g == 0)
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    active = g < task_nchunks_ref[t]
-
-    @pl.when(active)
-    def _gather_and_mac():
-        # --- load phase: gather b_col rows of B (cooperative gather analogue)
-        base = (task_start_ref[t] + g) * b_col
-        copies = []
-        for j in range(b_col):  # static unroll: one row DMA per packed column
-            src_row = jnp.maximum(col_idx_ref[base + j], 0)
-            cp = pltpu.make_async_copy(
-                b_hbm_ref.at[pl.ds(src_row, 1), pl.ds(nt * bn, bn)],
-                gather_ref.at[pl.ds(j, 1), :],
-                sem,
-            )
-            cp.start()
-            copies.append(cp)
-        for cp in copies:  # barrier: wait for the whole chunk
-            cp.wait()
-        # --- compute phase: micro-GEMM on the MXU (WGMMA analogue)
-        acc_ref[...] += jnp.dot(
-            a_ref[...], gather_ref[...], preferred_element_type=jnp.float32
-        )
-
-    @pl.when(g == chunks_per_task - 1)
-    def _store():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
-
-
-def _kernel_db(
-    task_start_ref,
-    task_nchunks_ref,
-    col_idx_ref,
-    a_ref,
-    b_hbm_ref,
-    o_ref,
-    gather0_ref,  # double-buffered gather scratch, slot 0
-    gather1_ref,  # slot 1
-    sem0,
-    sem1,
-    acc_ref,
-    *,
-    b_col: int,
-    bn: int,
-    chunks_per_task: int,
-):
-    """Beyond-paper variant (EXPERIMENTS.md §Perf): double-buffered gather.
-
-    The paper's WCSR kernel serializes gather -> matmul within each
-    iteration (§III-C). On TPU the gather is issued by the single scalar
-    core, so serialization costs ~30ns x b_col per chunk. Here chunk g+1's
-    row DMAs are issued *before* computing chunk g, overlapping the gather
-    with the MXU — the producer/consumer idea of the paper's BCSR pipeline
-    applied to the indirect operand.
-    """
     g = pl.program_id(2)
     nt = pl.program_id(1)
     t = pl.program_id(0)
     nchunks = task_nchunks_ref[t]
-
-    def copies_for(chunk, buf, sem):
-        base = (task_start_ref[t] + chunk) * b_col
-        out = []
-        for j in range(b_col):
-            src_row = jnp.maximum(col_idx_ref[base + j], 0)
-            out.append(pltpu.make_async_copy(
-                b_hbm_ref.at[pl.ds(src_row, 1), pl.ds(nt * bn, bn)],
-                buf.at[pl.ds(j, 1), :],
-                sem,
-            ))
-        return out
+    num_cols = col_idx_ref.shape[0]
 
     @pl.when(g == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(jnp.logical_and(g == 0, nchunks > 0))
-    def _prime():  # issue chunk 0's gather (slot 0)
-        for cp in copies_for(0, gather0_ref, sem0):
-            cp.start()
+    def copies(chunk, slot):
+        # --- load phase: gather b_col rows of B (cooperative gather
+        # analogue). The emitter probes lookahead chunks past the task end;
+        # clamp the col_idx loads (and -1 padding) to a safe row.
+        base = (task_start_ref[t] + chunk) * b_col
+        out = []
+        for j in range(b_col):  # static unroll: one row DMA per packed column
+            idx = jnp.minimum(base + j, num_cols - 1)
+            src_row = jnp.maximum(col_idx_ref[idx], 0)
+            out.append(pltpu.make_async_copy(
+                b_hbm_ref.at[pl.ds(src_row, 1), pl.ds(nt * bn, bn)],
+                gather_ref.at[slot, pl.ds(j, 1), :],
+                sem.at[slot],
+            ))
+        return out
 
-    active = g < nchunks
-    even = (g % 2) == 0
-
-    # producer: issue chunk g+1 into the other slot while g is in flight
-    @pl.when(jnp.logical_and(active, jnp.logical_and(g + 1 < nchunks, even)))
-    def _prefetch_odd():
-        for cp in copies_for(g + 1, gather1_ref, sem1):
-            cp.start()
-
-    @pl.when(jnp.logical_and(active,
-                             jnp.logical_and(g + 1 < nchunks,
-                                             jnp.logical_not(even))))
-    def _prefetch_even():
-        for cp in copies_for(g + 1, gather0_ref, sem0):
-            cp.start()
-
-    # consumer: wait for chunk g's slot, then MXU
-    @pl.when(jnp.logical_and(active, even))
-    def _consume_even():
-        for cp in copies_for(g, gather0_ref, sem0):
-            cp.wait()
+    def compute(chunk, slot):
+        del chunk  # a_ref already holds this step's packed-value chunk
+        # --- compute phase: micro-GEMM on the MXU (WGMMA analogue)
         acc_ref[...] += jnp.dot(
-            a_ref[...], gather0_ref[...], preferred_element_type=jnp.float32)
+            a_ref[...], gather_ref[slot], preferred_element_type=jnp.float32
+        )
 
-    @pl.when(jnp.logical_and(active, jnp.logical_not(even)))
-    def _consume_odd():
-        for cp in copies_for(g, gather1_ref, sem1):
-            cp.wait()
-        acc_ref[...] += jnp.dot(
-            a_ref[...], gather1_ref[...], preferred_element_type=jnp.float32)
+    emit_gather_pipeline(step=g, nchunks=nchunks, depth=depth,
+                         copies=copies, compute=compute)
 
     @pl.when(g == chunks_per_task - 1)
     def _store():
@@ -183,7 +115,7 @@ def _kernel_db(
         "chunks_per_task",
         "out_dtype",
         "interpret",
-        "pipeline_gather",
+        "pipeline_depth",
     ),
 )
 def wcsr_spmm_kernel(
@@ -199,32 +131,19 @@ def wcsr_spmm_kernel(
     chunks_per_task: int,
     out_dtype=None,
     interpret: bool = True,
-    pipeline_gather: bool = False,
+    pipeline_depth: int = 1,
 ) -> jax.Array:
+    depth = validate_depth(pipeline_depth)
     num_tasks = task_start.shape[0]
     k, n = b.shape
     if n % bn:
         raise ValueError(f"n={n} must be a multiple of bn={bn}")
     out_dtype = out_dtype or b.dtype
     grid = (num_tasks, n // bn, chunks_per_task)
-    if pipeline_gather:
-        body = functools.partial(
-            _kernel_db, b_col=b_col, bn=bn, chunks_per_task=chunks_per_task)
-        scratch = [
-            pltpu.VMEM((b_col, bn), b.dtype),
-            pltpu.VMEM((b_col, bn), b.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.VMEM((b_row, bn), jnp.float32),
-        ]
-    else:
-        body = functools.partial(
-            _kernel, b_col=b_col, bn=bn, chunks_per_task=chunks_per_task)
-        scratch = [
-            pltpu.VMEM((b_col, bn), b.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.VMEM((b_row, bn), jnp.float32),
-        ]
+    body = functools.partial(
+        _kernel, b_col=b_col, bn=bn, chunks_per_task=chunks_per_task,
+        depth=depth)
+    slots, sems = gather_slots(depth, (b_col, bn), b.dtype)
     return pl.pallas_call(
         body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -247,7 +166,11 @@ def wcsr_spmm_kernel(
             out_specs=pl.BlockSpec(
                 (1, b_row, bn), lambda t, nt, g, ts, tn, ci: (t, 0, nt)
             ),
-            scratch_shapes=scratch,
+            scratch_shapes=[
+                slots,
+                sems,
+                pltpu.VMEM((b_row, bn), jnp.float32),
+            ],
         ),
         out_shape=jax.ShapeDtypeStruct((num_tasks, b_row, n), out_dtype),
         compiler_params=CompilerParams(

@@ -27,5 +27,12 @@ def wcsr_spmm(
         "instead", DeprecationWarning, stacklevel=2)
     from repro.ops import spmm
 
+    # legacy bool -> explicit §III-A depth (2 = the old double buffer);
+    # translated here so legacy callers don't also trip the spmm-level
+    # pipeline_gather deprecation warning. The default False maps to None
+    # (inherit), so an ambient use_config(pipeline_depth=...) still reaches
+    # legacy call sites; with no ambient scope the kernel default is the
+    # same serial gather as before.
     return spmm(a, b, impl=impl, bn=bn, chunks_per_task=chunks_per_task,
-                out_dtype=out_dtype, pipeline_gather=pipeline_gather)
+                out_dtype=out_dtype,
+                pipeline_depth=2 if pipeline_gather else None)

@@ -62,7 +62,11 @@ structure, num_shards)`` (memoized mesh shard split),
 ``plan_cache_info()`` / ``clear_plan_cache()`` (counters),
 ``partition_balance_report()`` (per-partition shard-load stats),
 ``auto_bn(n)`` / ``resolve_bn(bn, n, ...)`` (§IV-C tile width),
-``tuning_cache_info()`` / ``clear_tuning_cache()``.
+``tuning_cache_info()`` / ``clear_tuning_cache()``,
+``autotune_spmm(a, b)`` (measured sweep over
+``(bn, chunks_per_task, pipeline_depth)`` whose winner steers every
+``"auto"`` knob), ``tuned_entry(...)`` / ``resolve_pipeline_depth(...)``
+(lookups the planners use).
 """
 
 from repro.ops.attention import csr_encode_block_mask, sparse_attention
@@ -78,8 +82,9 @@ from repro.ops.registry import (available_backends, register_backend,
                                 resolve_backend, resolve_format)
 from repro.ops.sddmm import sddmm
 from repro.ops.spmm import spmm
-from repro.ops.tiling import (auto_bn, clear_tuning_cache, resolve_bn,
-                              tuning_cache_info)
+from repro.ops.tiling import (auto_bn, autotune_spmm, clear_tuning_cache,
+                              resolve_bn, resolve_pipeline_depth,
+                              tuned_entry, tuning_cache_info)
 
 __all__ = [
     # ops
@@ -97,4 +102,5 @@ __all__ = [
     "Plan", "make_plan", "make_partition", "plan_cache_info",
     "partition_balance_report", "clear_plan_cache",
     "auto_bn", "resolve_bn", "tuning_cache_info", "clear_tuning_cache",
+    "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
 ]

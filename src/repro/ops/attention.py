@@ -17,6 +17,7 @@ from repro.kernels.block_attn.ref import block_sparse_attention_ref
 from repro.ops.config import (OpConfig, resolve_interpret,
                               resolved_config)
 from repro.ops.registry import on_tpu, register_backend, resolve_backend
+from repro.ops.tiling import resolve_pipeline_depth
 
 __all__ = ["sparse_attention", "csr_encode_block_mask"]
 
@@ -47,9 +48,16 @@ def sparse_attention(
     scale=None,
     impl=None,
     interpret=None,
+    pipeline_depth=None,
 ) -> jax.Array:
-    """Block-sparse flash attention over a static per-head block mask."""
-    cfg = resolved_config(impl=impl, interpret=interpret)
+    """Block-sparse flash attention over a static per-head block mask.
+
+    ``pipeline_depth`` >= 1 gathers the indirect K/V blocks through the
+    shared §III-A producer/consumer pipeline; the default (0) streams them
+    via BlockSpec index_maps on Mosaic's implicit pipeline.
+    """
+    cfg = resolved_config(impl=impl, interpret=interpret,
+                          pipeline_depth=pipeline_depth)
     backend = resolve_backend("sparse_attention", cfg.impl)
     return backend.fn(q, k, v, block_mask, cfg, block_q=block_q,
                       block_k=block_k, causal=causal, scale=scale)
@@ -65,10 +73,13 @@ def _attn_ref(q, k, v, block_mask, cfg: OpConfig, *, block_q, block_k,
 
 
 def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
-                 scale):
+                 scale, cfg: OpConfig):
     b, h, s, d = q.shape
     kvh = k.shape[1]
     scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    depth = resolve_pipeline_depth(
+        cfg.pipeline_depth, default=0, op="sparse_attention", fmt="block",
+        shape=(h, s), n=s, block=(block_q, block_k), dtype=q.dtype)
     ptr, kcols, max_active = csr_encode_block_mask(block_mask)
     out = block_sparse_attention_kernel(
         jnp.asarray(ptr),
@@ -84,6 +95,7 @@ def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
         causal=causal,
         scale=scale,
         interpret=interpret,
+        pipeline_depth=depth,
     )
     return out.reshape(b, h, s, d)
 
@@ -92,9 +104,10 @@ def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
                   priority=100)
 def _attn_kernel(q, k, v, block_mask, cfg: OpConfig, **kw):
     return _attn_pallas(q, k, v, block_mask, resolve_interpret(cfg, not on_tpu()),
-                        **kw)
+                        cfg=cfg, **kw)
 
 
 @register_backend("sparse_attention", "kernel_interpret", priority=10)
 def _attn_kernel_interpret(q, k, v, block_mask, cfg: OpConfig, **kw):
-    return _attn_pallas(q, k, v, block_mask, resolve_interpret(cfg, True), **kw)
+    return _attn_pallas(q, k, v, block_mask, resolve_interpret(cfg, True),
+                        cfg=cfg, **kw)

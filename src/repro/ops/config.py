@@ -11,7 +11,9 @@ Resolution order, highest precedence first:
 3. the ``REPRO_SPARSE_IMPL`` environment variable (impl only — the global
    flip-switch for benchmarks/serving; read at op-call time),
 4. package defaults (``impl=None`` -> registry auto-resolution,
-   ``bn="auto"`` -> §IV-C tile selection, ``chunks_per_task=8``).
+   ``bn="auto"`` -> §IV-C tile selection, ``pipeline_depth="auto"`` ->
+   measured-autotune winner or the kernel default, ``chunks_per_task``
+   unset -> autotune winner or 8, resolved in ``make_plan``).
 
 Configs are resolved when an op *traces*: flipping a config inside an
 already-compiled ``jax.jit`` cache entry does not retrace it.
@@ -40,6 +42,12 @@ class OpConfig:
     out_dtype: Any = None
     chunks_per_task: Optional[int] = None  # WCSR task splitting (§III-C)
     interpret: Optional[bool] = None  # force Pallas interpret mode
+    # Q-deep producer/consumer gather pipeline (paper §III-A; the paper's
+    # circular buffer uses Q=3). An int pins the depth; "auto" consults the
+    # measured auto-tune cache (ops.tiling.autotune_spmm) and falls back to
+    # each kernel's own default (WCSR: 1, the §III-C serial gather; SDDMM /
+    # block attention: 0 = Mosaic's implicit grid pipeline).
+    pipeline_depth: Union[int, str, None] = None
 
     def merged_under(self, override: "OpConfig") -> "OpConfig":
         """Layer ``override`` on top of self: non-None override fields win."""
@@ -50,8 +58,12 @@ class OpConfig:
         })
 
 
+# chunks_per_task stays None at the default layer (not a concrete 8) so
+# make_plan can distinguish "user pinned it" from "free to adopt a measured
+# autotune_spmm winner"; the 8 fallback lives in make_plan.
 _DEFAULTS = OpConfig(impl=None, bn="auto", out_dtype=None,
-                     chunks_per_task=8, interpret=None)
+                     chunks_per_task=None, interpret=None,
+                     pipeline_depth="auto")
 
 _STACK: contextvars.ContextVar = contextvars.ContextVar(
     "repro_ops_config_stack", default=())

@@ -3,11 +3,14 @@
 ``make_plan(structure, n, cfg)`` bundles everything an spmm backend decides
 on the host before launching a kernel:
 
-* the output tile width ``bn`` (§IV-C selection via the tuning cache), and
+* the output tile width ``bn`` (§IV-C selection via the tuning cache),
 * for WCSR, the load-balancing task decomposition (§III-C) — the python
-  loop over windows that used to re-run on every call.
+  loop over windows that used to re-run on every call — and the resolved
+  §III-A gather-pipeline depth Q (explicit config, measured auto-tune
+  winner, or the paper's serial default).
 
-Plans are memoized per (structure, n, dtype, impl, bn, chunks_per_task);
+Plans are memoized per (structure, n, dtype, bn, chunks_per_task,
+pipeline_depth);
 the task decomposition has its own cache keyed only by
 (structure, chunks_per_task), so value swaps *and dtype casts* on the same
 ``SparseStructure`` never re-derive tasks — exactly the per-step overhead a
@@ -34,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ops.config import OpConfig, current_config
-from repro.ops.tiling import resolve_bn
+from repro.ops.tiling import resolve_bn, resolve_pipeline_depth, tuned_entry
 from repro.sparse.structure import SparseStructure
 
 __all__ = ["Plan", "make_plan", "make_partition", "plan_cache_info",
@@ -50,6 +53,9 @@ class Plan:
     bn: int
     chunks_per_task: Optional[int]  # wcsr only
     tasks: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]  # wcsr only
+    # resolved §III-A gather-pipeline depth Q (wcsr kernel path; None for
+    # formats whose operand streams ride Mosaic's implicit pipeline)
+    pipeline_depth: Optional[int] = None
 
     @property
     def num_tasks(self) -> int:
@@ -88,6 +94,20 @@ def clear_plan_cache() -> None:
     _DECOMPOSITIONS = 0
     _P_HITS = 0
     _P_MISSES = 0
+
+
+def drop_auto_plans() -> None:
+    """Drop cached plans built from ``"auto"`` knobs (post-autotune refresh).
+
+    Only ``_PLANS`` entries whose config left ``bn`` on auto can have baked
+    in a now-stale selection (tuned ``chunks_per_task`` / ``pipeline_depth``
+    land in the cache *key*, so those re-resolve naturally). Task
+    decompositions and mesh partitions are keyed purely by structure and
+    are never invalidated by a tune — they, and all counters, stay intact
+    so serving keeps its cross-tick amortization invariants.
+    """
+    for key in [k for k in _PLANS if k[3] in (None, "auto")]:
+        del _PLANS[key]
 
 
 def plan_cache_info() -> PlanCacheInfo:
@@ -144,19 +164,32 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     if dtype is None:
         dtype = jnp.bfloat16
     cfg = current_config() if cfg is None else cfg
-    cpt = (cfg.chunks_per_task or 8) if structure.fmt == "wcsr" else None
-    key = (structure, int(n), str(np.dtype(dtype)), cfg.bn, cpt)
+    bm, bk = structure.block
+    if structure.fmt == "wcsr":
+        tuned = tuned_entry("spmm", "wcsr", structure.shape, int(n),
+                            structure.block, dtype)
+        cpt = cfg.chunks_per_task or (tuned or {}).get("chunks_per_task") or 8
+        # resolved here (cheap dict lookup) so the cache key — and thus the
+        # plan a serving step reuses — is pinned to the depth the kernel
+        # will actually run with, even if a later autotune re-tunes "auto"
+        depth = resolve_pipeline_depth(
+            cfg.pipeline_depth, default=1, op="spmm", fmt="wcsr",
+            shape=structure.shape, n=int(n), block=structure.block,
+            dtype=dtype, floor=1)
+    else:
+        cpt = None
+        depth = None
+    key = (structure, int(n), str(np.dtype(dtype)), cfg.bn, cpt, depth)
     plan = _PLANS.get(key)
     if plan is not None:
         _HITS += 1
         return plan
     _MISSES += 1
-    bm, bk = structure.block
     bn = resolve_bn(cfg.bn, int(n), bm, bk, dtype, op="spmm",
                     fmt=structure.fmt, shape=structure.shape, impl="kernel")
     tasks = _tasks_for(structure, cpt) if structure.fmt == "wcsr" else None
     plan = Plan(structure=structure, n=int(n), bn=bn, chunks_per_task=cpt,
-                tasks=tasks)
+                tasks=tasks, pipeline_depth=depth)
     _PLANS[key] = plan
     return plan
 

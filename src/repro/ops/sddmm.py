@@ -14,7 +14,7 @@ from repro.kernels.sddmm.ref import sddmm_ref
 from repro.ops.config import (OpConfig, resolve_interpret,
                               resolved_config)
 from repro.ops.registry import on_tpu, register_backend, resolve_backend
-from repro.ops.tiling import pad_cols, resolve_bn
+from repro.ops.tiling import pad_cols, resolve_bn, resolve_pipeline_depth
 from repro.sparse.formats import BCSR
 from repro.sparse.tensor import SparseTensor
 
@@ -22,10 +22,15 @@ __all__ = ["sddmm"]
 
 
 def sddmm(dc: jax.Array, b: jax.Array, a_struct: BCSR, *, impl=None, bn=None,
-          out_dtype=None, interpret=None) -> jax.Array:
-    """``dvalues[nnz, bm, bk] = (dC @ B^T)`` sampled at ``a_struct``'s blocks."""
+          out_dtype=None, interpret=None, pipeline_depth=None) -> jax.Array:
+    """``dvalues[nnz, bm, bk] = (dC @ B^T)`` sampled at ``a_struct``'s blocks.
+
+    ``pipeline_depth`` >= 1 routes the indirect B tiles through the shared
+    §III-A gather pipeline (``repro.kernels.pipeline``); the default (0 /
+    "auto" with no tuned entry) keeps them on Mosaic's BlockSpec stream.
+    """
     cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
-                          interpret=interpret)
+                          interpret=interpret, pipeline_depth=pipeline_depth)
     if isinstance(a_struct, SparseTensor):
         a_struct = a_struct.raw
     backend = resolve_backend("sddmm", cfg.impl)
@@ -43,6 +48,9 @@ def _sddmm_pallas(dc, b, a_struct: BCSR, cfg: OpConfig, interpret: bool):
     n = dc.shape[1]
     bn = resolve_bn(cfg.bn, n, bm, bk, a_struct.dtype, op="sddmm", fmt="bcsr",
                     shape=a_struct.shape, impl="kernel")
+    depth = resolve_pipeline_depth(
+        cfg.pipeline_depth, default=0, op="sddmm", fmt="bcsr",
+        shape=a_struct.shape, n=n, block=a_struct.block, dtype=a_struct.dtype)
     (dc, b), bn_eff, _ = pad_cols([dc, b], n, bn)
     return sddmm_kernel(
         a_struct.block_rows,
@@ -54,6 +62,7 @@ def _sddmm_pallas(dc, b, a_struct: BCSR, cfg: OpConfig, interpret: bool):
         bn=bn_eff,
         out_dtype=cfg.out_dtype,
         interpret=interpret,
+        pipeline_depth=depth,
     )
 
 

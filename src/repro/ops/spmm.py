@@ -24,7 +24,9 @@ the structure-aware partitioner once.
 
 from __future__ import annotations
 
+import inspect
 import sys
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -47,16 +49,33 @@ __all__ = ["spmm"]
 
 
 def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
-         chunks_per_task=None, interpret=None, **extras) -> jax.Array:
+         chunks_per_task=None, interpret=None, pipeline_depth=None,
+         **extras) -> jax.Array:
     """``C[m, n] = A_sparse @ B`` for any registered sparse format of ``a``.
 
     Keyword arguments override the ambient ``use_config(...)`` /
-    ``REPRO_SPARSE_IMPL`` configuration for this call only. ``extras`` are
-    forwarded to the backend (e.g. the WCSR kernel's ``pipeline_gather``).
+    ``REPRO_SPARSE_IMPL`` configuration for this call only.
+    ``pipeline_depth`` sets the §III-A gather-pipeline depth Q on kernel
+    paths with an indirect operand (WCSR: 1 = serial, 2 = double buffer,
+    3 = the paper's circular buffer; ``"auto"`` consults the measured
+    ``autotune_spmm`` cache). Remaining ``extras`` are forwarded to the
+    backend (e.g. the sharded path's ``reduce=``) and validated against
+    its signature — unknown keywords raise instead of being silently
+    swallowed.
     """
+    if "pipeline_gather" in extras:
+        warnings.warn(
+            "spmm(pipeline_gather=...) is deprecated; use "
+            "pipeline_depth=2 (double buffer) / pipeline_depth=1 (serial) "
+            "or OpConfig(pipeline_depth=...)",
+            DeprecationWarning, stacklevel=2)
+        gather = extras.pop("pipeline_gather")
+        if pipeline_depth is None:
+            pipeline_depth = 2 if gather else 1
     cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
                           chunks_per_task=chunks_per_task,
-                          interpret=interpret)
+                          interpret=interpret,
+                          pipeline_depth=pipeline_depth)
     if isinstance(a, SparseTensor):
         a = _maybe_autoshard(a)
     if isinstance(a, SparseTensor):
@@ -64,7 +83,39 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
         a = a.raw
     op = resolve_format(a)
     backend = resolve_backend(op, cfg.impl)
+    _validate_extras(backend, extras)
     return backend.fn(a, b, cfg, **extras)
+
+
+def _validate_extras(backend, extras) -> None:
+    """Reject keywords the selected backend does not accept.
+
+    ``**extras`` used to be forwarded blind, so a typo'd knob
+    (``pipline_gather=True``) was a silent no-op. Accepted knobs are the
+    backend's keyword-accepting parameters beyond the fixed
+    ``(a, b, cfg)`` prefix — keyword-only or plain defaults, so externally
+    registered backends keep working; anything else raises here. A backend
+    with a ``**kwargs`` catch-all opts out entirely.
+    """
+    if not extras:
+        return
+    try:
+        params = list(inspect.signature(backend.fn).parameters.values())
+    except (TypeError, ValueError):  # builtins / C callables: can't check
+        return
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return
+    positional = [p for p in params
+                  if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                                inspect.Parameter.POSITIONAL_OR_KEYWORD)]
+    accepted = {p.name for p in params
+                if p.kind is inspect.Parameter.KEYWORD_ONLY}
+    accepted |= {p.name for p in positional[3:]}  # knobs after (a, b, cfg)
+    unknown = sorted(set(extras) - accepted)
+    if unknown:
+        raise TypeError(
+            f"spmm: unknown keyword argument(s) {unknown} for backend "
+            f"{backend.name!r}; it accepts {sorted(accepted) or 'none'}")
 
 
 def _maybe_autoshard(a: SparseTensor):
@@ -139,14 +190,13 @@ def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig, *, structure=None):
 
 
 @register_backend("spmm/wcsr", "ref", priority=50)
-def _wcsr_spmm_ref(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False,
-                   structure=None):
-    del pipeline_gather, structure  # kernel-path knobs; irrelevant to jnp ref
+def _wcsr_spmm_ref(a: WCSR, b, cfg: OpConfig, *, structure=None):
+    del structure  # kernel-path knob; irrelevant to jnp ref
     return wcsr_spmm_ref(a, b, out_dtype=cfg.out_dtype)
 
 
 def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
-                      pipeline_gather: bool = False, structure=None):
+                      structure=None):
     if structure is None:
         if isinstance(a.window_ptr, jax.core.Tracer):
             raise ValueError(
@@ -175,7 +225,7 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
         chunks_per_task=plan.chunks_per_task,
         out_dtype=jnp.float32,
         interpret=interpret,
-        pipeline_gather=pipeline_gather,
+        pipeline_depth=plan.pipeline_depth,
     )  # [T, b_row, n_padded]
     # deterministic combine of split-window partials (atomicAdd analogue)
     out = jax.ops.segment_sum(
@@ -185,14 +235,13 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
 
 
 @register_backend("spmm/wcsr", "kernel", available=on_tpu, priority=100)
-def _wcsr_spmm_kernel(a: WCSR, b, cfg: OpConfig, *, pipeline_gather=False,
-                      structure=None):
+def _wcsr_spmm_kernel(a: WCSR, b, cfg: OpConfig, *, structure=None):
     return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
-                             pipeline_gather, structure)
+                             structure)
 
 
 @register_backend("spmm/wcsr", "kernel_interpret", priority=10)
 def _wcsr_spmm_kernel_interpret(a: WCSR, b, cfg: OpConfig, *,
-                                pipeline_gather=False, structure=None):
+                                structure=None):
     return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True),
-                             pipeline_gather, structure)
+                             structure)

@@ -1,6 +1,6 @@
 """Auto-tiling for the unified sparse-op API (paper §IV-C, centralized).
 
-Two pieces the per-kernel dispatchers used to duplicate:
+Three pieces the per-kernel dispatchers used to duplicate or lacked:
 
 * ``resolve_bn`` / ``auto_bn`` — ``bn="auto"`` routes through
   ``kernels.tuning.select_bn`` (the paper's tile-width policy), memoized in
@@ -10,20 +10,33 @@ Two pieces the per-kernel dispatchers used to duplicate:
 * ``pad_cols`` / ``unpad_cols`` — the N-padding logic (clamp bn to N for
   narrow operands, zero-pad N up to a bn multiple, slice the pad back off)
   previously copy-pasted in the bcsr, wcsr and sddmm dispatchers.
+
+* ``autotune_spmm`` / ``resolve_pipeline_depth`` — the *measured* tuner
+  over ``(bn, chunks_per_task, pipeline_depth)``: paper §IV-C treats tile
+  width as the free parameter, and Table 2 shows the async pipeline depth
+  (§III-A's Q) matters just as much; Acc-SpMM and cuTeSpMM both tune the
+  two together. ``autotune_spmm`` times real ``spmm`` calls per candidate
+  and memoizes the winner; ``make_plan`` (and the sddmm/attention
+  dispatchers via ``resolve_pipeline_depth``) pick the tuned values up
+  whenever the config leaves the knobs on ``"auto"``. Selections are
+  counted per depth and surfaced in ``tuning_cache_info()`` (and thus
+  ``ServeEngine.stats()``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.pipeline import validate_depth
 from repro.kernels.tuning import select_bn
 
 __all__ = ["resolve_bn", "auto_bn", "pad_cols", "unpad_cols",
-           "tuning_cache_info", "clear_tuning_cache", "TuningCacheInfo"]
+           "tuning_cache_info", "clear_tuning_cache", "TuningCacheInfo",
+           "autotune_spmm", "tuned_entry", "resolve_pipeline_depth"]
 
 
 @dataclasses.dataclass
@@ -31,24 +44,41 @@ class TuningCacheInfo:
     hits: int
     misses: int
     size: int
+    # measured (bn, chunks_per_task, pipeline_depth) auto-tune entries
+    autotuned: int = 0
+    # pipeline-depth selection counters: depth -> number of times a plan /
+    # dispatcher resolved that depth (0 = Mosaic implicit pipeline)
+    pipeline_depths: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 _CACHE: dict = {}
 _HITS = 0
 _MISSES = 0
+# measured auto-tune results: key -> {"bn", "chunks_per_task",
+# "pipeline_depth", "us"}; key deliberately omits impl so a tune measured
+# under kernel_interpret (CPU CI) steers the kernel path too.
+_TUNED: dict = {}
+# depth -> times resolve_pipeline_depth handed that depth to a kernel plan
+_DEPTH_SELECTIONS: Dict[int, int] = {}
 
 
 def clear_tuning_cache() -> None:
-    """Drop all memoized §IV-C tile selections; zero the counters."""
+    """Drop all memoized §IV-C tile selections, measured auto-tune entries
+    and pipeline-depth selection counters."""
     global _HITS, _MISSES
     _CACHE.clear()
+    _TUNED.clear()
+    _DEPTH_SELECTIONS.clear()
     _HITS = 0
     _MISSES = 0
 
 
 def tuning_cache_info() -> TuningCacheInfo:
-    """Hit/miss/size counters for the §IV-C tile-selection cache."""
-    return TuningCacheInfo(hits=_HITS, misses=_MISSES, size=len(_CACHE))
+    """Hit/miss/size counters for the §IV-C tile-selection cache, plus the
+    measured auto-tune entry count and per-depth selection counters."""
+    return TuningCacheInfo(hits=_HITS, misses=_MISSES, size=len(_CACHE),
+                           autotuned=len(_TUNED),
+                           pipeline_depths=dict(_DEPTH_SELECTIONS))
 
 
 def auto_bn(n: int, bm: int = 128, bk: int = 128, dtype=jnp.bfloat16, *,
@@ -72,8 +102,12 @@ def auto_bn(n: int, bm: int = 128, bk: int = 128, dtype=jnp.bfloat16, *,
 def resolve_bn(bn: Union[int, str, None], n: int, bm: int, bk: int, dtype, *,
                op: str = "spmm", fmt: str = "", shape: Tuple[int, ...] = (),
                impl: str = "") -> int:
-    """An explicit ``bn`` passes through; ``"auto"``/None selects one."""
+    """An explicit ``bn`` passes through; ``"auto"``/None selects one —
+    preferring a measured ``autotune_spmm`` winner over the §IV-C policy."""
     if bn is None or bn == "auto":
+        tuned = tuned_entry(op, fmt, shape, n, (bm, bk), dtype)
+        if tuned is not None:
+            return int(tuned["bn"])
         return auto_bn(n, bm, bk, dtype, op=op, fmt=fmt, shape=shape,
                        impl=impl)
     return int(bn)
@@ -97,3 +131,134 @@ def pad_cols(arrs, n: int, bn: int):
 def unpad_cols(out, n: int, pad: int):
     """Slice the N padding back off the last dim."""
     return out[..., :n] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# Measured auto-tune over (bn, chunks_per_task, pipeline_depth)
+# ---------------------------------------------------------------------------
+
+
+def _tuned_key(op: str, fmt: str, shape, n: int, block, dtype):
+    return (op, fmt or "", tuple(shape) + (int(n),),
+            (int(block[0]), int(block[1])), str(np.dtype(dtype)))
+
+
+def tuned_entry(op: str, fmt: str, shape, n: int, block, dtype
+                ) -> Optional[dict]:
+    """The measured auto-tune winner for this problem, or None."""
+    return _TUNED.get(_tuned_key(op, fmt, shape, n, block, dtype))
+
+
+def resolve_pipeline_depth(depth: Union[int, str, None], *, default: int,
+                           op: str = "spmm", fmt: str = "", shape=(),
+                           n: int = 0, block=(128, 128),
+                           dtype=jnp.bfloat16,
+                           floor: int = 0) -> int:
+    """Resolve the §III-A pipeline depth Q for one kernel launch.
+
+    An explicit int pins it; ``"auto"``/None takes a measured
+    ``autotune_spmm`` winner when one is cached for this problem, else
+    ``default`` (WCSR: 1 — the paper's serial gather; SDDMM / block
+    attention: 0 — Mosaic's implicit grid pipeline). Depth 0 means "no
+    explicit pipeline, use the kernel's implicit/serial scheme"; kernels
+    with no Mosaic path for the operand (WCSR's gather) pass ``floor=1``
+    so an engine-wide ``pipeline_depth=0`` degrades to the serial gather
+    instead of failing inside the kernel. Every resolution is counted per
+    depth in ``tuning_cache_info().pipeline_depths``.
+    """
+    if depth is None or depth == "auto":
+        tuned = tuned_entry(op, fmt, shape, n, block, dtype)
+        if tuned is not None and tuned.get("pipeline_depth") is not None:
+            depth = tuned["pipeline_depth"]
+        else:
+            depth = default
+    depth = max(validate_depth(depth, allow_zero=True), floor)
+    _DEPTH_SELECTIONS[depth] = _DEPTH_SELECTIONS.get(depth, 0) + 1
+    return depth
+
+
+def _time_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    import time
+
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
+                  impl=None, warmup: int = 1, iters: int = 3) -> dict:
+    """Measured sweep over ``(bn, chunks_per_task, pipeline_depth)``.
+
+    Times real ``repro.ops.spmm(a, b)`` calls for every candidate combo,
+    memoizes the winner for this (format, shape, N, block, dtype) problem,
+    and returns it as ``{"bn", "chunks_per_task", "pipeline_depth", "us"}``.
+    Subsequent ``make_plan`` / ``spmm`` calls whose config leaves ``bn`` /
+    ``chunks_per_task`` / ``pipeline_depth`` on ``"auto"`` adopt the tuned
+    values (stale auto-``bn`` plans are dropped so they re-resolve; task
+    splits and mesh partitions are untouched).
+
+    ``a`` is a ``SparseTensor`` or raw BCSR/WCSR operand; candidates
+    default per format — WCSR sweeps all three knobs, BCSR (Mosaic-managed
+    pipeline) sweeps ``bn`` only. ``impl`` defaults to the registry pick
+    (interpret-mode kernels on CPU), so CI can exercise the tuner; on TPU
+    the same call measures compiled kernels.
+    """
+    from repro.ops.config import use_config
+    from repro.ops.plan import drop_auto_plans
+    from repro.ops.spmm import spmm
+    from repro.sparse.structure import structure_of
+
+    import jax
+
+    st = structure_of(a)
+    n = int(b.shape[1])
+    bm, bk = st.block
+    dtype = getattr(a, "dtype", None) or b.dtype
+    if bns is None:
+        policy = select_bn(n, bm, bk, np.dtype(dtype).itemsize)
+        bns = tuple(dict.fromkeys(
+            c for c in (policy, 128, 256) if c <= max(n, 128)))
+    if st.fmt == "wcsr":
+        depths = (1, 2, 3) if depths is None else depths
+        chunks = (4, 8) if chunks_per_task is None else chunks_per_task
+    else:
+        # BCSR keeps its contiguous streams on Mosaic's implicit pipeline
+        # (see kernels/bcsr/kernel.py); only the tile width is tunable.
+        depths = (None,) if depths is None else depths
+        chunks = (None,) if chunks_per_task is None else chunks_per_task
+    best = None
+    # the sweep itself resolves every candidate depth; snapshot the
+    # selection counters so the dashboard reflects only what real traffic
+    # runs with, not the tuner's probing
+    counters_before = dict(_DEPTH_SELECTIONS)
+    try:
+        for bn in bns:
+            for cpt in chunks:
+                for depth in depths:
+                    with use_config(impl=impl, bn=bn, chunks_per_task=cpt,
+                                    pipeline_depth=depth):
+                        f = jax.jit(lambda b_: spmm(a, b_))
+                        us = _time_us(f, b, warmup=warmup, iters=iters)
+                    cand = {"bn": int(bn),
+                            "chunks_per_task": cpt if cpt is None
+                            else int(cpt),
+                            "pipeline_depth": depth if depth is None
+                            else int(depth),
+                            "us": us}
+                    if best is None or us < best["us"]:
+                        best = cand
+    finally:
+        _DEPTH_SELECTIONS.clear()
+        _DEPTH_SELECTIONS.update(counters_before)
+    _TUNED[_tuned_key("spmm", st.fmt, st.shape, n, st.block, dtype)] = best
+    # auto-plans cached before this tune baked in the old bn selection;
+    # task splits, partitions and counters are tune-invariant and kept
+    drop_auto_plans()
+    return dict(best)

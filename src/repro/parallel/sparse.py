@@ -464,8 +464,8 @@ def _reduce(x: jax.Array, axis: str, method: str) -> jax.Array:
 
 
 def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
-                 inner_impl: Optional[str] = None, reduce: str = "psum",
-                 pipeline_gather: bool = False) -> jax.Array:
+                 inner_impl: Optional[str] = None,
+                 reduce: str = "psum") -> jax.Array:
     """``C = A_sharded @ B`` over ``a.mesh``: local kernels + collective sum.
 
     Each device runs the single-device backend (resolved from
@@ -498,6 +498,8 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
         plans = [make_plan(s, n, cfg_bn, dtype=a.dtype)
                  for s in a.partition.shards]
         cpt = plans[0].chunks_per_task
+        # one global §III-A depth, like bn: shards run one SPMD program
+        depth = plans[0].pipeline_depth
         num_tasks = max(p.num_tasks for p in plans)
         t_win = np.zeros((a.num_shards, num_tasks), np.int32)
         t_start = np.zeros((a.num_shards, num_tasks), np.int32)
@@ -520,7 +522,7 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
                 partial = wcsr_spmm_kernel(
                     ts, tn, ci, v, bmat, b_row=bm, b_col=bk, bn=bn_eff,
                     chunks_per_task=cpt, out_dtype=jnp.float32,
-                    interpret=interpret, pipeline_gather=pipeline_gather)
+                    interpret=interpret, pipeline_depth=depth)
                 out = jax.ops.segment_sum(partial, tw,
                                           num_segments=num_windows)
                 out = out.reshape(m, -1)
@@ -576,19 +578,22 @@ def _register():
         stored_elements=lambda a: a.structure.stored_elements,
     ))
 
+    # knobs are declared keyword-only (no **kwargs) so the spmm-level
+    # extras validation can reject typos instead of forwarding them blind
+
     @register_backend("spmm/sharded", "kernel", available=on_tpu,
                       priority=100)
-    def _sharded_kernel(a, b, cfg: OpConfig, **extras):
-        return sharded_spmm(a, b, cfg, inner_impl="kernel", **extras)
+    def _sharded_kernel(a, b, cfg: OpConfig, *, reduce="psum"):
+        return sharded_spmm(a, b, cfg, inner_impl="kernel", reduce=reduce)
 
     @register_backend("spmm/sharded", "ref", priority=50)
-    def _sharded_ref(a, b, cfg: OpConfig, **extras):
-        return sharded_spmm(a, b, cfg, inner_impl="ref", **extras)
+    def _sharded_ref(a, b, cfg: OpConfig, *, reduce="psum"):
+        return sharded_spmm(a, b, cfg, inner_impl="ref", reduce=reduce)
 
     @register_backend("spmm/sharded", "kernel_interpret", priority=10)
-    def _sharded_kernel_interpret(a, b, cfg: OpConfig, **extras):
+    def _sharded_kernel_interpret(a, b, cfg: OpConfig, *, reduce="psum"):
         return sharded_spmm(a, b, cfg, inner_impl="kernel_interpret",
-                            **extras)
+                            reduce=reduce)
 
 
 _register()

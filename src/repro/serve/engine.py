@@ -160,15 +160,22 @@ class ServeEngine:
         — per-shard stored work and the worst/mean ratio. Like the other
         cache counters it is process-global: partitions created outside
         this engine (another engine, benchmarks) appear too.
+        ``pipeline_depths`` (also on ``tuning_cache``) counts how many
+        kernel plans resolved each §III-A gather-pipeline depth Q — the
+        dashboard view of whether the measured auto-tune (or an explicit
+        ``OpConfig(pipeline_depth=...)``) is actually steering the hot
+        path.
         """
         from repro.ops import (partition_balance_report, plan_cache_info,
                                tuning_cache_info)
 
+        tuning = tuning_cache_info()
         return {
             "active_slots": sum(a is not None for a in self.active),
             "free_slots": sum(a is None for a in self.active),
             "plan_cache": plan_cache_info(),
-            "tuning_cache": tuning_cache_info(),
+            "tuning_cache": tuning,
+            "pipeline_depths": tuning.pipeline_depths,
             "sparse_shards": partition_balance_report(),
         }
 

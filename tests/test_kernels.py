@@ -66,17 +66,50 @@ def test_wcsr_kernel_sweep(rng, m, k, n, b_row, b_col, density,
 
 @pytest.mark.parametrize("chunks_per_task", [2, 8])
 def test_wcsr_pipelined_gather_matches(rng, chunks_per_task):
-    """Beyond-paper double-buffered gather variant == synchronous variant."""
+    """Q-deep gather pipeline instances == the serial depth=1 instance
+    (the legacy shim's pipeline_gather bool still routes correctly)."""
+    from repro.ops import spmm
+
     d = rng.normal(size=(96, 160)).astype(np.float32)
     d *= rng.random(d.shape) < 0.25
     w = wcsr_from_dense(d, b_row=32, b_col=8)
     b = jnp.asarray(rng.normal(size=(160, 64)).astype(np.float32))
-    sync = np.asarray(wcsr_spmm(w, b, impl="kernel_interpret", bn=32,
-                                chunks_per_task=chunks_per_task))
-    db = np.asarray(wcsr_spmm(w, b, impl="kernel_interpret", bn=32,
-                              chunks_per_task=chunks_per_task,
-                              pipeline_gather=True))
-    np.testing.assert_allclose(db, sync, atol=1e-5)
+    sync = np.asarray(spmm(w, b, impl="kernel_interpret", bn=32,
+                           chunks_per_task=chunks_per_task,
+                           pipeline_depth=1))
+    legacy = np.asarray(wcsr_spmm(w, b, impl="kernel_interpret", bn=32,
+                                  chunks_per_task=chunks_per_task,
+                                  pipeline_gather=True))
+    np.testing.assert_allclose(legacy, sync, atol=1e-5)
+    for depth in (2, 3):
+        q = np.asarray(spmm(w, b, impl="kernel_interpret", bn=32,
+                            chunks_per_task=chunks_per_task,
+                            pipeline_depth=depth))
+        np.testing.assert_allclose(q, sync, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [8, 32, 100, 127])
+def test_bcsr_small_n(rng, n):
+    """n below the 128-lane width: the tile is the whole operand."""
+    d = _mk(rng, 64, 64, 32, 32, 0.5, np.float32)
+    a = bcsr_from_dense(d, (32, 32))
+    b = jnp.asarray(rng.normal(size=(64, n)).astype(np.float32))
+    got = np.asarray(run_bcsr_spmm(a, b, bn=512))
+    ref = np.asarray(bcsr_spmm_ref(a, b))
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+
+
+@pytest.mark.parametrize("n,bn", [(130, 512), (130, 64), (200, 64),
+                                  (300, 128)])
+def test_bcsr_non_lane_aligned_n(rng, n, bn):
+    """n >= 128 but not a multiple of bn: clamp-then-pad must round-trip."""
+    d = _mk(rng, 64, 64, 32, 32, 0.5, np.float32)
+    a = bcsr_from_dense(d, (32, 32))
+    b = jnp.asarray(rng.normal(size=(64, n)).astype(np.float32))
+    got = np.asarray(run_bcsr_spmm(a, b, bn=bn))
+    ref = np.asarray(bcsr_spmm_ref(a, b))
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
 
 
 def test_wcsr_empty_matrix(rng):

@@ -1,0 +1,297 @@
+"""The unified §III-A async pipeline engine: depth-swept interpret-mode
+equivalence for every kernel with an indirect operand, knob promotion
+through OpConfig / make_plan / the plan cache, extras validation, the
+pipeline_gather deprecation path, and the measured auto-tuner."""
+
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.ops as ops
+from repro.kernels.pipeline import MAX_DEPTH, validate_depth
+from repro.ops import OpConfig, make_plan, use_config
+from repro.sparse import (SparseTensor, apply_block_mask, bcsr_from_dense,
+                          random_block_mask, wcsr_from_dense)
+
+DEPTHS = (1, 2, 3)
+
+
+def _wcsr(rng, m, k, density, b_row=32, b_col=8):
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    return wcsr_from_dense(d, b_row=b_row, b_col=b_col)
+
+
+# ---------------------------------------------------------------------------
+# depth-swept equivalence vs the jnp references
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("density,chunks_per_task", [
+    (0.25, 4),   # multi-task windows
+    (0.02, 8),   # single-chunk windows: nchunks (1) < depth (2, 3)
+])
+def test_wcsr_depth_matches_ref(rng, depth, density, chunks_per_task):
+    w = _wcsr(rng, 96, 160, density)
+    b = jnp.asarray(rng.normal(size=(160, 64)).astype(np.float32))
+    ref = np.asarray(ops.spmm(w, b, impl="ref"))
+    got = np.asarray(ops.spmm(w, b, impl="kernel_interpret", bn=32,
+                              chunks_per_task=chunks_per_task,
+                              pipeline_depth=depth))
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_wcsr_empty_matrix_all_depths(rng, depth):
+    w = wcsr_from_dense(np.zeros((64, 64), np.float32), b_row=32, b_col=8)
+    b = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    got = np.asarray(ops.spmm(w, b, impl="kernel_interpret", bn=32,
+                              pipeline_depth=depth))
+    assert np.allclose(got, 0)
+
+
+def test_wcsr_all_depths_bitwise_equal(rng):
+    """f32 accumulation order is depth-invariant: identical results."""
+    w = _wcsr(rng, 64, 96, 0.3)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    outs = [np.asarray(ops.spmm(w, b, impl="kernel_interpret", bn=32,
+                                pipeline_depth=q)) for q in DEPTHS]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+@pytest.mark.parametrize("depth", (0,) + DEPTHS)
+def test_sddmm_depth_matches_ref(rng, depth):
+    d = apply_block_mask(
+        rng.normal(size=(64, 96)).astype(np.float32),
+        random_block_mask((64, 96), (32, 32), 0.5, seed=2), (32, 32))
+    a = bcsr_from_dense(d, (32, 32))
+    dc = jnp.asarray(rng.normal(size=(64, 80)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(96, 80)).astype(np.float32))
+    ref = np.asarray(ops.sddmm(dc, b, a, impl="ref"))
+    got = np.asarray(ops.sddmm(dc, b, a, impl="kernel_interpret", bn=16,
+                               pipeline_depth=depth))
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+
+
+def test_sddmm_single_tile_below_depth(rng):
+    """One n-tile (nchunks=1) is fewer chunks than any depth >= 2."""
+    d = rng.normal(size=(64, 64)).astype(np.float32)
+    a = bcsr_from_dense(d, (32, 32))
+    dc = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    ref = np.asarray(ops.sddmm(dc, b, a, impl="ref"))
+    for depth in DEPTHS:
+        got = np.asarray(ops.sddmm(dc, b, a, impl="kernel_interpret", bn=32,
+                                   pipeline_depth=depth))
+        np.testing.assert_allclose(got, ref,
+                                   atol=2e-4 * max(1, np.abs(ref).max()))
+
+
+@pytest.mark.parametrize("depth", (0,) + DEPTHS)
+def test_block_attn_depth_matches_ref(rng, depth):
+    from repro.kernels.block_attn.ref import block_sparse_attention_ref
+
+    B, H, KVH, S, D = 2, 4, 2, 256, 32
+    bq = bk = 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, KVH, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, KVH, S, D)).astype(np.float32))
+    nb = S // bq
+    mask = np.zeros((H, nb, nb), bool)
+    for h in range(H):
+        for i in range(nb):
+            mask[h, i, max(0, i - 1 - h % 2): i + 1] = True
+            mask[h, i, 0] = True
+    mask[0, 0, :] = False  # an empty-window q-block (count == 0 < depth)
+    ref = np.asarray(block_sparse_attention_ref(
+        q, k, v, mask, block_q=bq, block_k=bk))
+    got = np.asarray(ops.sparse_attention(
+        q, k, v, mask, block_q=bq, block_k=bk, impl="kernel_interpret",
+        pipeline_depth=depth))
+    np.testing.assert_allclose(got, ref, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# knob promotion: OpConfig -> make_plan -> kernel, cache keyed on depth
+# ---------------------------------------------------------------------------
+
+
+def test_depth_validation():
+    assert validate_depth(1) == 1
+    assert validate_depth(0, allow_zero=True) == 0
+    for bad in (0, -1, MAX_DEPTH + 1):
+        with pytest.raises(ValueError):
+            validate_depth(bad)
+
+
+def test_use_config_pipeline_depth_reaches_kernel(rng):
+    w = _wcsr(rng, 64, 96, 0.3)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    ref = np.asarray(ops.spmm(w, b, impl="ref"))
+    with use_config(impl="kernel_interpret", bn=32, pipeline_depth=3):
+        got = np.asarray(ops.spmm(w, b))
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+
+
+def test_plan_carries_depth_and_keys_cache(rng):
+    ops.clear_plan_cache()
+    st = SparseTensor.from_dense(
+        np.asarray(_wcsr_dense(rng)), format="wcsr", b_row=32, b_col=8)
+    p2 = make_plan(st, 64, OpConfig(bn=32, pipeline_depth=2))
+    p3 = make_plan(st, 64, OpConfig(bn=32, pipeline_depth=3))
+    assert p2.pipeline_depth == 2 and p3.pipeline_depth == 3
+    assert p2 is not p3  # distinct cache entries per depth
+    assert make_plan(st, 64, OpConfig(bn=32, pipeline_depth=2)) is p2
+    info = ops.plan_cache_info()
+    assert info.misses >= 2 and info.hits >= 1
+    # the task decomposition is depth-independent: shared across depths
+    assert p2.tasks is p3.tasks
+
+
+def _wcsr_dense(rng):
+    d = rng.normal(size=(64, 96)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.3
+    return d
+
+
+def test_bcsr_plan_has_no_depth(rng):
+    st = SparseTensor.from_dense(
+        apply_block_mask(rng.normal(size=(64, 64)).astype(np.float32),
+                         random_block_mask((64, 64), (32, 32), 0.5, seed=3),
+                         (32, 32)),
+        format="bcsr", block=(32, 32))
+    assert make_plan(st, 64, OpConfig(bn=32)).pipeline_depth is None
+
+
+def test_depth_counters_reported(rng):
+    w = _wcsr(rng, 64, 96, 0.3)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    before = ops.tuning_cache_info().pipeline_depths.get(3, 0)
+    ops.spmm(w, b, impl="kernel_interpret", bn=32, pipeline_depth=3)
+    after = ops.tuning_cache_info().pipeline_depths.get(3, 0)
+    assert after == before + 1
+
+
+# ---------------------------------------------------------------------------
+# extras validation + deprecation path
+# ---------------------------------------------------------------------------
+
+
+def test_spmm_rejects_unknown_extras(rng):
+    w = _wcsr(rng, 64, 96, 0.3)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    with pytest.raises(TypeError, match="pipline_gather"):
+        ops.spmm(w, b, impl="kernel_interpret", pipline_gather=True)
+    with pytest.raises(TypeError, match="no_such_knob"):
+        ops.spmm(w, b, impl="ref", no_such_knob=1)
+
+
+def test_legacy_shim_inherits_ambient_depth(rng):
+    """wcsr_spmm(a, b) without pipeline_gather must not pin depth 1: an
+    ambient use_config(pipeline_depth=...) scope reaches legacy callers."""
+    import warnings as w
+
+    from repro.kernels.wcsr.ops import wcsr_spmm
+
+    wm = _wcsr(rng, 64, 96, 0.3)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    before = ops.tuning_cache_info().pipeline_depths.get(3, 0)
+    with w.catch_warnings():
+        w.simplefilter("ignore", DeprecationWarning)
+        with use_config(pipeline_depth=3):
+            wcsr_spmm(wm, b, impl="kernel_interpret", bn=32)
+    assert ops.tuning_cache_info().pipeline_depths.get(3, 0) == before + 1
+
+
+def test_pipeline_gather_deprecated_maps_to_depth(rng):
+    w = _wcsr(rng, 64, 96, 0.3)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    ref = np.asarray(ops.spmm(w, b, impl="ref"))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = np.asarray(ops.spmm(w, b, impl="kernel_interpret", bn=32,
+                                  pipeline_gather=True))
+    assert any(issubclass(r.category, DeprecationWarning)
+               and "pipeline_depth" in str(r.message) for r in rec)
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+
+
+# ---------------------------------------------------------------------------
+# measured auto-tune over (bn, chunks_per_task, pipeline_depth)
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_selects_and_steers_auto(rng):
+    w = _wcsr(rng, 64, 96, 0.3)
+    st = SparseTensor.wrap(w)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    ops.clear_tuning_cache()
+    best = ops.autotune_spmm(st, b, impl="kernel_interpret",
+                             bns=(32,), chunks_per_task=(4,),
+                             depths=(1, 2), warmup=0, iters=1)
+    assert best["pipeline_depth"] in (1, 2)
+    assert best["bn"] == 32 and best["chunks_per_task"] == 4
+    info = ops.tuning_cache_info()
+    assert info.autotuned == 1
+    # the tuner's own probing must not pollute the selection counters
+    assert info.pipeline_depths == {}
+    # an "auto" plan adopts every tuned knob, and the adoption is counted.
+    # The ambient config (what a real spmm call resolves) must adopt the
+    # tuned chunks_per_task too — its package default is deliberately not
+    # a concrete 8.
+    plan = make_plan(st, 64, ops.current_config())
+    assert plan.bn == 32
+    assert plan.chunks_per_task == 4
+    assert plan.pipeline_depth == best["pipeline_depth"]
+    assert ops.tuning_cache_info().pipeline_depths == {
+        best["pipeline_depth"]: 1}
+    # ...and still computes the right answer end-to-end
+    ref = np.asarray(ops.spmm(w, b, impl="ref"))
+    got = np.asarray(ops.spmm(st, b, impl="kernel_interpret"))
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+    ops.clear_tuning_cache()
+
+
+def test_depth_zero_on_wcsr_degrades_to_serial(rng):
+    """pipeline_depth=0 means 'no explicit pipeline'; WCSR has no Mosaic
+    path for its gather, so an engine-wide 0 must run the serial gather
+    (and be counted as depth 1), not fail inside the kernel."""
+    w = _wcsr(rng, 64, 96, 0.3)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    ref = np.asarray(ops.spmm(w, b, impl="ref"))
+    with use_config(pipeline_depth=0):
+        got = np.asarray(ops.spmm(w, b, impl="kernel_interpret", bn=32))
+    np.testing.assert_allclose(got, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+
+
+def test_extras_accept_positional_default_knobs(rng):
+    """Externally registered backends may declare knobs as plain defaults
+    (not keyword-only); validation must accept those."""
+    from repro.ops.spmm import _validate_extras
+    from repro.ops.registry import Backend
+
+    def fn(a, b, cfg, myknob=True, *, kwonly=None):
+        return None
+
+    backend = Backend("ext", fn, lambda: True, 0)
+    _validate_extras(backend, {"myknob": False, "kwonly": 1})  # no raise
+    with pytest.raises(TypeError, match="mybnob"):
+        _validate_extras(backend, {"mybnob": False})
+
+
+def test_autotune_bcsr_sweeps_bn_only(rng):
+    d = apply_block_mask(rng.normal(size=(64, 64)).astype(np.float32),
+                         random_block_mask((64, 64), (32, 32), 0.5, seed=4),
+                         (32, 32))
+    st = SparseTensor.from_dense(d, format="bcsr", block=(32, 32))
+    b = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    ops.clear_tuning_cache()
+    best = ops.autotune_spmm(st, b, impl="kernel_interpret", bns=(32, 64),
+                             warmup=0, iters=1)
+    assert best["pipeline_depth"] is None  # Mosaic-managed: bn only
+    assert best["bn"] in (32, 64)
+    ops.clear_tuning_cache()

@@ -50,6 +50,32 @@ def test_engine_matches_sequential(rng):
         assert r.out_tokens == w, (r.rid, r.out_tokens, w)
 
 
+def test_engine_stats_pipeline_depth_counters(rng):
+    """stats() must surface the §III-A pipeline-depth selection counters
+    (tuning_cache.pipeline_depths + the top-level dashboard key)."""
+    import jax.numpy as jnp
+    import repro.ops as ops
+    from repro.sparse import wcsr_from_dense
+
+    cfg = reduced_config(ARCHS["granite-3-2b"], num_layers=1)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    eng = ServeEngine(m, params, slots=1, max_len=32)
+    stats = eng.stats()
+    assert "pipeline_depths" in stats
+    assert isinstance(stats["pipeline_depths"], dict)
+    assert stats["pipeline_depths"] == stats["tuning_cache"].pipeline_depths
+    # a depth-pinned spmm shows up in the engine's counters (process-global,
+    # like the other cache counters)
+    d = rng.normal(size=(64, 96)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.3
+    w = wcsr_from_dense(d, b_row=32, b_col=8)
+    b = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    before = eng.stats()["pipeline_depths"].get(2, 0)
+    ops.spmm(w, b, impl="kernel_interpret", bn=32, pipeline_depth=2)
+    assert eng.stats()["pipeline_depths"].get(2, 0) == before + 1
+
+
 def test_engine_slot_reuse_no_leak(rng):
     """Same prompt admitted before and after other traffic must produce
     identical outputs (slot reset works)."""
