@@ -67,6 +67,59 @@ def geomean(xs) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Machine-readable benchmark output (BENCH_spmm.json)
+# ---------------------------------------------------------------------------
+
+# Schema contract for benchmarks/run.py --json. Bump on breaking changes so
+# trajectory tooling can dispatch on it:
+#   {"schema": BENCH_JSON_SCHEMA,
+#    "smoke": bool,                       # CI-sized run: numbers not meaningful
+#    "rows": [{"name": "table2/opt5",     # one entry per CSV row
+#              "us_per_call": float|None, # measured CPU wall time (None = n/a)
+#              "derived": str,            # modeled column, verbatim
+#              ...extras}],               # e.g. codec rows: baseline_bytes,
+#                                         # compressed_bytes, reduction
+#    "summaries": {module: {"rows": int, "us_geomean": float}}}
+BENCH_JSON_SCHEMA = "repro-bench/v1"
+
+# Benchmark modules attach per-row structured extras here (keyed by row
+# name); bench_json_payload merges them into the row objects. The codec
+# ablation rows use it for their bytes-moved breakdown.
+JSON_EXTRAS: dict = {}
+
+
+def bench_json_payload(rows) -> dict:
+    """Build the ``BENCH_spmm.json`` payload from the harness CSV rows.
+
+    ``rows`` is the run.py accumulator including the header row. Latency
+    summaries are per benchmark module (the ``name`` prefix before ``/``);
+    bytes summaries ride on the rows that registered ``JSON_EXTRAS``.
+    """
+    header, *data = rows
+    out_rows = []
+    groups: dict = {}
+    for name, us, derived in data:
+        entry = {
+            "name": name,
+            "us_per_call": None if isinstance(us, str) else float(us),
+            "derived": str(derived),
+        }
+        entry.update(JSON_EXTRAS.get(name, {}))
+        out_rows.append(entry)
+        groups.setdefault(name.split("/")[0], []).append(entry)
+    summaries = {
+        mod: {
+            "rows": len(entries),
+            "us_geomean": geomean([e["us_per_call"] for e in entries
+                                   if e["us_per_call"]]),
+        }
+        for mod, entries in groups.items()
+    }
+    return {"schema": BENCH_JSON_SCHEMA, "smoke": SMOKE,
+            "rows": out_rows, "summaries": summaries}
+
+
+# ---------------------------------------------------------------------------
 # Synthetic SuiteSparse-style matrices (banded / power-law / uniform)
 # ---------------------------------------------------------------------------
 

@@ -5,18 +5,27 @@ Prints ``name,us_per_call,derived`` CSV (plus a copy under results/).
 can run the whole harness under interpret-mode kernels on CPU:
 
     REPRO_SPARSE_IMPL=kernel_interpret python benchmarks/run.py --smoke
+
+``--json`` additionally writes ``BENCH_spmm.json`` — the machine-readable
+per-benchmark latency/bytes summary (schema: ``benchmarks.common.
+BENCH_JSON_SCHEMA``) that CI emits and uploads, so the perf trajectory
+across PRs is diffable by tooling instead of by eyeballing CSV.
 """
 
+import json
 import os
 import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
+JSON_PATH = "BENCH_spmm.json"
+
 
 def main() -> None:
-    args = [a for a in sys.argv[1:] if a != "--smoke"]
-    if "--smoke" in sys.argv[1:]:
+    flags = {a for a in sys.argv[1:] if a.startswith("--")}
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    if "--smoke" in flags:
         # must be set before the benchmark modules (and their module-level
         # suite constants) are imported below
         os.environ["REPRO_BENCH_SMOKE"] = "1"
@@ -24,6 +33,7 @@ def main() -> None:
     from benchmarks import (dist_scaling, fig7_tilewidth, fig8_prefill,
                             table1_suitesparse, table2_ablation,
                             table3_gateproj)
+    from benchmarks.common import bench_json_payload
 
     modules = {
         "table1": table1_suitesparse,
@@ -45,6 +55,10 @@ def main() -> None:
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.csv", "w") as f:
         f.write(out + "\n")
+    if "--json" in flags:
+        with open(JSON_PATH, "w") as f:
+            json.dump(bench_json_payload(rows), f, indent=2, sort_keys=True)
+        print(f"wrote {JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

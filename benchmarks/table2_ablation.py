@@ -22,6 +22,14 @@ measured interpret-mode sweep (plumbing guard); `derived` models the v5e
 steady state (`model_wcsr_chunk_time`): each extra slot hides one more
 chunk's worth of the gather's HBM round-trip latency, with the paper's
 diminishing returns past the point where Q-1 in-flight chunks cover it.
+
+The `table2/codec_*` rows extend the same ablation to the value-codec
+layer (Acc-SpMM's bit-compression knob): the quantized kernel path timed
+at depth 2, with `derived` reporting the modeled sparse-operand
+bytes-moved reduction (payload + per-chunk f32 scales vs the f32
+baseline) — the headroom the compression hands back to the latency-hiding
+pipeline. Structured extras (bytes breakdown) land in BENCH_spmm.json via
+`benchmarks.common.JSON_EXTRAS`.
 """
 
 from __future__ import annotations
@@ -29,11 +37,12 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import (GRID_STEP_NS, HBM_BW, PEAK_MXU, SMOKE, SUITE,
-                               geomean, model_bcsr_time, suite_matrix,
-                               tflops, time_call, time_spmm)
+from benchmarks.common import (GRID_STEP_NS, HBM_BW, JSON_EXTRAS, PEAK_MXU,
+                               SMOKE, SUITE, geomean, model_bcsr_time,
+                               suite_matrix, tflops, time_call, time_spmm)
 from repro.kernels.bcsr.kernel import run_bcsr_spmm
-from repro.sparse import SparseTensor, convert
+from repro.sparse import SparseTensor, convert, registered_value_codecs
+from repro.sparse.codecs import modeled_value_bytes
 
 M = K = 512 if SMOKE else 1024
 N = 1024
@@ -83,6 +92,38 @@ def _pipeline_rows(csv_rows):
         base = base or tf
         csv_rows.append((f"table2/pipeline_q{q}", us,
                          f"{tf:.3f}TFLOPS({tf / base:.2f}x)"))
+    return _codec_rows(csv_rows, w, b)
+
+
+def _codec_rows(csv_rows, w, b):
+    """Value-codec ablation on the WCSR gather path (guarded like the
+    ``pipeline_q{1,2,3}`` rows by the CI smoke step).
+
+    `us_per_call` times the interpret-mode kernel consuming the compressed
+    payload with fused in-register dequant (plumbing guard: the quantized
+    path must run at every depth the CI smoke sweeps); `derived` is the
+    modeled sparse-operand bytes-moved reduction vs the f32 baseline —
+    payload bytes + one f32 scale per [b_row, b_col] chunk
+    (``repro.sparse.codecs.modeled_value_bytes``), the traffic the §III-A
+    gather actually issues per serving step.
+    """
+    stored = w.structure.stored_elements
+    group = Q_BROW * Q_BCOL
+    for codec in ("int8", "fp8_e4m3"):
+        if codec not in registered_value_codecs():
+            continue  # fp8 is gated on the jax build exposing the dtype
+        wq = w.quantize(codec)
+        us = time_spmm(wq, b, warmup=1, iters=2, impl="kernel_interpret",
+                       bn=128, pipeline_depth=2)
+        m = modeled_value_bytes(stored, group, codec)
+        name = f"table2/codec_{codec}"
+        csv_rows.append((name, us, f"{m['reduction']:.2f}x_bytes"))
+        JSON_EXTRAS[name] = {
+            "baseline_bytes": m["baseline_bytes"],
+            "compressed_bytes": m["compressed_bytes"],
+            "scale_bytes": m["scale_bytes"],
+            "reduction": m["reduction"],
+        }
     return csv_rows
 
 

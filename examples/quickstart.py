@@ -67,6 +67,21 @@ plan = make_plan(w_irregular, TOKENS)  # the memoized plan, inspectable
 print(f"plan: bn={plan.bn}, tasks={plan.num_tasks} "
       f"(chunks_per_task={plan.chunks_per_task})")
 
+# 3b. value codecs: store the sparse values as int8 payload + per-chunk
+#     f32 scales — kernels move the compressed bytes and dequantize
+#     in-register, structure-keyed planning caches are shared with the
+#     raw tensor (docs/formats.md "Value codecs")
+w_q = w_irregular.quantize("int8")
+with use_config(impl="kernel_interpret"):
+    y_q = w_q @ x
+q_err = float(jnp.max(jnp.abs(y_q - y_w)) / jnp.max(jnp.abs(y_w)))
+from repro.sparse.codecs import modeled_value_bytes
+mb = modeled_value_bytes(w_q.structure.stored_elements, 64 * 8, "int8")
+print(f"int8 codec: rel err {q_err:.4f}, modeled sparse-operand bytes "
+      f"{mb['reduction']:.2f}x smaller")
+assert q_err < 0.02
+assert plan_cache_info().task_decompositions == 1  # codec shares the split
+
 # 4. a drop-in sparse linear layer (differentiable: SDDMM backward)
 layer = sparse_linear_from_dense(
     w, SparseLinearSpec(IN, OUT, sparsity=0.9, block=(64, 64)))

@@ -30,8 +30,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
-from repro.kernels.pipeline import (emit_gather_pipeline, gather_slots,
-                                    validate_depth)
+from repro.kernels.pipeline import (dequant_tile, emit_gather_pipeline,
+                                    gather_slots, validate_depth)
 
 NEG_INF = -1e30
 
@@ -89,13 +89,9 @@ def _kernel(
     ptr_ref,  # [H*nqb + 1] i32 CSR pointers into kcols
     kcols_ref,  # [total_active] i32 active k-block indices
     q_ref,  # [1, bq, d]
-    k_ref,  # [1, bk, d]
-    v_ref,  # [1, bk, d]
-    o_ref,  # [1, bq, d]
-    m_ref,  # [bq, 128] f32 running max
-    l_ref,  # [bq, 128] f32 running denominator
-    acc_ref,  # [bq, d] f32 running numerator
-    *,
+    k_ref,  # [1, bk, d] (codec payload when quantized)
+    v_ref,  # [1, bk, d] (codec payload when quantized)
+    *rest,  # [ks_ref, vs_ref (codec only)], o_ref, m_ref, l_ref, acc_ref
     bq: int,
     bk: int,
     max_active: int,
@@ -103,7 +99,13 @@ def _kernel(
     nqb: int,
     causal: bool,
     scale: float,
+    codec: str = "none",
 ):
+    if codec == "none":
+        o_ref, m_ref, l_ref, acc_ref = rest
+        ks_ref = vs_ref = None
+    else:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     bh = pl.program_id(0)
     qb = pl.program_id(1)
     j = pl.program_id(2)
@@ -121,9 +123,14 @@ def _kernel(
     @pl.when(active)
     def _step():
         kidx = kcols_ref[base + jnp.minimum(j, count - 1)]
-        s = _scores(q_ref[0], k_ref[0], kidx, bq=bq, bk=bk, qb=qb,
+        k_blk = dequant_tile(k_ref[0], codec,
+                             None if ks_ref is None else ks_ref[0, 0])
+        v_blk = dequant_tile(v_ref[0], codec,
+                             None if vs_ref is None else vs_ref[0, 0])
+        s = _scores(q_ref[0], k_blk, kidx, bq=bq, bk=bk, qb=qb,
                     causal=causal, scale=scale)
-        _softmax_step(s, m_ref, l_ref, acc_ref, v_ref[0], v_ref.dtype)
+        _softmax_step(s, m_ref, l_ref, acc_ref, v_blk,
+                      v_ref.dtype if codec == "none" else jnp.float32)
 
     @pl.when(j == max_active - 1)
     def _finish():
@@ -134,16 +141,10 @@ def _kernel_pipelined(
     ptr_ref,  # [H*nqb + 1] i32 CSR pointers into kcols
     kcols_ref,  # [total_active] i32 active k-block indices
     q_ref,  # [1, bq, d]
-    k_hbm_ref,  # [B*KVH, S, D] (ANY/HBM — gathered by the pipeline)
-    v_hbm_ref,  # [B*KVH, S, D] (ANY/HBM)
-    o_ref,  # [1, bq, d]
-    k_slots_ref,  # [depth, bk, d] VMEM gather slots for K blocks
-    v_slots_ref,  # [depth, bk, d] VMEM gather slots for V blocks
-    sem,  # [depth] DMA semaphores (each slot waits K+V together)
-    m_ref,  # [bq, 128] f32 running max
-    l_ref,  # [bq, 128] f32 running denominator
-    acc_ref,  # [bq, d] f32 running numerator
-    *,
+    k_hbm_ref,  # [B*KVH, S, D] (ANY/HBM — gathered; codec payload)
+    v_hbm_ref,  # [B*KVH, S, D] (ANY/HBM; codec payload)
+    *rest,  # [ks_ref, vs_ref (codec only)], o_ref, k_slots, v_slots, sem,
+            # m_ref, l_ref, acc_ref
     bq: int,
     bk: int,
     max_active: int,
@@ -153,7 +154,14 @@ def _kernel_pipelined(
     causal: bool,
     scale: float,
     depth: int,
+    codec: str = "none",
 ):
+    if codec == "none":
+        (o_ref, k_slots_ref, v_slots_ref, sem, m_ref, l_ref, acc_ref) = rest
+        ks_ref = vs_ref = None
+    else:
+        (ks_ref, vs_ref, o_ref, k_slots_ref, v_slots_ref, sem, m_ref, l_ref,
+         acc_ref) = rest
     bh = pl.program_id(0)
     qb = pl.program_id(1)
     j = pl.program_id(2)
@@ -191,10 +199,16 @@ def _kernel_pipelined(
         ]
 
     def compute(chunk, slot):
-        s = _scores(q_ref[0], k_slots_ref[slot], kidx_of(chunk), bq=bq,
+        # fused dequant after the K/V gather lands: the DMAs above moved
+        # the compressed payload; the block scales stream via BlockSpec
+        k_blk = dequant_tile(k_slots_ref[slot], codec,
+                             None if ks_ref is None else ks_ref[0, 0])
+        v_blk = dequant_tile(v_slots_ref[slot], codec,
+                             None if vs_ref is None else vs_ref[0, 0])
+        s = _scores(q_ref[0], k_blk, kidx_of(chunk), bq=bq,
                     bk=bk, qb=qb, causal=causal, scale=scale)
-        _softmax_step(s, m_ref, l_ref, acc_ref, v_slots_ref[slot],
-                      v_slots_ref.dtype)
+        _softmax_step(s, m_ref, l_ref, acc_ref, v_blk,
+                      v_slots_ref.dtype if codec == "none" else jnp.float32)
 
     emit_gather_pipeline(step=j, nchunks=count, depth=depth,
                          copies=copies, compute=compute)
@@ -216,14 +230,17 @@ def _kernel_pipelined(
         "scale",
         "interpret",
         "pipeline_depth",
+        "codec",
     ),
 )
 def block_sparse_attention_kernel(
     ptr: jax.Array,  # [H*nqb + 1] i32
     kcols: jax.Array,  # [total_active] i32
     q: jax.Array,  # [B*H, S, D]
-    k: jax.Array,  # [B*KVH, S, D]
-    v: jax.Array,  # [B*KVH, S, D]
+    k: jax.Array,  # [B*KVH, S, D] (codec payload when quantized)
+    v: jax.Array,  # [B*KVH, S, D] (codec payload when quantized)
+    kscales: jax.Array = None,  # [B*KVH, S // block_k] f32 per-block scales
+    vscales: jax.Array = None,  # [B*KVH, S // block_k] f32 per-block scales
     *,
     heads: int,
     kv_heads: int,
@@ -234,32 +251,36 @@ def block_sparse_attention_kernel(
     scale: float,
     interpret: bool = True,
     pipeline_depth: int = 0,
+    codec: str = "none",
 ) -> jax.Array:
     depth = validate_depth(pipeline_depth, allow_zero=True)
+    if codec != "none" and (kscales is None or vscales is None):
+        raise ValueError(
+            f"block_sparse_attention_kernel: codec {codec!r} needs "
+            "kscales and vscales")
     bh, s, d = q.shape
     nqb = s // block_q
     group = heads // kv_heads
     grid = (bh, nqb, max_active)
     q_spec = pl.BlockSpec((1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0))
+
+    def _kv_lookup(b, qb, j, ptr, kcols):
+        # kv row for this q head; padding steps clamp to the last active
+        # block (and an empty list clamps to its base entry)
+        row = (b // heads) * kv_heads + (b % heads) // group
+        base = ptr[(b % heads) * nqb + qb]
+        cnt = ptr[(b % heads) * nqb + qb + 1] - base
+        col = kcols[base + jnp.minimum(j, jnp.maximum(cnt - 1, 0))]
+        return row, col
+
+    # the K/V block scales always stream via BlockSpec — at depth 0 next to
+    # their payload blocks, at depth >= 1 as the only streamed K/V operand
+    # (the payload itself rides the explicit gather pipeline)
+    scale_index = lambda b, qb, j, ptr, kcols: _kv_lookup(b, qb, j, ptr, kcols)
+    scale_spec = pl.BlockSpec((1, 1), scale_index)
     if depth == 0:
         kv_index = lambda b, qb, j, ptr, kcols: (
-            # kv row for this q head; padding steps clamp to the last active
-            # block
-            (b // heads) * kv_heads + (b % heads) // group,
-            kcols[
-                ptr[(b % heads) * nqb + qb]
-                + jnp.minimum(
-                    j,
-                    jnp.maximum(
-                        ptr[(b % heads) * nqb + qb + 1]
-                        - ptr[(b % heads) * nqb + qb]
-                        - 1,
-                        0,
-                    ),
-                )
-            ],
-            0,
-        )
+            *_kv_lookup(b, qb, j, ptr, kcols), 0)
         body = functools.partial(
             _kernel,
             bq=block_q,
@@ -269,6 +290,7 @@ def block_sparse_attention_kernel(
             nqb=nqb,
             causal=causal,
             scale=scale,
+            codec=codec,
         )
         in_specs = [
             q_spec,
@@ -288,6 +310,7 @@ def block_sparse_attention_kernel(
             causal=causal,
             scale=scale,
             depth=depth,
+            codec=codec,
         )
         in_specs = [
             q_spec,
@@ -297,6 +320,10 @@ def block_sparse_attention_kernel(
         k_slots, kv_sems = gather_slots(depth, (block_k, d), k.dtype)
         v_slots, _ = gather_slots(depth, (block_k, d), v.dtype)
         scratch = [k_slots, v_slots, kv_sems]
+    operands = [q, k, v]
+    if codec != "none":
+        in_specs += [scale_spec, scale_spec]
+        operands += [kscales, vscales]
     return pl.pallas_call(
         body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -317,4 +344,4 @@ def block_sparse_attention_kernel(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(ptr, kcols, q, k, v)
+    )(ptr, kcols, *operands)

@@ -56,7 +56,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["emit_gather_pipeline", "gather_slots", "validate_depth",
-           "MAX_DEPTH"]
+           "dequant_tile", "MAX_DEPTH"]
 
 # VMEM is the binding resource (§IV-C): each extra slot costs a full
 # gather buffer. 4 covers the paper's Q=3 plus one experiment slot.
@@ -87,6 +87,27 @@ def gather_slots(depth: int, shape: Sequence[int], dtype):
     depth = validate_depth(depth)
     return (pltpu.VMEM((depth, *shape), dtype),
             pltpu.SemaphoreType.DMA((depth,)))
+
+
+def dequant_tile(tile, codec: str, scale=None, compute_dtype=jnp.float32):
+    """Fused in-register dequantization: the consumer-body codec hook.
+
+    The single place a value codec (``repro.sparse.codecs``) meets kernel
+    code: every consumer body — the WCSR ``compute`` callback at any
+    pipeline depth, the BCSR/SDDMM accumulate steps, the block-attention
+    softmax step — dequantizes its just-landed tile with this one helper,
+    so DMA traffic is the compressed payload and the MXU-side math stays
+    ``compute_dtype``. ``codec == "none"`` is the identity (no cast, no
+    multiply); otherwise ``scale`` is the tile's group scale (a scalar read
+    from the streamed scales operand) and the result is
+    ``tile.astype(compute_dtype) * scale`` — never a materialized
+    dequantized copy in HBM.
+    """
+    if codec == "none":
+        return tile
+    if scale is None:
+        raise ValueError(f"dequant_tile: codec {codec!r} requires a scale")
+    return tile.astype(compute_dtype) * scale
 
 
 def emit_gather_pipeline(

@@ -27,8 +27,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
-from repro.kernels.pipeline import (emit_gather_pipeline, gather_slots,
-                                    validate_depth)
+from repro.kernels.pipeline import (dequant_tile, emit_gather_pipeline,
+                                    gather_slots, validate_depth)
 
 
 def _contract(dc, b):
@@ -41,7 +41,13 @@ def _contract(dc, b):
     )
 
 
-def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
+def _kernel(rows_ref, cols_ref, dc_ref, b_ref, *rest, n_tiles, nnz,
+            codec="none"):
+    if codec == "none":
+        o_ref, acc_ref = rest
+        s_ref = None
+    else:
+        s_ref, o_ref, acc_ref = rest
     del rows_ref, cols_ref
     nt = pl.program_id(1)
     i = pl.program_id(0)
@@ -50,7 +56,9 @@ def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _contract(dc_ref[...], b_ref[...])
+    b_tile = dequant_tile(b_ref[...], codec,
+                          None if s_ref is None else s_ref[0, 0])
+    acc_ref[...] += _contract(dc_ref[...], b_tile)
 
     @pl.when(nt == n_tiles - 1)
     def _store():
@@ -58,9 +66,13 @@ def _kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *, n_tiles, nnz):
         o_ref[0] = jnp.where(valid, acc_ref[...], 0).astype(o_ref.dtype)
 
 
-def _kernel_pipelined(rows_ref, cols_ref, dc_ref, b_hbm_ref, o_ref,
-                      b_slots_ref, sem, acc_ref, *,
-                      n_tiles, nnz, bk, bn, depth):
+def _kernel_pipelined(rows_ref, cols_ref, dc_ref, b_hbm_ref, *rest,
+                      n_tiles, nnz, bk, bn, depth, codec="none"):
+    if codec == "none":
+        o_ref, b_slots_ref, sem, acc_ref = rest
+        s_ref = None
+    else:
+        s_ref, o_ref, b_slots_ref, sem, acc_ref = rest
     del rows_ref  # dc is BlockSpec-streamed; rows drive its index_map only
     nt = pl.program_id(1)
     i = pl.program_id(0)
@@ -80,7 +92,10 @@ def _kernel_pipelined(rows_ref, cols_ref, dc_ref, b_hbm_ref, o_ref,
 
     def compute(chunk, slot):
         del chunk  # dc_ref already holds this n-slice
-        acc_ref[...] += _contract(dc_ref[...], b_slots_ref[slot])
+        # fused dequant after the gather lands: DMA moved compressed bytes
+        b_tile = dequant_tile(b_slots_ref[slot], codec,
+                              None if s_ref is None else s_ref[0, 0])
+        acc_ref[...] += _contract(dc_ref[...], b_tile)
 
     emit_gather_pipeline(step=nt, nchunks=n_tiles, depth=depth,
                          copies=copies, compute=compute)
@@ -94,13 +109,14 @@ def _kernel_pipelined(rows_ref, cols_ref, dc_ref, b_hbm_ref, o_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("block", "nnz", "bn", "out_dtype", "interpret",
-                     "pipeline_depth"),
+                     "pipeline_depth", "codec"),
 )
 def sddmm_kernel(
     block_rows: jax.Array,
     block_cols: jax.Array,
     dc: jax.Array,  # [m, n]
-    b: jax.Array,  # [k, n]
+    b: jax.Array,  # [k, n] (codec payload when quantized)
+    scales: jax.Array = None,  # [k // bk, 1] f32 per-row-block codec scales
     *,
     block: tuple,
     nnz: int,
@@ -108,6 +124,7 @@ def sddmm_kernel(
     out_dtype=None,
     interpret: bool = True,
     pipeline_depth: int = 0,
+    codec: str = "none",
 ) -> jax.Array:
     depth = validate_depth(pipeline_depth, allow_zero=True)
     bm, bk = block
@@ -115,27 +132,38 @@ def sddmm_kernel(
     m, n = dc.shape
     if n % bn:
         raise ValueError(f"n={n} must be a multiple of bn={bn}")
+    if codec != "none" and scales is None:
+        raise ValueError(f"sddmm_kernel: codec {codec!r} needs scales")
     n_tiles = n // bn
     out_dtype = out_dtype or dc.dtype
     if depth == 0:
-        body = functools.partial(_kernel, n_tiles=n_tiles, nnz=nnz)
+        body = functools.partial(_kernel, n_tiles=n_tiles, nnz=nnz,
+                                 codec=codec)
         b_spec = pl.BlockSpec((bk, bn), lambda i, nt, rows, cols: (cols[i], nt))
         scratch = [pltpu.VMEM((bm, bk), jnp.float32)]
     else:
         body = functools.partial(_kernel_pipelined, n_tiles=n_tiles, nnz=nnz,
-                                 bk=bk, bn=bn, depth=depth)
+                                 bk=bk, bn=bn, depth=depth, codec=codec)
         b_spec = pl.BlockSpec(memory_space=pl.ANY)
         slots, sems = gather_slots(depth, (bk, bn), b.dtype)
         scratch = [slots, sems, pltpu.VMEM((bm, bk), jnp.float32)]
+    in_specs = [
+        pl.BlockSpec((bm, bn), lambda i, nt, rows, cols: (rows[i], nt)),
+        b_spec,
+    ]
+    operands = [dc, b]
+    if codec != "none":
+        # the gathered tile's row-block scale streams on its own BlockSpec
+        # (tiny f32) while the payload tile rides the gather path
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda i, nt, rows, cols: (cols[i], 0)))
+        operands.append(scales)
     return pl.pallas_call(
         body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(nnz_p, n_tiles),
-            in_specs=[
-                pl.BlockSpec((bm, bn), lambda i, nt, rows, cols: (rows[i], nt)),
-                b_spec,
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, bm, bk), lambda i, nt, rows, cols: (i, 0, 0)),
             scratch_shapes=scratch,
         ),
@@ -144,4 +172,4 @@ def sddmm_kernel(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(block_rows, block_cols, dc, b)
+    )(block_rows, block_cols, *operands)

@@ -24,6 +24,14 @@ All depths share one kernel body; the emitter generates the
 prime/produce/consume/drain phases, so there are no per-slot (even/odd)
 branch copies. The contiguous A stream is still pipelined by Mosaic.
 
+Value codecs: when the packed A values arrive quantized
+(``repro.sparse.codecs`` — int8 / emulated fp8 with one f32 scale per
+packed-column chunk), the scale streams in lock-step with its payload
+chunk and the consumer body dequantizes in-register
+(``pipeline.dequant_tile``) before the micro-GEMM. Because every depth
+shares the one consumer body, one hook covers the serial, double-buffered
+and Q-deep gathers alike; A's DMA traffic is the compressed payload.
+
 Load balancing (paper §III-C): windows are pre-split into fixed-size tasks of
 at most ``chunks_per_task`` packed-column chunks; ``program_id(0)`` indexes
 *tasks*, not windows. Partial window outputs land in a [num_tasks, b_row, bn]
@@ -41,8 +49,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
-from repro.kernels.pipeline import (emit_gather_pipeline, gather_slots,
-                                    validate_depth)
+from repro.kernels.pipeline import (dequant_tile, emit_gather_pipeline,
+                                    gather_slots, validate_depth)
 
 
 def _kernel(
@@ -51,20 +59,19 @@ def _kernel(
     task_nchunks_ref,  # [T] i32 number of active chunks of each task
     col_idx_ref,  # [C] i32 original B row per packed column (-1 pad)
     # operands
-    a_ref,  # [b_row, b_col] current packed-value chunk (VMEM)
-    b_hbm_ref,  # [k, n] dense B (ANY/HBM — indirectly gathered)
-    # output
-    o_ref,  # [1, b_row, bn] partial output tile of this task
-    # scratch
-    gather_ref,  # [depth, b_col, bn] VMEM gather slots for B rows
-    sem,  # [depth] DMA semaphores
-    acc_ref,  # [b_row, bn] f32 accumulator
-    *,
+    a_ref,  # [b_row, b_col] current packed-value chunk (VMEM; codec payload)
+    *rest,  # [s_ref (codec only)], b_hbm_ref, o_ref, gather_ref, sem, acc_ref
     b_col: int,
     bn: int,
     chunks_per_task: int,
     depth: int,
+    codec: str = "none",
 ):
+    if codec == "none":
+        b_hbm_ref, o_ref, gather_ref, sem, acc_ref = rest
+        s_ref = None
+    else:
+        s_ref, b_hbm_ref, o_ref, gather_ref, sem, acc_ref = rest
     g = pl.program_id(2)
     nt = pl.program_id(1)
     t = pl.program_id(0)
@@ -93,9 +100,15 @@ def _kernel(
 
     def compute(chunk, slot):
         del chunk  # a_ref already holds this step's packed-value chunk
-        # --- compute phase: micro-GEMM on the MXU (WGMMA analogue)
+        # --- compute phase: micro-GEMM on the MXU (WGMMA analogue).
+        # One dequant hook covers every pipeline depth: the emitter calls
+        # this consumer body whether the gather was serial, double- or
+        # Q-buffered, so the per-chunk scale is applied in-register right
+        # here and the DMA side only ever moved the compressed payload.
+        a = dequant_tile(a_ref[...], codec,
+                         None if s_ref is None else s_ref[0, 0])
         acc_ref[...] += jnp.dot(
-            a_ref[...], gather_ref[slot], preferred_element_type=jnp.float32
+            a, gather_ref[slot], preferred_element_type=jnp.float32
         )
 
     emit_gather_pipeline(step=g, nchunks=nchunks, depth=depth,
@@ -116,14 +129,16 @@ def _kernel(
         "out_dtype",
         "interpret",
         "pipeline_depth",
+        "codec",
     ),
 )
 def wcsr_spmm_kernel(
     task_start: jax.Array,  # [T] i32
     task_nchunks: jax.Array,  # [T] i32
     col_idx: jax.Array,  # [C] i32
-    values: jax.Array,  # [b_row, C]
+    values: jax.Array,  # [b_row, C] (codec payload when quantized)
     b: jax.Array,  # [k, n], n multiple of bn
+    scales: jax.Array = None,  # [1, C // b_col] f32 per-chunk codec scales
     *,
     b_row: int,
     b_col: int,
@@ -132,37 +147,52 @@ def wcsr_spmm_kernel(
     out_dtype=None,
     interpret: bool = True,
     pipeline_depth: int = 1,
+    codec: str = "none",
 ) -> jax.Array:
     depth = validate_depth(pipeline_depth)
     num_tasks = task_start.shape[0]
     k, n = b.shape
     if n % bn:
         raise ValueError(f"n={n} must be a multiple of bn={bn}")
+    if codec != "none" and scales is None:
+        raise ValueError(f"wcsr_spmm_kernel: codec {codec!r} needs scales")
     out_dtype = out_dtype or b.dtype
     grid = (num_tasks, n // bn, chunks_per_task)
     body = functools.partial(
         _kernel, b_col=b_col, bn=bn, chunks_per_task=chunks_per_task,
-        depth=depth)
+        depth=depth, codec=codec)
     slots, sems = gather_slots(depth, (b_col, bn), b.dtype)
+    nchunks_total = values.shape[1] // b_col
+    in_specs = [
+        # contiguous packed-value chunk: TMA-analogue BlockSpec stream.
+        # Clamped so inactive tail chunks (g >= nchunks, compute
+        # masked) never index past the packed array.
+        pl.BlockSpec(
+            (b_row, b_col),
+            lambda t, nt, g, ts, tn, ci: (
+                0,
+                jnp.minimum(ts[t] + g, nchunks_total - 1),
+            ),
+        ),
+    ]
+    operands = [values]
+    if codec != "none":
+        # the chunk's f32 scale streams in lock-step with its payload
+        in_specs.append(pl.BlockSpec(
+            (1, 1),
+            lambda t, nt, g, ts, tn, ci: (
+                0, jnp.minimum(ts[t] + g, nchunks_total - 1)),
+        ))
+        operands.append(scales)
+    # B stays in HBM; gathered manually inside the kernel
+    in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+    operands.append(b)
     return pl.pallas_call(
         body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
-            in_specs=[
-                # contiguous packed-value chunk: TMA-analogue BlockSpec stream.
-                # Clamped so inactive tail chunks (g >= nchunks, compute
-                # masked) never index past the packed array.
-                pl.BlockSpec(
-                    (b_row, b_col),
-                    lambda t, nt, g, ts, tn, ci: (
-                        0,
-                        jnp.minimum(ts[t] + g, values.shape[1] // b_col - 1),
-                    ),
-                ),
-                # B stays in HBM; gathered manually inside the kernel
-                pl.BlockSpec(memory_space=pl.ANY),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, b_row, bn), lambda t, nt, g, ts, tn, ci: (t, 0, nt)
             ),
@@ -177,4 +207,4 @@ def wcsr_spmm_kernel(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(task_start, task_nchunks, col_idx, values, b)
+    )(task_start, task_nchunks, col_idx, *operands)

@@ -61,12 +61,14 @@ host-side plan: ``make_plan(st.structure, n).bn``), ``make_partition(
 structure, num_shards)`` (memoized mesh shard split),
 ``plan_cache_info()`` / ``clear_plan_cache()`` (counters),
 ``partition_balance_report()`` (per-partition shard-load stats),
+``cache_stats()`` (the one unified counter aggregator dashboards consume),
+``codec_bytes_report()`` (modeled bytes-moved savings per quantized plan),
 ``auto_bn(n)`` / ``resolve_bn(bn, n, ...)`` (§IV-C tile width),
 ``tuning_cache_info()`` / ``clear_tuning_cache()``,
 ``autotune_spmm(a, b)`` (measured sweep over
-``(bn, chunks_per_task, pipeline_depth)`` whose winner steers every
-``"auto"`` knob), ``tuned_entry(...)`` / ``resolve_pipeline_depth(...)``
-(lookups the planners use).
+``(bn, chunks_per_task, pipeline_depth, value_codec)`` with an accuracy
+guard, whose winner steers every ``"auto"`` knob), ``tuned_entry(...)`` /
+``resolve_pipeline_depth(...)`` (lookups the planners use).
 """
 
 from repro.ops.attention import csr_encode_block_mask, sparse_attention
@@ -74,7 +76,8 @@ from repro.ops.config import (ENV_IMPL_VAR, OpConfig, current_config,
                               resolve_interpret, resolved_config, use_config)
 from repro.ops.matmul import (BCSRStructure, bcsr_matmul,
                               local_bcsr_matmul_t, structure_of)
-from repro.ops.plan import (Plan, clear_plan_cache, make_partition,
+from repro.ops.plan import (Plan, cache_stats, clear_plan_cache,
+                            codec_bytes_report, make_partition,
                             make_plan, partition_balance_report,
                             plan_cache_info)
 from repro.ops.registry import (available_backends, register_backend,
@@ -101,6 +104,7 @@ __all__ = [
     # planning + tiling
     "Plan", "make_plan", "make_partition", "plan_cache_info",
     "partition_balance_report", "clear_plan_cache",
+    "cache_stats", "codec_bytes_report",
     "auto_bn", "resolve_bn", "tuning_cache_info", "clear_tuning_cache",
     "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
 ]

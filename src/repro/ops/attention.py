@@ -18,6 +18,8 @@ from repro.ops.config import (OpConfig, resolve_interpret,
                               resolved_config)
 from repro.ops.registry import on_tpu, register_backend, resolve_backend
 from repro.ops.tiling import resolve_pipeline_depth
+from repro.sparse.codecs import (encode_seq_blocks, fake_quant_seq_blocks,
+                                 resolve_codec_name)
 
 __all__ = ["sparse_attention", "csr_encode_block_mask"]
 
@@ -49,15 +51,21 @@ def sparse_attention(
     impl=None,
     interpret=None,
     pipeline_depth=None,
+    value_codec=None,
 ) -> jax.Array:
     """Block-sparse flash attention over a static per-head block mask.
 
     ``pipeline_depth`` >= 1 gathers the indirect K/V blocks through the
     shared §III-A producer/consumer pipeline; the default (0) streams them
-    via BlockSpec index_maps on Mosaic's implicit pipeline.
+    via BlockSpec index_maps on Mosaic's implicit pipeline. ``value_codec``
+    compresses the gathered K/V operands per seq block
+    (``repro.sparse.codecs`` — the KV-cache-quantization analogue): the
+    kernel moves int8/fp8 blocks plus one f32 scale each and dequantizes
+    in-register before the softmax step.
     """
     cfg = resolved_config(impl=impl, interpret=interpret,
-                          pipeline_depth=pipeline_depth)
+                          pipeline_depth=pipeline_depth,
+                          value_codec=value_codec)
     backend = resolve_backend("sparse_attention", cfg.impl)
     return backend.fn(q, k, v, block_mask, cfg, block_q=block_q,
                       block_k=block_k, causal=causal, scale=scale)
@@ -67,6 +75,13 @@ def sparse_attention(
 @register_backend("sparse_attention", "ref", priority=50)
 def _attn_ref(q, k, v, block_mask, cfg: OpConfig, *, block_q, block_k,
               causal, scale):
+    codec = resolve_codec_name(cfg.value_codec)
+    if codec != "none":
+        b, kvh, s, d = k.shape
+        k = fake_quant_seq_blocks(
+            k.reshape(b * kvh, s, d), block_k, codec).reshape(k.shape)
+        v = fake_quant_seq_blocks(
+            v.reshape(b * kvh, s, d), block_k, codec).reshape(v.shape)
     return block_sparse_attention_ref(
         q, k, v, block_mask, block_q=block_q, block_k=block_k, causal=causal,
         scale=scale)
@@ -81,12 +96,21 @@ def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
         cfg.pipeline_depth, default=0, op="sparse_attention", fmt="block",
         shape=(h, s), n=s, block=(block_q, block_k), dtype=q.dtype)
     ptr, kcols, max_active = csr_encode_block_mask(block_mask)
+    codec = resolve_codec_name(cfg.value_codec)
+    k3 = k.reshape(b * kvh, s, d)
+    v3 = v.reshape(b * kvh, s, d)
+    kscales = vscales = None
+    if codec != "none":
+        k3, kscales = encode_seq_blocks(k3, block_k, codec)
+        v3, vscales = encode_seq_blocks(v3, block_k, codec)
     out = block_sparse_attention_kernel(
         jnp.asarray(ptr),
         jnp.asarray(kcols),
         q.reshape(b * h, s, d),
-        k.reshape(b * kvh, s, d),
-        v.reshape(b * kvh, s, d),
+        k3,
+        v3,
+        kscales,
+        vscales,
         heads=h,
         kv_heads=kvh,
         block_q=block_q,
@@ -96,6 +120,7 @@ def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
         scale=scale,
         interpret=interpret,
         pipeline_depth=depth,
+        codec=codec,
     )
     return out.reshape(b, h, s, d)
 

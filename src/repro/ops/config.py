@@ -48,6 +48,15 @@ class OpConfig:
     # each kernel's own default (WCSR: 1, the §III-C serial gather; SDDMM /
     # block attention: 0 = Mosaic's implicit grid pipeline).
     pipeline_depth: Union[int, str, None] = None
+    # Value codec for the low-precision operand payload
+    # (repro.sparse.codecs: "none" | "int8" | "fp8_e4m3"). A name quantizes
+    # the sparse operand (spmm; memoized per SparseTensor) / the gathered
+    # dense operand (sddmm: B row-blocks; sparse_attention: K/V blocks) on
+    # the way into the kernel, which dequantizes in-register. "auto" adopts
+    # a measured autotune_spmm winner that passed the accuracy guard; the
+    # package default is "none" — codecs are opt-in. An operand that is
+    # already quantized (SparseTensor.quantize) always keeps its own codec.
+    value_codec: Optional[str] = None
 
     def merged_under(self, override: "OpConfig") -> "OpConfig":
         """Layer ``override`` on top of self: non-None override fields win."""
@@ -60,10 +69,12 @@ class OpConfig:
 
 # chunks_per_task stays None at the default layer (not a concrete 8) so
 # make_plan can distinguish "user pinned it" from "free to adopt a measured
-# autotune_spmm winner"; the 8 fallback lives in make_plan.
+# autotune_spmm winner"; the 8 fallback lives in make_plan. value_codec
+# defaults to "none" (not "auto"): quantization changes numerics, so
+# adopting a tuned codec requires the caller to opt in with "auto".
 _DEFAULTS = OpConfig(impl=None, bn="auto", out_dtype=None,
                      chunks_per_task=None, interpret=None,
-                     pipeline_depth="auto")
+                     pipeline_depth="auto", value_codec="none")
 
 _STACK: contextvars.ContextVar = contextvars.ContextVar(
     "repro_ops_config_stack", default=())

@@ -125,31 +125,65 @@ def _as_bcsr(values: jax.Array, s: BCSRStructure, transposed: bool = False) -> B
     )
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _quantized_values(values: jax.Array, codec: str) -> jax.Array:
+    """The values the forward actually multiplies with under ``codec``:
+    the per-block quantize-dequantize round trip (f32)."""
+    from repro.sparse.codecs import decode_format_values, encode_format_values
+
+    bm, bk = values.shape[1], values.shape[2]
+    payload, scales = encode_format_values("bcsr", (bm, bk), values, codec)
+    return decode_format_values("bcsr", (bm, bk), payload, scales)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def bcsr_matmul(
-    values: jax.Array, b: jax.Array, structure: BCSRStructure, impl=None
+    values: jax.Array, b: jax.Array, structure: BCSRStructure, impl=None,
+    codec: str = "none",
 ) -> jax.Array:
-    """Differentiable C = A_bcsr(values; structure) @ B."""
+    """Differentiable C = A_bcsr(values; structure) @ B.
+
+    ``codec`` runs the quantize-aware forward: the dense ``values`` are
+    encoded per block (``repro.sparse.codecs``) and the kernel consumes
+    the compressed payload with fused in-register dequant. The backward is
+    codec-aware too — ``dB = Q(A)^T @ dC`` routes through the same dequant
+    path the forward used (not the raw dense-dtype values), and
+    ``dvalues`` flows straight through the quantizer (the standard
+    straight-through estimator), so gradients are consistent with what
+    the forward computed.
+    """
     from repro.ops.spmm import spmm
 
-    return spmm(_as_bcsr(values, structure), b, impl=impl)
+    if codec == "none":
+        return spmm(_as_bcsr(values, structure), b, impl=impl)
+    from repro.sparse.codecs import encode_format_values
+
+    bm, bk = values.shape[1], values.shape[2]
+    payload, scales = encode_format_values("bcsr", (bm, bk), values, codec)
+    return spmm(_as_bcsr(payload, structure), b, impl=impl, codec=codec,
+                scales=scales)
 
 
-def _fwd(values, b, structure, impl):
-    return bcsr_matmul(values, b, structure, impl), (values, b)
+def _fwd(values, b, structure, impl, codec):
+    return bcsr_matmul(values, b, structure, impl, codec), (values, b)
 
 
-def _bwd(structure, impl, res, dc):
+def _bwd(structure, impl, codec, res, dc):
     from repro.ops.sddmm import sddmm
     from repro.ops.spmm import spmm
 
     values, b = res
     dc = dc.astype(jnp.float32)
-    # dB = A^T @ dC  (transposed-structure SpMM; paper's format is closed
-    # under transposition given the static permutation)
-    at = _as_bcsr(values.astype(jnp.float32), structure, transposed=True)
+    # dB = A^T @ dC (transposed-structure SpMM; paper's format is closed
+    # under transposition given the static permutation). Under a codec the
+    # forward multiplied the *dequantized* values, so the backward must
+    # transpose exactly those — the codec-aware dequant path — or dB picks
+    # up the quantization error twice.
+    veff = (values.astype(jnp.float32) if codec == "none"
+            else _quantized_values(values, codec))
+    at = _as_bcsr(veff, structure, transposed=True)
     db = spmm(at, dc, impl=impl).astype(b.dtype)
-    # dvalues = SDDMM(dC, B) sampled at the stored blocks
+    # dvalues = SDDMM(dC, B) sampled at the stored blocks; the quantizer
+    # is a straight-through identity for the parameter gradient
     dvals = sddmm(dc, b.astype(jnp.float32), _as_bcsr(values, structure),
                   impl=impl)
     return dvals.astype(values.dtype), db

@@ -10,12 +10,12 @@ on the host before launching a kernel:
   winner, or the paper's serial default).
 
 Plans are memoized per (structure, n, dtype, bn, chunks_per_task,
-pipeline_depth);
+pipeline_depth, value_codec);
 the task decomposition has its own cache keyed only by
-(structure, chunks_per_task), so value swaps *and dtype casts* on the same
-``SparseStructure`` never re-derive tasks — exactly the per-step overhead a
-serving system handling repeated shapes must amortize (the Acc-SpMM /
-cuTeSpMM preprocess-once pattern).
+(structure, chunks_per_task), so value swaps, dtype casts *and codec
+flips* on the same ``SparseStructure`` never re-derive tasks — exactly the
+per-step overhead a serving system handling repeated shapes must amortize
+(the Acc-SpMM / cuTeSpMM preprocess-once pattern).
 
 ``make_partition(structure, num_shards)`` extends the same contract to the
 mesh scale: the structure-aware shard split
@@ -37,11 +37,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ops.config import OpConfig, current_config
-from repro.ops.tiling import resolve_bn, resolve_pipeline_depth, tuned_entry
+from repro.ops.tiling import (count_codec_selection, resolve_bn,
+                              resolve_pipeline_depth, tuned_entry,
+                              tuning_cache_info)
 from repro.sparse.structure import SparseStructure
 
 __all__ = ["Plan", "make_plan", "make_partition", "plan_cache_info",
-           "clear_plan_cache", "partition_balance_report", "PlanCacheInfo"]
+           "clear_plan_cache", "partition_balance_report", "PlanCacheInfo",
+           "cache_stats", "codec_bytes_report"]
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -56,6 +59,10 @@ class Plan:
     # resolved §III-A gather-pipeline depth Q (wcsr kernel path; None for
     # formats whose operand streams ride Mosaic's implicit pipeline)
     pipeline_depth: Optional[int] = None
+    # resolved value codec of the operand this plan executes with
+    # ("none" = raw dense-dtype values); part of the cache key, so a codec
+    # flip re-plans cleanly while the structure-keyed task cache is shared
+    value_codec: str = "none"
 
     @property
     def num_tasks(self) -> int:
@@ -144,26 +151,32 @@ def _tasks_for(structure: SparseStructure, chunks_per_task: int):
 
 
 def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
-              dtype=None) -> Plan:
+              dtype=None, codec: str = "none") -> Plan:
     """Build (or fetch) the execution plan for ``spmm`` over ``structure``.
 
     ``structure`` may be a ``SparseStructure`` or anything carrying one
-    (``SparseTensor`` — whose value dtype is then the default ``dtype``).
-    ``cfg`` defaults to the ambient ``current_config()``; only its ``bn`` /
-    ``chunks_per_task`` planning-relevant fields key the cache. ``dtype``
-    is the value dtype (tile selection is byte-width aware; bare-structure
-    default: bfloat16); a cast re-plans ``bn`` cheaply but shares the task
-    cache.
+    (``SparseTensor`` — whose value dtype *and codec* are then the
+    defaults). ``cfg`` defaults to the ambient ``current_config()``; only
+    its ``bn`` / ``chunks_per_task`` planning-relevant fields key the
+    cache. ``dtype`` is the stored-leaf dtype (tile selection is
+    byte-width aware — a quantized operand plans with its payload bytes;
+    bare-structure default: bfloat16); ``codec`` is the operand's resolved
+    value codec and part of the cache key. Casts and codec flips re-plan
+    ``bn`` cheaply but share the structure-keyed task cache.
     """
     global _HITS, _MISSES
     if not isinstance(structure, SparseStructure):
         inner = _as_structure(structure, "make_plan")
         if dtype is None:
             dtype = getattr(structure, "dtype", None)
+        if codec == "none":
+            codec = getattr(structure, "codec", "none") or "none"
         structure = inner
     if dtype is None:
         dtype = jnp.bfloat16
+    codec = str(codec)
     cfg = current_config() if cfg is None else cfg
+    count_codec_selection(codec)
     bm, bk = structure.block
     if structure.fmt == "wcsr":
         tuned = tuned_entry("spmm", "wcsr", structure.shape, int(n),
@@ -179,7 +192,8 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     else:
         cpt = None
         depth = None
-    key = (structure, int(n), str(np.dtype(dtype)), cfg.bn, cpt, depth)
+    key = (structure, int(n), str(np.dtype(dtype)), cfg.bn, cpt, depth,
+           codec)
     plan = _PLANS.get(key)
     if plan is not None:
         _HITS += 1
@@ -189,7 +203,7 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
                     fmt=structure.fmt, shape=structure.shape, impl="kernel")
     tasks = _tasks_for(structure, cpt) if structure.fmt == "wcsr" else None
     plan = Plan(structure=structure, n=int(n), bn=bn, chunks_per_task=cpt,
-                tasks=tasks, pipeline_depth=depth)
+                tasks=tasks, pipeline_depth=depth, value_codec=codec)
     _PLANS[key] = plan
     return plan
 
@@ -227,3 +241,64 @@ def partition_balance_report() -> list:
     are the mesh-scale amortization invariant.
     """
     return [p.balance() for p in _PARTITIONS.values()]
+
+
+def cache_stats() -> dict:
+    """One aggregator over every host-side cache counter, unified naming.
+
+    PRs 2-4 grew three counter surfaces piecemeal (``plan_cache_info``,
+    ``tuning_cache_info``, the partition fields bolted onto
+    ``PlanCacheInfo``) with drifting key styles (``task_decompositions``
+    vs ``partition_misses`` vs the ``pipeline_depths`` dict). This is the
+    one dashboard-facing view — ``ServeEngine.stats()["cache_stats"]``
+    consumes it — with a fixed shape::
+
+        {"plan":      {"hits", "misses", "size"},
+         "tasks":     {"decompositions"},
+         "partition": {"hits", "misses", "size"},
+         "tuning":    {"hits", "misses", "size", "autotuned"},
+         "selections": {"pipeline_depth": {Q: count},
+                        "value_codec":   {name: count}}}
+
+    The legacy accessors stay (tests and external dashboards key on them);
+    this aggregator is derived from the same counters, never a second set.
+    """
+    p = plan_cache_info()
+    t = tuning_cache_info()
+    return {
+        "plan": {"hits": p.hits, "misses": p.misses, "size": p.size},
+        "tasks": {"decompositions": p.task_decompositions},
+        "partition": {"hits": p.partition_hits, "misses": p.partition_misses,
+                      "size": p.partitions},
+        "tuning": {"hits": t.hits, "misses": t.misses, "size": t.size,
+                   "autotuned": t.autotuned},
+        "selections": {"pipeline_depth": dict(t.pipeline_depths),
+                       "value_codec": dict(t.value_codecs)},
+    }
+
+
+def codec_bytes_report() -> list:
+    """Modeled sparse-operand bytes-moved savings per quantized plan.
+
+    One entry per cached (structure, codec) pair whose plan runs a value
+    codec: baseline (f32 values, the dtype this repro's weights originate
+    as) vs compressed (payload + one f32 scale per block/chunk group)
+    traffic, from ``repro.sparse.codecs.modeled_value_bytes``. Surfaced by
+    ``ServeEngine.stats()["codec_bytes"]`` — the serving dashboard's view
+    of what the codec layer saves the Q-deep gather per step.
+    """
+    from repro.sparse.codecs import modeled_value_bytes
+
+    seen = {}
+    for plan in _PLANS.values():
+        if plan.value_codec in (None, "none"):
+            continue
+        key = (plan.structure, plan.value_codec)
+        if key in seen:
+            continue
+        g = plan.structure
+        entry = modeled_value_bytes(
+            g.stored_elements, g.block[0] * g.block[1], plan.value_codec)
+        entry.update(fmt=g.fmt, shape=g.shape)
+        seen[key] = entry
+    return list(seen.values())

@@ -15,6 +15,8 @@ from repro.ops.config import (OpConfig, resolve_interpret,
                               resolved_config)
 from repro.ops.registry import on_tpu, register_backend, resolve_backend
 from repro.ops.tiling import pad_cols, resolve_bn, resolve_pipeline_depth
+from repro.sparse.codecs import (encode_rowblocks, fake_quant_rowblocks,
+                                 resolve_codec_name)
 from repro.sparse.formats import BCSR
 from repro.sparse.tensor import SparseTensor
 
@@ -22,15 +24,21 @@ __all__ = ["sddmm"]
 
 
 def sddmm(dc: jax.Array, b: jax.Array, a_struct: BCSR, *, impl=None, bn=None,
-          out_dtype=None, interpret=None, pipeline_depth=None) -> jax.Array:
+          out_dtype=None, interpret=None, pipeline_depth=None,
+          value_codec=None) -> jax.Array:
     """``dvalues[nnz, bm, bk] = (dC @ B^T)`` sampled at ``a_struct``'s blocks.
 
     ``pipeline_depth`` >= 1 routes the indirect B tiles through the shared
     §III-A gather pipeline (``repro.kernels.pipeline``); the default (0 /
     "auto" with no tuned entry) keeps them on Mosaic's BlockSpec stream.
+    ``value_codec`` compresses the *gathered* B operand per row-block
+    (``repro.sparse.codecs``) — the kernel moves int8/fp8 tiles and
+    dequantizes in-register after the gather lands; the reference backend
+    mirrors the numerics with a quantize-dequantize round trip.
     """
     cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
-                          interpret=interpret, pipeline_depth=pipeline_depth)
+                          interpret=interpret, pipeline_depth=pipeline_depth,
+                          value_codec=value_codec)
     if isinstance(a_struct, SparseTensor):
         a_struct = a_struct.raw
     backend = resolve_backend("sddmm", cfg.impl)
@@ -40,6 +48,9 @@ def sddmm(dc: jax.Array, b: jax.Array, a_struct: BCSR, *, impl=None, bn=None,
 
 @register_backend("sddmm", "ref", priority=50)
 def _sddmm_ref(dc, b, a_struct: BCSR, cfg: OpConfig):
+    codec = resolve_codec_name(cfg.value_codec)
+    if codec != "none":
+        b = fake_quant_rowblocks(b, a_struct.block[1], codec)
     return sddmm_ref(dc, b, a_struct, out_dtype=cfg.out_dtype)
 
 
@@ -51,18 +62,25 @@ def _sddmm_pallas(dc, b, a_struct: BCSR, cfg: OpConfig, interpret: bool):
     depth = resolve_pipeline_depth(
         cfg.pipeline_depth, default=0, op="sddmm", fmt="bcsr",
         shape=a_struct.shape, n=n, block=a_struct.block, dtype=a_struct.dtype)
+    codec = resolve_codec_name(cfg.value_codec)
+    scales = None
+    if codec != "none":
+        # compress the gathered operand; the scales ride a tiny BlockSpec
+        b, scales = encode_rowblocks(b, bk, codec)
     (dc, b), bn_eff, _ = pad_cols([dc, b], n, bn)
     return sddmm_kernel(
         a_struct.block_rows,
         a_struct.block_cols,
         dc,
         b,
+        scales,
         block=a_struct.block,
         nnz=a_struct.nnz_blocks,
         bn=bn_eff,
         out_dtype=cfg.out_dtype,
         interpret=interpret,
         pipeline_depth=depth,
+        codec=codec,
     )
 
 

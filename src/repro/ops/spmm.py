@@ -24,6 +24,7 @@ the structure-aware partitioner once.
 
 from __future__ import annotations
 
+import dataclasses
 import inspect
 import sys
 import warnings
@@ -50,7 +51,7 @@ __all__ = ["spmm"]
 
 def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
          chunks_per_task=None, interpret=None, pipeline_depth=None,
-         **extras) -> jax.Array:
+         value_codec=None, **extras) -> jax.Array:
     """``C[m, n] = A_sparse @ B`` for any registered sparse format of ``a``.
 
     Keyword arguments override the ambient ``use_config(...)`` /
@@ -58,10 +59,17 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
     ``pipeline_depth`` sets the §III-A gather-pipeline depth Q on kernel
     paths with an indirect operand (WCSR: 1 = serial, 2 = double buffer,
     3 = the paper's circular buffer; ``"auto"`` consults the measured
-    ``autotune_spmm`` cache). Remaining ``extras`` are forwarded to the
-    backend (e.g. the sharded path's ``reduce=``) and validated against
-    its signature — unknown keywords raise instead of being silently
-    swallowed.
+    ``autotune_spmm`` cache). ``value_codec`` selects the low-precision
+    value representation of the sparse operand (``repro.sparse.codecs``):
+    a quantized ``SparseTensor`` always runs under its own codec; an
+    unquantized one is quantized here when a codec name is given
+    (memoized per tensor), and ``"auto"`` adopts a measured
+    ``autotune_spmm`` winner that passed the accuracy guard. Kernels
+    receive the compressed payload + per-group scales and dequantize
+    in-register — the dequantized matrix is never materialized. Remaining
+    ``extras`` are forwarded to the backend (e.g. the sharded path's
+    ``reduce=``) and validated against its signature — unknown keywords
+    raise instead of being silently swallowed.
     """
     if "pipeline_gather" in extras:
         warnings.warn(
@@ -75,16 +83,66 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
     cfg = resolved_config(impl=impl, bn=bn, out_dtype=out_dtype,
                           chunks_per_task=chunks_per_task,
                           interpret=interpret,
-                          pipeline_depth=pipeline_depth)
+                          pipeline_depth=pipeline_depth,
+                          value_codec=value_codec)
     if isinstance(a, SparseTensor):
+        a = _resolve_value_codec(a, cfg, int(b.shape[1]))
         a = _maybe_autoshard(a)
+    elif cfg.value_codec not in (None, "none", "auto"):
+        # an explicit codec must never be a silent no-op (the knob class
+        # PR 4's extras validation exists to eliminate): raw BCSR/WCSR
+        # containers can't carry payload+scales, so quantize through a
+        # one-shot SparseTensor wrap; anything else that can't take the
+        # codec raises. ("auto" stays SparseTensor-only — adoption is
+        # memoized on the tensor.)
+        if isinstance(a, (BCSR, WCSR)):
+            a = SparseTensor.wrap(a).quantize(cfg.value_codec)
+        elif getattr(a, "codec", "none") != cfg.value_codec:
+            raise TypeError(
+                f"spmm: value_codec={cfg.value_codec!r} cannot be applied "
+                f"to a {type(a).__name__} operand (its codec is "
+                f"{getattr(a, 'codec', 'none')!r}); quantize a SparseTensor "
+                "(st.quantize(codec)) before sharding/dispatch")
     if isinstance(a, SparseTensor):
         extras.setdefault("structure", a.structure)
-        a = a.raw
+        if a.codec != "none":
+            # ship the compressed payload; the raw container is only a
+            # carrier here — its "values" are the codec payload, and the
+            # scales ride to the kernel as a first-class operand
+            extras.setdefault("codec", a.codec)
+            extras.setdefault("scales", a.scales)
+            a = a.structure.attach_values(a.payload)
+        else:
+            a = a.raw
     op = resolve_format(a)
     backend = resolve_backend(op, cfg.impl)
     _validate_extras(backend, extras)
     return backend.fn(a, b, cfg, **extras)
+
+
+def _resolve_value_codec(a: SparseTensor, cfg: OpConfig, n: int
+                         ) -> SparseTensor:
+    """Apply the config's ``value_codec`` to an unquantized operand.
+
+    The operand's own codec always wins (an explicitly quantized tensor is
+    a statement about its storage); ``"auto"`` consults the measured
+    ``autotune_spmm`` winner for this problem and adopts its codec only if
+    one was tuned *and* survived the accuracy guard. Quantized variants
+    are memoized on the tensor, so serving pays the encode once per layer.
+    """
+    if a.codec != "none":
+        return a
+    want = cfg.value_codec
+    if want in (None, "none"):
+        return a
+    if want == "auto":
+        from repro.ops.tiling import tuned_entry
+
+        tuned = tuned_entry("spmm", a.format, a.shape, n, a.block, a.dtype)
+        want = (tuned or {}).get("value_codec")
+        if want in (None, "none"):
+            return a
+    return a.quantize(want)
 
 
 def _validate_extras(backend, extras) -> None:
@@ -139,21 +197,33 @@ def _maybe_autoshard(a: SparseTensor):
 # ---------------------------------------------------------------------------
 # BCSR backends
 # ---------------------------------------------------------------------------
+#
+# Every backend declares codec support in its signature: ``codec`` names
+# the value codec of the (then compressed) ``a`` payload and ``scales``
+# carries the per-group f32 scales. Kernel paths fuse the dequant
+# in-register; the jnp references materialize the decode (they *are* the
+# accuracy oracle for the fused path).
 
 
 @register_backend("spmm/bcsr", "ref", priority=50)
-def _bcsr_spmm_ref(a: BCSR, b, cfg: OpConfig, *, structure=None):
+def _bcsr_spmm_ref(a: BCSR, b, cfg: OpConfig, *, structure=None,
+                   codec="none", scales=None):
     del structure  # planning applies to the kernel paths only
+    if codec != "none":
+        from repro.sparse.codecs import decode_format_values
+
+        a = dataclasses.replace(a, blocks=decode_format_values(
+            "bcsr", a.block, a.blocks, scales))
     return bcsr_spmm_ref(a, b, out_dtype=cfg.out_dtype)
 
 
 def _bcsr_spmm_pallas(a: BCSR, b, cfg: OpConfig, interpret: bool,
-                      structure=None):
+                      structure=None, codec="none", scales=None):
     bm, bk = a.block
     n = b.shape[1]
     if structure is not None:
         # same resolve_bn inputs as below -> bit-identical tile selection
-        bn = make_plan(structure, n, cfg, dtype=a.dtype).bn
+        bn = make_plan(structure, n, cfg, dtype=a.dtype, codec=codec).bn
     else:
         bn = resolve_bn(cfg.bn, n, bm, bk, a.dtype, op="spmm", fmt="bcsr",
                         shape=a.shape, impl="kernel")
@@ -163,25 +233,29 @@ def _bcsr_spmm_pallas(a: BCSR, b, cfg: OpConfig, interpret: bool,
         a.block_cols,
         a.blocks,
         b,
+        scales,
         m_blocks=a.shape[0] // bm,
         block=a.block,
         bn=bn_eff,
         out_dtype=cfg.out_dtype,
         interpret=interpret,
+        codec=codec,
     )
     return unpad_cols(out, n, pad)
 
 
 @register_backend("spmm/bcsr", "kernel", available=on_tpu, priority=100)
-def _bcsr_spmm_kernel(a: BCSR, b, cfg: OpConfig, *, structure=None):
+def _bcsr_spmm_kernel(a: BCSR, b, cfg: OpConfig, *, structure=None,
+                      codec="none", scales=None):
     return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
-                             structure)
+                             structure, codec, scales)
 
 
 @register_backend("spmm/bcsr", "kernel_interpret", priority=10)
-def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig, *, structure=None):
+def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig, *, structure=None,
+                                codec="none", scales=None):
     return _bcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True),
-                             structure)
+                             structure, codec, scales)
 
 
 # ---------------------------------------------------------------------------
@@ -190,13 +264,19 @@ def _bcsr_spmm_kernel_interpret(a: BCSR, b, cfg: OpConfig, *, structure=None):
 
 
 @register_backend("spmm/wcsr", "ref", priority=50)
-def _wcsr_spmm_ref(a: WCSR, b, cfg: OpConfig, *, structure=None):
+def _wcsr_spmm_ref(a: WCSR, b, cfg: OpConfig, *, structure=None,
+                   codec="none", scales=None):
     del structure  # kernel-path knob; irrelevant to jnp ref
+    if codec != "none":
+        from repro.sparse.codecs import decode_format_values
+
+        a = dataclasses.replace(a, values=decode_format_values(
+            "wcsr", (a.b_row, a.b_col), a.values, scales))
     return wcsr_spmm_ref(a, b, out_dtype=cfg.out_dtype)
 
 
 def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
-                      structure=None):
+                      structure=None, codec="none", scales=None):
     if structure is None:
         if isinstance(a.window_ptr, jax.core.Tracer):
             raise ValueError(
@@ -210,7 +290,7 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
         # make_wcsr_tasks loop (SparseTensor callers amortize even this)
         structure = wcsr_planning_structure(a)
     n = b.shape[1]
-    plan = make_plan(structure, n, cfg, dtype=a.dtype)
+    plan = make_plan(structure, n, cfg, dtype=a.dtype, codec=codec)
     t_win, t_start, t_n = plan.tasks
     (b,), bn_eff, pad = pad_cols([b], n, plan.bn)
     partial = wcsr_spmm_kernel(
@@ -219,6 +299,7 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
         a.col_idx,
         a.values,
         b,
+        scales,
         b_row=a.b_row,
         b_col=a.b_col,
         bn=bn_eff,
@@ -226,6 +307,7 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
         out_dtype=jnp.float32,
         interpret=interpret,
         pipeline_depth=plan.pipeline_depth,
+        codec=codec,
     )  # [T, b_row, n_padded]
     # deterministic combine of split-window partials (atomicAdd analogue)
     out = jax.ops.segment_sum(
@@ -235,13 +317,14 @@ def _wcsr_spmm_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
 
 
 @register_backend("spmm/wcsr", "kernel", available=on_tpu, priority=100)
-def _wcsr_spmm_kernel(a: WCSR, b, cfg: OpConfig, *, structure=None):
+def _wcsr_spmm_kernel(a: WCSR, b, cfg: OpConfig, *, structure=None,
+                      codec="none", scales=None):
     return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
-                             structure)
+                             structure, codec, scales)
 
 
 @register_backend("spmm/wcsr", "kernel_interpret", priority=10)
 def _wcsr_spmm_kernel_interpret(a: WCSR, b, cfg: OpConfig, *,
-                                structure=None):
+                                structure=None, codec="none", scales=None):
     return _wcsr_spmm_pallas(a, b, cfg, resolve_interpret(cfg, True),
-                             structure)
+                             structure, codec, scales)

@@ -36,7 +36,8 @@ from repro.kernels.tuning import select_bn
 
 __all__ = ["resolve_bn", "auto_bn", "pad_cols", "unpad_cols",
            "tuning_cache_info", "clear_tuning_cache", "TuningCacheInfo",
-           "autotune_spmm", "tuned_entry", "resolve_pipeline_depth"]
+           "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
+           "count_codec_selection"]
 
 
 @dataclasses.dataclass
@@ -44,41 +45,59 @@ class TuningCacheInfo:
     hits: int
     misses: int
     size: int
-    # measured (bn, chunks_per_task, pipeline_depth) auto-tune entries
+    # measured (bn, chunks_per_task, pipeline_depth, value_codec)
+    # auto-tune entries
     autotuned: int = 0
     # pipeline-depth selection counters: depth -> number of times a plan /
     # dispatcher resolved that depth (0 = Mosaic implicit pipeline)
     pipeline_depths: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # value-codec selection counters: codec name -> number of times a plan
+    # resolved with that codec ("none" = raw dense-dtype values)
+    value_codecs: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 _CACHE: dict = {}
 _HITS = 0
 _MISSES = 0
 # measured auto-tune results: key -> {"bn", "chunks_per_task",
-# "pipeline_depth", "us"}; key deliberately omits impl so a tune measured
-# under kernel_interpret (CPU CI) steers the kernel path too.
+# "pipeline_depth", "value_codec", "us"}; key deliberately omits impl so a
+# tune measured under kernel_interpret (CPU CI) steers the kernel path too.
 _TUNED: dict = {}
 # depth -> times resolve_pipeline_depth handed that depth to a kernel plan
 _DEPTH_SELECTIONS: Dict[int, int] = {}
+# codec name -> times make_plan resolved a plan carrying that codec
+_CODEC_SELECTIONS: Dict[str, int] = {}
 
 
 def clear_tuning_cache() -> None:
     """Drop all memoized §IV-C tile selections, measured auto-tune entries
-    and pipeline-depth selection counters."""
+    and pipeline-depth / value-codec selection counters."""
     global _HITS, _MISSES
     _CACHE.clear()
     _TUNED.clear()
     _DEPTH_SELECTIONS.clear()
+    _CODEC_SELECTIONS.clear()
     _HITS = 0
     _MISSES = 0
 
 
 def tuning_cache_info() -> TuningCacheInfo:
     """Hit/miss/size counters for the §IV-C tile-selection cache, plus the
-    measured auto-tune entry count and per-depth selection counters."""
+    measured auto-tune entry count and per-depth / per-codec selection
+    counters."""
+    # a codec winner is mirrored under its payload dtype key (same dict
+    # object), so count distinct winners, not raw entries
     return TuningCacheInfo(hits=_HITS, misses=_MISSES, size=len(_CACHE),
-                           autotuned=len(_TUNED),
-                           pipeline_depths=dict(_DEPTH_SELECTIONS))
+                           autotuned=len({id(v) for v in _TUNED.values()}),
+                           pipeline_depths=dict(_DEPTH_SELECTIONS),
+                           value_codecs=dict(_CODEC_SELECTIONS))
+
+
+def count_codec_selection(codec: str) -> None:
+    """Count one plan resolution under ``codec`` (``make_plan`` calls this
+    for every plan lookup, mirroring the pipeline-depth counters)."""
+    codec = codec or "none"
+    _CODEC_SELECTIONS[codec] = _CODEC_SELECTIONS.get(codec, 0) + 1
 
 
 def auto_bn(n: int, bm: int = 128, bk: int = 128, dtype=jnp.bfloat16, *,
@@ -193,34 +212,56 @@ def _time_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 
 def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
+                  codecs=None, codec_tol: float = 0.05,
                   impl=None, warmup: int = 1, iters: int = 3) -> dict:
-    """Measured sweep over ``(bn, chunks_per_task, pipeline_depth)``.
+    """Measured sweep over ``(bn, chunks_per_task, pipeline_depth,
+    value_codec)``.
 
     Times real ``repro.ops.spmm(a, b)`` calls for every candidate combo,
     memoizes the winner for this (format, shape, N, block, dtype) problem,
-    and returns it as ``{"bn", "chunks_per_task", "pipeline_depth", "us"}``.
-    Subsequent ``make_plan`` / ``spmm`` calls whose config leaves ``bn`` /
-    ``chunks_per_task`` / ``pipeline_depth`` on ``"auto"`` adopt the tuned
-    values (stale auto-``bn`` plans are dropped so they re-resolve; task
-    splits and mesh partitions are untouched).
+    and returns it as ``{"bn", "chunks_per_task", "pipeline_depth",
+    "value_codec", "us", "rejected_codecs"}``. Subsequent ``make_plan`` /
+    ``spmm`` calls whose config leaves ``bn`` / ``chunks_per_task`` /
+    ``pipeline_depth`` on ``"auto"`` adopt the tuned values (stale
+    auto-``bn`` plans are dropped so they re-resolve; task splits and mesh
+    partitions are untouched). The tuned ``value_codec`` is adopted only by
+    calls that opt in with ``value_codec="auto"`` — quantization changes
+    numerics, so it never rides along silently.
 
-    ``a`` is a ``SparseTensor`` or raw BCSR/WCSR operand; candidates
-    default per format — WCSR sweeps all three knobs, BCSR (Mosaic-managed
-    pipeline) sweeps ``bn`` only. ``impl`` defaults to the registry pick
-    (interpret-mode kernels on CPU), so CI can exercise the tuner; on TPU
-    the same call measures compiled kernels.
+    **Accuracy guard:** each non-``"none"`` codec candidate is first
+    checked against the f32 ``impl="ref"`` result; a codec whose
+    max-abs error exceeds ``codec_tol * max|ref|`` is rejected outright
+    (reported in ``"rejected_codecs"``) and none of its combos are timed
+    or eligible to win. The default tolerance (0.05) comfortably covers
+    per-block int8 (~0.4% of the block max per value) and emulated
+    fp8_e4m3 (~6% per value, averaging out over the contraction) on
+    well-scaled data; tighten it to reject fp8 on cancellation-heavy
+    matrices.
+
+    ``a`` is a ``SparseTensor`` or raw BCSR/WCSR operand (quantized
+    operands are decoded first: the tuner owns the codec choice);
+    candidates default per format — WCSR sweeps all four knobs, BCSR
+    (Mosaic-managed pipeline) sweeps ``bn`` and the codec. ``codecs``
+    defaults to ``("none", "int8")``; pass ``("none", "int8",
+    "fp8_e4m3")`` to include the emulated fp8 path. ``impl`` defaults to
+    the registry pick (interpret-mode kernels on CPU), so CI can exercise
+    the tuner; on TPU the same call measures compiled kernels.
     """
     from repro.ops.config import use_config
     from repro.ops.plan import drop_auto_plans
     from repro.ops.spmm import spmm
-    from repro.sparse.structure import structure_of
+    from repro.sparse.codecs import get_codec
+    from repro.sparse.tensor import SparseTensor
 
     import jax
 
-    st = structure_of(a)
+    base = a if isinstance(a, SparseTensor) else SparseTensor.wrap(a)
+    if base.codec != "none":
+        base = base.dequantize()
+    st = base.structure
     n = int(b.shape[1])
     bm, bk = st.block
-    dtype = getattr(a, "dtype", None) or b.dtype
+    dtype = base.dtype
     if bns is None:
         policy = select_bn(n, bm, bk, np.dtype(dtype).itemsize)
         bns = tuple(dict.fromkeys(
@@ -233,31 +274,72 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
         # (see kernels/bcsr/kernel.py); only the tile width is tunable.
         depths = (None,) if depths is None else depths
         chunks = (None,) if chunks_per_task is None else chunks_per_task
+    codecs = ("none", "int8") if codecs is None else codecs
     best = None
-    # the sweep itself resolves every candidate depth; snapshot the
+    rejected = {}
+    # the sweep itself resolves every candidate depth/codec; snapshot the
     # selection counters so the dashboard reflects only what real traffic
     # runs with, not the tuner's probing
-    counters_before = dict(_DEPTH_SELECTIONS)
+    depth_counters = dict(_DEPTH_SELECTIONS)
+    codec_counters = dict(_CODEC_SELECTIONS)
     try:
-        for bn in bns:
-            for cpt in chunks:
-                for depth in depths:
-                    with use_config(impl=impl, bn=bn, chunks_per_task=cpt,
-                                    pipeline_depth=depth):
-                        f = jax.jit(lambda b_: spmm(a, b_))
-                        us = _time_us(f, b, warmup=warmup, iters=iters)
-                    cand = {"bn": int(bn),
-                            "chunks_per_task": cpt if cpt is None
-                            else int(cpt),
-                            "pipeline_depth": depth if depth is None
-                            else int(depth),
-                            "us": us}
-                    if best is None or us < best["us"]:
-                        best = cand
+        ref = None
+        operands = []  # (codec_name, operand) pairs that passed the guard
+        for cname in codecs:
+            cname = get_codec(cname).name  # validates
+            if cname == "none":
+                operands.append(("none", base))
+                continue
+            aq = base.quantize(cname)
+            if ref is None:
+                ref = np.asarray(spmm(base, b, impl="ref"))
+            with use_config(impl=impl):
+                got = np.asarray(spmm(aq, b))
+            err = float(np.max(np.abs(got - ref))
+                        / (np.max(np.abs(ref)) + 1e-12))
+            if err > codec_tol:
+                rejected[cname] = err
+                continue
+            operands.append((cname, aq))
+        for cname, operand in operands:
+            for bn in bns:
+                for cpt in chunks:
+                    for depth in depths:
+                        with use_config(impl=impl, bn=bn,
+                                        chunks_per_task=cpt,
+                                        pipeline_depth=depth):
+                            f = jax.jit(lambda b_: spmm(operand, b_))
+                            us = _time_us(f, b, warmup=warmup, iters=iters)
+                        cand = {"bn": int(bn),
+                                "chunks_per_task": cpt if cpt is None
+                                else int(cpt),
+                                "pipeline_depth": depth if depth is None
+                                else int(depth),
+                                "value_codec": cname,
+                                "us": us}
+                        if best is None or us < best["us"]:
+                            best = cand
     finally:
         _DEPTH_SELECTIONS.clear()
-        _DEPTH_SELECTIONS.update(counters_before)
+        _DEPTH_SELECTIONS.update(depth_counters)
+        _CODEC_SELECTIONS.clear()
+        _CODEC_SELECTIONS.update(codec_counters)
+    if best is None:
+        # every candidate codec failed the guard and "none" wasn't swept:
+        # nothing was timed, so there is no winner to cache
+        raise ValueError(
+            "autotune_spmm: every candidate codec was rejected by the "
+            f"accuracy guard (codec_tol={codec_tol}): "
+            + ", ".join(f"{c}: err={e:.4g}" for c, e in rejected.items())
+            + "; include 'none' in codecs= or loosen codec_tol")
+    best["rejected_codecs"] = rejected
     _TUNED[_tuned_key("spmm", st.fmt, st.shape, n, st.block, dtype)] = best
+    if best["value_codec"] != "none":
+        # a quantized operand plans under its *payload* dtype; mirror the
+        # winner there so "auto" bn / chunks / depth resolve for it too
+        pdtype = get_codec(best["value_codec"]).storage_dtype
+        _TUNED[_tuned_key("spmm", st.fmt, st.shape, n, st.block,
+                          pdtype)] = best
     # auto-plans cached before this tune baked in the old bn selection;
     # task splits, partitions and counters are tune-invariant and kept
     drop_auto_plans()

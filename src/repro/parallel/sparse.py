@@ -235,21 +235,44 @@ class SparsePartition:
 
         Slice offsets are static (from the structure), so this traces under
         ``jit`` — value swaps inside a compiled step re-slice for free.
+        A second leaf (per-group codec scales, ``repro.sparse.codecs``) is
+        sliced at group granularity so each shard ships its compressed
+        payload together with exactly the f32 scales of its own
+        chunks/blocks — the shards travel in compressed form.
         """
         size = self.padded_size
         if self.structure.fmt == "wcsr":
-            (values,) = data  # [b_row, C]
+            values = data[0]  # [b_row, C] (codec payload when quantized)
             parts = []
             for c0, c1 in self._shard_units:
                 v = values[:, c0:c1]
                 parts.append(jnp.pad(v, ((0, 0), (0, size - (c1 - c0)))))
-            return (jnp.stack(parts),)
-        (blocks,) = data  # [nnz_padded, bm, bk]; slice only real blocks
+            out = [jnp.stack(parts)]
+            if len(data) == 2:
+                scales = data[1]  # [1, C // b_col] f32, one per chunk
+                b_col = self.structure.block[1]
+                nc = size // b_col
+                sparts = []
+                for c0, c1 in self._shard_units:
+                    s0, s1 = c0 // b_col, c1 // b_col
+                    sparts.append(jnp.pad(scales[:, s0:s1],
+                                          ((0, 0), (0, nc - (s1 - s0)))))
+                out.append(jnp.stack(sparts))
+            return tuple(out)
+        blocks = data[0]  # [nnz_padded, bm, bk]; slice only real blocks
         parts = []
         for s0, s1 in self._shard_units:
             v = blocks[s0:s1]
             parts.append(jnp.pad(v, ((0, size - (s1 - s0)), (0, 0), (0, 0))))
-        return (jnp.stack(parts),)
+        out = [jnp.stack(parts)]
+        if len(data) == 2:
+            scales = data[1]  # [nnz_padded, 1] f32, one per stored block
+            sparts = []
+            for s0, s1 in self._shard_units:
+                sparts.append(jnp.pad(scales[s0:s1],
+                                      ((0, size - (s1 - s0)), (0, 0))))
+            out.append(jnp.stack(sparts))
+        return tuple(out)
 
 
 def partition_structure(structure: SparseStructure, num_shards: int, *,
@@ -309,21 +332,24 @@ class ShardedSparseTensor:
     """A ``SparseTensor`` distributed over one mesh axis by stored work.
 
     ``data`` holds the per-shard value slices stacked on a leading shard
-    dim (the only pytree leaves); structure, partition, mesh and axis ride
-    along as static aux data, so a sharded operand flows through ``jit``
-    exactly like a ``SparseTensor`` does. Built via
-    ``SparseTensor.shard(mesh, axis)``.
+    dim (the only pytree leaves); structure, partition, mesh, axis and the
+    value codec ride along as static aux data, so a sharded operand flows
+    through ``jit`` exactly like a ``SparseTensor`` does. Built via
+    ``SparseTensor.shard(mesh, axis)``. Under a codec the leaves are
+    ``(payload, scales)`` — shards ship compressed, each with the f32
+    scales of its own chunks/blocks.
     """
 
-    __slots__ = ("structure", "partition", "mesh", "axis", "data")
+    __slots__ = ("structure", "partition", "mesh", "axis", "data", "codec")
 
     def __init__(self, structure: SparseStructure, partition: SparsePartition,
-                 mesh, axis: str, data):
+                 mesh, axis: str, data, codec: str = "none"):
         self.structure = structure
         self.partition = partition
         self.mesh = mesh
         self.axis = str(axis)
         self.data = tuple(data)
+        self.codec = str(codec)
 
     @property
     def format(self) -> str:
@@ -350,12 +376,22 @@ class ShardedSparseTensor:
         return self.partition.balance()
 
     def with_values(self, *global_data) -> "ShardedSparseTensor":
-        """Same partition, new *global* value leaves — never re-partitions."""
+        """Same partition, new *global* value leaves — never re-partitions.
+
+        Under a codec pass the global ``(payload, scales)`` pair.
+        """
         return ShardedSparseTensor(
             self.structure, self.partition, self.mesh, self.axis,
-            self.partition.stack_values(tuple(global_data)))
+            self.partition.stack_values(tuple(global_data)),
+            codec=self.codec)
 
     def astype(self, dtype) -> "ShardedSparseTensor":
+        if self.codec != "none":
+            raise TypeError(
+                "astype on a quantized ShardedSparseTensor would cast the "
+                "codec payload; re-quantize the unsharded tensor "
+                "(st.astype(dtype).quantize(codec).shard(mesh, axis)) "
+                "instead")
         return ShardedSparseTensor(
             self.structure, self.partition, self.mesh, self.axis,
             tuple(x.astype(dtype) for x in self.data))
@@ -380,8 +416,9 @@ class ShardedSparseTensor:
 
 jax.tree_util.register_pytree_node(
     ShardedSparseTensor,
-    lambda t: (t.data, (t.structure, t.partition, t.mesh, t.axis)),
-    lambda aux, data: ShardedSparseTensor(*aux, data),
+    lambda t: (t.data, (t.structure, t.partition, t.mesh, t.axis, t.codec)),
+    lambda aux, data: ShardedSparseTensor(
+        aux[0], aux[1], aux[2], aux[3], data, codec=aux[4]),
 )
 
 
@@ -404,7 +441,8 @@ def shard_tensor(st: SparseTensor, mesh, axis: str = "data"
             f"{tuple(mesh.axis_names)}")
     part = make_partition(st.structure, int(mesh.shape[axis]))
     data = part.stack_values(st.data)
-    sst = ShardedSparseTensor(st.structure, part, mesh, axis, data)
+    sst = ShardedSparseTensor(st.structure, part, mesh, axis, data,
+                              codec=st.codec)
     if not _is_traced(data):
         from repro.parallel.sharding import sparse_operand_shardings
 
@@ -474,9 +512,16 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
     per-shard §III-C task plans from the ``make_plan`` cache — then partial
     [m, n] outputs are combined with ``reduce`` ("psum", or "bf16" for the
     compressed collective) over the mesh axis. The result is replicated.
+
+    Quantized operands stay compressed end-to-end: each shard ships its
+    codec payload with the f32 scales of its own chunks/blocks, the local
+    kernels fuse the dequant in-register, and the partial outputs reuse
+    the same collective machinery — including the bf16-compressed
+    ``reduce="bf16"`` — as the raw-value path.
     """
     g = a.structure
     mesh, axis = a.mesh, a.axis
+    codec = a.codec
     impl = resolve_backend(f"spmm/{g.fmt}", inner_impl or cfg.impl).name
     m, k = g.shape
     if b.shape[0] != k:
@@ -493,9 +538,15 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
     idx = a.partition.index_arrays()
     specs = lambda n_ops: (P(axis),) * n_ops + (P(),)
 
+    def _decode_local(payload, sc):
+        """Per-device dequant for the ref path (kernels fuse it instead)."""
+        from repro.sparse.codecs import decode_format_values
+
+        return decode_format_values(g.fmt, (bm, bk), payload, sc)
+
     if g.fmt == "wcsr":
         cfg_bn = dataclasses.replace(cfg, bn=bn)
-        plans = [make_plan(s, n, cfg_bn, dtype=a.dtype)
+        plans = [make_plan(s, n, cfg_bn, dtype=a.dtype, codec=codec)
                  for s in a.partition.shards]
         cpt = plans[0].chunks_per_task
         # one global §III-A depth, like bn: shards run one SPMD program
@@ -511,53 +562,64 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
         padded_cols = a.partition.padded_size
         num_windows = g.num_windows
 
-        def local(tw, ts, tn, ci, wp, v, bmat):
+        def local(tw, ts, tn, ci, wp, v, sc, bmat):
             tw, ts, tn, ci, wp, v = (x[0] for x in (tw, ts, tn, ci, wp, v))
+            sc = None if sc is None else sc[0]
             if impl == "ref":
+                if codec != "none":
+                    v = _decode_local(v, sc)
                 w_loc = WCSR(values=v, col_idx=ci, window_ptr=wp,
                              shape=(m, k), b_row=bm, b_col=bk,
                              padded_cols=padded_cols)
                 out = wcsr_spmm_ref(w_loc, bmat, out_dtype=jnp.float32)
             else:
                 partial = wcsr_spmm_kernel(
-                    ts, tn, ci, v, bmat, b_row=bm, b_col=bk, bn=bn_eff,
+                    ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk, bn=bn_eff,
                     chunks_per_task=cpt, out_dtype=jnp.float32,
-                    interpret=interpret, pipeline_depth=depth)
+                    interpret=interpret, pipeline_depth=depth, codec=codec)
                 out = jax.ops.segment_sum(partial, tw,
                                           num_segments=num_windows)
                 out = out.reshape(m, -1)
             return _reduce(out, axis, reduce)
 
+        # the scales slot always exists (None when codec is off — an empty
+        # pytree, so its P(axis) spec binds no leaves)
         out = shard_map(
-            local, mesh=mesh, in_specs=specs(6), out_specs=P(),
+            local, mesh=mesh, in_specs=specs(7), out_specs=P(),
             check_vma=False,
         )(jnp.asarray(t_win), jnp.asarray(t_start), jnp.asarray(t_n),
-          idx["col_idx"], idx["window_ptr"], a.data[0], b_pad)
+          idx["col_idx"], idx["window_ptr"], a.data[0],
+          a.data[1] if codec != "none" else None, b_pad)
     else:
         nnz_p = a.partition.padded_size
         m_blocks = m // bm
 
-        def local(r, c, pt, mask, bl, bmat):
+        def local(r, c, pt, mask, bl, sc, bmat):
             r, c, pt, mask, bl = (x[0] for x in (r, c, pt, mask, bl))
+            sc = None if sc is None else sc[0]
             if impl == "ref":
+                if codec != "none":
+                    bl = _decode_local(bl, sc)
                 a_loc = BCSR(blocks=bl, block_rows=r, block_cols=c,
                              block_row_ptr=pt, shape=(m, k), block=(bm, bk),
                              nnz_blocks=nnz_p)
                 out = bcsr_spmm_ref(a_loc, bmat, out_dtype=jnp.float32)
             else:
                 out = bcsr_spmm_kernel(
-                    r, c, bl, bmat, m_blocks=m_blocks, block=(bm, bk),
-                    bn=bn_eff, out_dtype=jnp.float32, interpret=interpret)
+                    r, c, bl, bmat, sc, m_blocks=m_blocks, block=(bm, bk),
+                    bn=bn_eff, out_dtype=jnp.float32, interpret=interpret,
+                    codec=codec)
                 # rows no shard-block covers are never written by the
                 # kernel: select zeros there instead of trusting the buffer
                 out = jnp.where(mask[:, None], out, 0.0)
             return _reduce(out, axis, reduce)
 
         out = shard_map(
-            local, mesh=mesh, in_specs=specs(5), out_specs=P(),
+            local, mesh=mesh, in_specs=specs(6), out_specs=P(),
             check_vma=False,
         )(idx["block_rows"], idx["block_cols"], idx["block_row_ptr"],
-          idx["row_mask"], a.data[0], b_pad)
+          idx["row_mask"], a.data[0],
+          a.data[1] if codec != "none" else None, b_pad)
 
     out = out.astype(cfg.out_dtype or b.dtype)
     return unpad_cols(out, n, pad)

@@ -164,9 +164,19 @@ class ServeEngine:
         kernel plans resolved each §III-A gather-pipeline depth Q — the
         dashboard view of whether the measured auto-tune (or an explicit
         ``OpConfig(pipeline_depth=...)``) is actually steering the hot
-        path.
+        path. ``value_codecs`` is the sibling counter for the value-codec
+        layer: how many plans resolved each codec ("none" = raw values),
+        i.e. the per-layer codec selections actually serving traffic.
+        ``codec_bytes`` models what those selections save: per quantized
+        (structure, codec) plan, baseline-vs-compressed sparse-operand
+        bytes moved (payload + per-group f32 scales; see
+        ``repro.ops.codec_bytes_report``). ``cache_stats`` is the one
+        unified aggregator over every counter above
+        (``repro.ops.cache_stats`` — fixed key naming; the legacy
+        per-cache dataclasses remain for existing dashboards).
         """
-        from repro.ops import (partition_balance_report, plan_cache_info,
+        from repro.ops import (cache_stats, codec_bytes_report,
+                               partition_balance_report, plan_cache_info,
                                tuning_cache_info)
 
         tuning = tuning_cache_info()
@@ -176,6 +186,9 @@ class ServeEngine:
             "plan_cache": plan_cache_info(),
             "tuning_cache": tuning,
             "pipeline_depths": tuning.pipeline_depths,
+            "value_codecs": tuning.value_codecs,
+            "codec_bytes": codec_bytes_report(),
+            "cache_stats": cache_stats(),
             "sparse_shards": partition_balance_report(),
         }
 

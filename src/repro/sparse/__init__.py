@@ -60,6 +60,18 @@ Exported symbols (one-liners; see each docstring for the full story):
 * ``magnitude_block_mask`` / ``random_block_mask`` / ``banded_block_mask``
   — block-mask generators for the three pruning methods.
 
+**Value codecs**
+
+* ``ValueCodec`` — one per-group-scaled low-precision value representation
+  (``none`` | ``int8`` | ``fp8_e4m3``); see ``repro.sparse.codecs``.
+* ``register_value_codec(c)`` / ``registered_value_codecs()`` /
+  ``get_codec(name)`` — registry lookups.
+* ``SparseTensor.quantize("int8")`` / ``.dequantize()`` — hop between raw
+  and compressed value storage; ``sparsify(..., codec=...)`` /
+  ``convert(..., codec=...)`` quantize on conversion. Kernels consume the
+  payload with fused in-register dequant — structure-keyed caches are
+  shared with the raw tensors.
+
 **Structure/values separation**
 
 * ``SparseStructure`` — the hashable, host-side half of a sparse matrix;
@@ -72,6 +84,9 @@ Exported symbols (one-liners; see each docstring for the full story):
   ``.shard(mesh, axis)``; a pytree with only values as leaves.
 """
 
+from repro.sparse.codecs import (ValueCodec, get_codec,
+                                 register_value_codec,
+                                 registered_value_codecs)
 from repro.sparse.convert import (convert, register_conversion,
                                   registered_conversions)
 from repro.sparse.formats import (BCSR, WCSR, bcsr_from_dense, bcsr_from_mask,
@@ -104,4 +119,7 @@ __all__ = [
     "random_block_mask",
     # structure/values separation
     "SparseStructure", "structure_of", "make_wcsr_tasks", "SparseTensor",
+    # value codecs
+    "ValueCodec", "register_value_codec", "registered_value_codecs",
+    "get_codec",
 ]

@@ -1,0 +1,324 @@
+"""Value codecs: per-group-scaled low-precision storage of sparse values.
+
+The async pipelines of the paper are bandwidth-bound on the sparse operand:
+every byte the Q-deep gather (§III-A) does not move widens the
+latency-hiding headroom the depth ablation measures. Acc-SpMM's
+bit-compression of the sparse operand and cuTeSpMM's footprint-driven tile
+residency (PAPERS.md) both treat operand bytes as a first-order knob; this
+module makes that knob pluggable for every value-carrying array in
+``repro``.
+
+A ``ValueCodec`` stores values as a compact *payload* plus per-group f32
+*scales* (symmetric quantization: ``v ≈ payload * scale``, one scale per
+group). The group is always one kernel consumption unit — a ``[bm, bk]``
+block for BCSR, a ``[b_row, b_col]`` packed-column chunk for WCSR, a
+``[bk, n]`` row-block of a gathered dense operand — so kernels can
+dequantize **in-register** right after the DMA lands
+(``repro.kernels.pipeline.dequant_tile``) and HBM traffic is only the
+compressed payload plus one f32 scale per group.
+
+Built-in codecs:
+
+* ``none``       — identity: values stored at their dense dtype.
+* ``int8``       — symmetric int8: ``payload = round(v / scale)`` clipped
+                   to [-127, 127], ``scale = amax(group) / 127`` (f32).
+* ``fp8_e4m3``   — emulated fp8: payload stored as ``float8_e4m3fn``
+                   (4 exponent / 3 mantissa bits, finite-only), scaled so
+                   the group max lands at the format's top magnitude
+                   (448). Gated on the jax build exposing the dtype; this
+                   container emulates the arithmetic in f32 — the wire
+                   format (1 byte/value + f32 group scales) is what the
+                   bytes-moved modeling measures.
+
+Quantization and dequantization are pure ``jnp`` (jit-traceable), so
+quantize-aware paths (``repro.ops.bcsr_matmul``'s codec forward) trace into
+compiled steps. Structure hashing is untouched: payload + scales are value
+leaves, the ``SparseStructure`` stays codec-free, and every structure-keyed
+cache (plans' task splits, mesh partitions) is shared between quantized and
+raw tensors of the same pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ValueCodec",
+    "register_value_codec",
+    "registered_value_codecs",
+    "get_codec",
+    "resolve_codec_name",
+    "encode_format_values",
+    "decode_format_values",
+    "encode_rowblocks",
+    "decode_rowblocks",
+    "fake_quant_rowblocks",
+    "encode_seq_blocks",
+    "decode_seq_blocks",
+    "fake_quant_seq_blocks",
+    "modeled_value_bytes",
+]
+
+_F8E4M3 = getattr(jnp, "float8_e4m3fn", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueCodec:
+    """One value-storage scheme: payload dtype + unit-scale cast.
+
+    Attributes:
+      name:            registry key ("none", "int8", "fp8_e4m3", ...).
+      storage_dtype:   payload dtype (None for the identity codec).
+      bytes_per_value: payload bytes per stored value (scales excluded —
+                       they are accounted separately, one f32 per group).
+      cap:             largest magnitude representable at unit scale; the
+                       encoder maps each group's absolute max onto it.
+      cast_unit:       ``cast_unit(x_f32_in_[-cap, cap])`` -> payload array
+                       (the rounding/clipping rule of the format).
+    """
+
+    name: str
+    storage_dtype: Any
+    bytes_per_value: float
+    cap: float
+    cast_unit: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+_CODECS: Dict[str, ValueCodec] = {}
+
+
+def register_value_codec(codec: ValueCodec) -> ValueCodec:
+    """Register (or replace) a codec by name."""
+    _CODECS[codec.name] = codec
+    return codec
+
+
+def registered_value_codecs():
+    """Registered codec names, ``"none"`` first."""
+    return sorted(_CODECS, key=lambda n: (n != "none", n))
+
+
+def get_codec(name: str) -> ValueCodec:
+    """Look up a codec descriptor by name."""
+    try:
+        return _CODECS[str(name).lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown value codec {name!r}; registered: "
+            f"{registered_value_codecs()}") from None
+
+
+def resolve_codec_name(value_codec) -> str:
+    """Normalize an ``OpConfig.value_codec`` field to a concrete name.
+
+    ``None`` and ``"auto"`` resolve to ``"none"`` here — the measured
+    auto-tune adoption of ``"auto"`` happens at the spmm dispatch layer
+    (``repro.ops.spmm``), which has the operand/tuning context this
+    helper deliberately does not.
+    """
+    if value_codec in (None, "none", "auto"):
+        return "none"
+    return get_codec(value_codec).name
+
+
+# ---------------------------------------------------------------------------
+# Built-in codecs
+# ---------------------------------------------------------------------------
+
+register_value_codec(ValueCodec(
+    name="none", storage_dtype=None, bytes_per_value=0.0, cap=0.0))
+
+register_value_codec(ValueCodec(
+    name="int8",
+    storage_dtype=jnp.int8,
+    bytes_per_value=1.0,
+    cap=127.0,
+    cast_unit=lambda x: jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8),
+))
+
+if _F8E4M3 is not None:  # gated: older jax builds lack the ml_dtypes fp8
+    register_value_codec(ValueCodec(
+        name="fp8_e4m3",
+        storage_dtype=_F8E4M3,
+        bytes_per_value=1.0,
+        cap=448.0,  # float8_e4m3fn max finite magnitude
+        cast_unit=lambda x: x.astype(_F8E4M3),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Group encode/decode (pure jnp — traceable under jit)
+# ---------------------------------------------------------------------------
+
+
+def _encode_groups(x: jax.Array, codec: ValueCodec, axes: Tuple[int, ...]
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-group quantization over the reduced ``axes``.
+
+    Returns ``(payload, scale)`` with ``scale`` keeping reduced dims
+    (keepdims) in f32. All-zero groups store scale 0 (payload is 0 too),
+    so they decode to exact zeros.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    scale = amax / codec.cap
+    safe = jnp.where(scale > 0, scale, 1.0)
+    return codec.cast_unit(xf / safe), scale
+
+
+def _decode(payload: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (payload.astype(jnp.float32) * scale.astype(jnp.float32)
+            ).astype(dtype)
+
+
+def encode_format_values(fmt: str, block: Tuple[int, int], values: jax.Array,
+                         codec: str) -> Tuple[jax.Array, jax.Array]:
+    """Quantize one format's value leaf into ``(payload, scales)``.
+
+    Wire format (the shapes kernels stream):
+
+    * bcsr — values ``[nnz_p, bm, bk]`` -> payload same shape
+      (``storage_dtype``), scales ``[nnz_p, 1]`` f32: one scale per stored
+      block.
+    * wcsr — values ``[b_row, C]`` -> payload same shape, scales
+      ``[1, C // b_col]`` f32: one scale per packed-column chunk (the
+      §III-C consumption unit), so a scale travels with its chunk through
+      task splits and mesh shards.
+    """
+    c = get_codec(codec)
+    if c.name == "none":
+        raise ValueError("encode_format_values: codec 'none' stores raw "
+                         "values; nothing to encode")
+    if fmt == "bcsr":
+        payload, scale = _encode_groups(values, c, axes=(1, 2))
+        return payload, scale.reshape(values.shape[0], 1)
+    if fmt == "wcsr":
+        b_row, b_col = int(block[0]), int(block[1])
+        cols = values.shape[1]
+        if cols % b_col:
+            raise ValueError(
+                f"wcsr values width {cols} not a multiple of b_col={b_col}")
+        nchunks = cols // b_col
+        r = values.reshape(values.shape[0], nchunks, b_col)
+        payload, scale = _encode_groups(r, c, axes=(0, 2))
+        return (payload.reshape(values.shape),
+                scale.reshape(1, nchunks))
+    raise ValueError(f"encode_format_values: unsupported format {fmt!r}")
+
+
+def decode_format_values(fmt: str, block: Tuple[int, int], payload: jax.Array,
+                         scales: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Dequantize ``(payload, scales)`` back to a dense-dtype value leaf."""
+    if fmt == "bcsr":
+        return _decode(payload, scales.reshape(-1, 1, 1), dtype)
+    if fmt == "wcsr":
+        b_col = int(block[1])
+        nchunks = payload.shape[1] // b_col
+        r = payload.reshape(payload.shape[0], nchunks, b_col)
+        out = _decode(r, scales.reshape(1, nchunks, 1), dtype)
+        return out.reshape(payload.shape)
+    raise ValueError(f"decode_format_values: unsupported format {fmt!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dense-operand grouping (the *gathered* operands of sddmm / block-attn)
+# ---------------------------------------------------------------------------
+
+
+def encode_rowblocks(x: jax.Array, bk: int, codec: str
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a dense ``[k, n]`` operand per ``bk``-row block.
+
+    The sddmm kernel gathers B in ``[bk, n-slice]`` tiles indexed by
+    ``block_cols``; one f32 scale per row-block (scales ``[k // bk, 1]``)
+    lets the consumer dequantize the whole gathered tile with a single
+    scalar multiply.
+    """
+    c = get_codec(codec)
+    k = x.shape[0]
+    if k % bk:
+        raise ValueError(f"encode_rowblocks: k={k} not a multiple of {bk}")
+    r = x.reshape(k // bk, bk, x.shape[1])
+    payload, scale = _encode_groups(r, c, axes=(1, 2))
+    return payload.reshape(x.shape), scale.reshape(k // bk, 1)
+
+
+def decode_rowblocks(payload: jax.Array, scales: jax.Array, bk: int,
+                     dtype=jnp.float32) -> jax.Array:
+    k = payload.shape[0]
+    r = payload.reshape(k // bk, bk, payload.shape[1])
+    return _decode(r, scales.reshape(-1, 1, 1), dtype).reshape(payload.shape)
+
+
+def fake_quant_rowblocks(x: jax.Array, bk: int, codec: str) -> jax.Array:
+    """Quantize-dequantize round trip (the reference backends' view)."""
+    payload, scales = encode_rowblocks(x, bk, codec)
+    return decode_rowblocks(payload, scales, bk, dtype=x.dtype)
+
+
+def encode_seq_blocks(x: jax.Array, blk: int, codec: str
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a ``[rows, S, D]`` K/V operand per ``blk``-long seq block.
+
+    The block-attention kernel gathers K/V in ``[blk, D]`` blocks per
+    (kv row, active k-block); scales are ``[rows, S // blk]`` f32 — one per
+    gathered block.
+    """
+    c = get_codec(codec)
+    rows, s, d = x.shape
+    if s % blk:
+        raise ValueError(f"encode_seq_blocks: S={s} not a multiple of {blk}")
+    r = x.reshape(rows, s // blk, blk, d)
+    payload, scale = _encode_groups(r, c, axes=(2, 3))
+    return payload.reshape(x.shape), scale.reshape(rows, s // blk)
+
+
+def decode_seq_blocks(payload: jax.Array, scales: jax.Array, blk: int,
+                      dtype=jnp.float32) -> jax.Array:
+    rows, s, d = payload.shape
+    r = payload.reshape(rows, s // blk, blk, d)
+    return _decode(r, scales.reshape(rows, -1, 1, 1), dtype
+                   ).reshape(payload.shape)
+
+
+def fake_quant_seq_blocks(x: jax.Array, blk: int, codec: str) -> jax.Array:
+    payload, scales = encode_seq_blocks(x, blk, codec)
+    return decode_seq_blocks(payload, scales, blk, dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bytes-moved modeling
+# ---------------------------------------------------------------------------
+
+
+def modeled_value_bytes(stored_elements: int, group_size: int, codec: str,
+                        baseline_itemsize: int = 4) -> Dict[str, float]:
+    """Modeled sparse-operand traffic for one structure under ``codec``.
+
+    ``baseline_itemsize`` is the dense value dtype the codec replaces
+    (values in this repro originate as f32; pass 2 for a bf16 baseline).
+    Compressed traffic = payload bytes + one f32 scale per ``group_size``
+    values. Used by ``repro.ops.codec_bytes_report`` and the
+    ``table2/codec_*`` ablation rows.
+    """
+    c = get_codec(codec)
+    baseline = float(stored_elements) * baseline_itemsize
+    if c.name == "none":
+        compressed = baseline
+        scale_bytes = 0.0
+    else:
+        scale_bytes = (stored_elements / max(group_size, 1)) * 4.0
+        compressed = stored_elements * c.bytes_per_value + scale_bytes
+    return {
+        "codec": c.name,
+        "baseline_bytes": baseline,
+        "compressed_bytes": compressed,
+        "scale_bytes": scale_bytes,
+        "saved_bytes": baseline - compressed,
+        "reduction": baseline / max(compressed, 1e-12),
+    }

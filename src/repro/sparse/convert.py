@@ -71,25 +71,45 @@ def _find_path(src: str, dst: str) -> List[Tuple[str, str]]:
         f"{registered_conversions()}")
 
 
-def convert(x, to: str, **kwargs):
+def convert(x, to: str, codec: str | None = None, **kwargs):
     """Convert ``x`` (dense array, raw format, or SparseTensor) to ``to``.
 
     ``to`` is a registered format name ("dense", "bcsr", "wcsr", ...).
     Returns the same flavor as the input: raw in -> raw out, SparseTensor
     in -> SparseTensor out (unless ``to="dense"``, which always returns a
     dense array).
+
+    ``codec`` selects a value codec (``repro.sparse.codecs``) for the
+    result: quantize on conversion. Cross-format hops from a quantized
+    ``SparseTensor`` dequantize for the hop (the raw containers and the
+    dense intermediate are always dense-dtype) and re-quantize on the way
+    out — to the source tensor's codec by default, or to ``codec`` when
+    given (``codec="none"`` strips it). Requesting a codec on a raw/dense
+    input returns a ``SparseTensor`` (the payload + scales carrier).
     """
     from repro.sparse.tensor import SparseTensor
 
     orig = x
     rewrap = isinstance(x, SparseTensor)
+    src_codec = x.codec if rewrap else "none"
+    if codec is not None:
+        from repro.sparse.codecs import get_codec
+
+        codec = get_codec(codec).name  # validates the codec name
     if rewrap:
-        x = x.raw
+        x = x.raw  # dequantized view for quantized tensors
     dst = get_format(to).name  # validates the target name
     src = format_name_of(x)
+    out_codec = src_codec if codec is None else codec
+    if src == dst and not kwargs:
+        # identity path (keeps any cached SparseTensor structure) — unless
+        # a codec change was requested, which re-encodes values in place
+        if rewrap:
+            return orig if out_codec == orig.codec else orig.quantize(out_codec)
+        if out_codec == "none" or dst == "dense":
+            return orig
+        return SparseTensor.wrap(x).quantize(out_codec)
     if src == dst:
-        if not kwargs:
-            return orig  # identity (keeps any cached SparseTensor structure)
         # keywords request a re-pack (e.g. new block geometry): route
         # through dense so they apply — and typos still get validated
         path = _find_path(src, "dense") + _find_path("dense", dst)
@@ -107,8 +127,11 @@ def convert(x, to: str, **kwargs):
         fn = _EDGES[edge]
         kw = {k: v for k, v in kwargs.items() if k in fn._accepts}
         x = fn(x, **kw)
-    if rewrap and dst != "dense":
-        return SparseTensor.wrap(x)
+    if dst == "dense":
+        return x  # always decoded: to_dense dequantizes
+    if rewrap or out_codec != "none":
+        out = SparseTensor.wrap(x)
+        return out if out_codec == "none" else out.quantize(out_codec)
     return x
 
 

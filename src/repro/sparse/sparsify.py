@@ -132,11 +132,14 @@ def sparsify(
     seed: int = 0,
     pad_to: int | None = None,
     bandwidth_blocks: int | None = None,
+    codec: str = "none",
 ):
     """Prune a dense weight and pack it into either co-designed format.
 
     Replaces the ``sparsify_to_bcsr`` / ``sparsify_to_wcsr`` pair with one
-    format-agnostic entry. Returns a ``SparseTensor``.
+    format-agnostic entry. Returns a ``SparseTensor``. ``codec`` quantizes
+    the packed values on the way out (``repro.sparse.codecs``): the tensor
+    then stores the compressed payload + per-group f32 scales.
 
     * ``format="bcsr"``: block-granular pruning (``method`` selects the
       block mask: ``"magnitude"`` | ``"random"`` | ``"banded"``),
@@ -151,11 +154,16 @@ def sparsify(
 
     w = np.asarray(weight)
     fmt = format.lower()
+
+    def _finish(st):
+        return st if codec in (None, "none") else st.quantize(codec)
+
     if fmt == "bcsr":
         block = (128, 128) if block is None else tuple(block)
         mask = _block_mask(w, block, method, sparsity, seed, bandwidth_blocks)
         wm = apply_block_mask(w, mask, block)
-        return SparseTensor.wrap(bcsr_from_mask(wm, mask, block, pad_to=pad_to))
+        return _finish(
+            SparseTensor.wrap(bcsr_from_mask(wm, mask, block, pad_to=pad_to)))
     if fmt == "wcsr":
         b_row, b_col = (128, 8) if block is None else block
         if method == "magnitude":
@@ -175,6 +183,6 @@ def sparsify(
             wm = apply_block_mask(w, mask, (b_row, b_col))
         else:
             raise ValueError(f"unknown method {method!r}")
-        return SparseTensor.wrap(wcsr_from_dense(wm, b_row, b_col))
+        return _finish(SparseTensor.wrap(wcsr_from_dense(wm, b_row, b_col)))
     raise ValueError(f"sparsify: unknown format {format!r} "
                      "(expected 'bcsr' or 'wcsr')")

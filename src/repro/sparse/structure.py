@@ -115,24 +115,32 @@ class SparseStructure:
 
     # -- device index arrays (memoized uploads) ----------------------------
     def index_arrays(self) -> Dict[str, jax.Array]:
-        """The structure's index arrays as device arrays, uploaded once."""
-        if self._dev is None:
-            if self.fmt == "bcsr":
-                rows, cols = self.indices
-                self._dev = {
-                    "block_rows": jnp.asarray(rows),
-                    "block_cols": jnp.asarray(cols),
-                    "block_row_ptr": jnp.asarray(self.ptrs),
-                }
-            elif self.fmt == "wcsr":
-                (col_idx,) = self.indices
-                self._dev = {
-                    "col_idx": jnp.asarray(col_idx),
-                    "window_ptr": jnp.asarray(self.ptrs),
-                }
-            else:
-                raise ValueError(f"unknown structure format {self.fmt!r}")
-        return self._dev
+        """The structure's index arrays as device arrays, uploaded once.
+
+        Under an enclosing trace the uploads become traced constants,
+        which must not be memoized on this (shared, long-lived) object —
+        they would leak out of the trace; only concrete arrays are cached.
+        """
+        if self._dev is not None:
+            return self._dev
+        if self.fmt == "bcsr":
+            rows, cols = self.indices
+            dev = {
+                "block_rows": jnp.asarray(rows),
+                "block_cols": jnp.asarray(cols),
+                "block_row_ptr": jnp.asarray(self.ptrs),
+            }
+        elif self.fmt == "wcsr":
+            (col_idx,) = self.indices
+            dev = {
+                "col_idx": jnp.asarray(col_idx),
+                "window_ptr": jnp.asarray(self.ptrs),
+            }
+        else:
+            raise ValueError(f"unknown structure format {self.fmt!r}")
+        if not any(isinstance(a, jax.core.Tracer) for a in dev.values()):
+            self._dev = dev
+        return self._dev if self._dev is not None else dev
 
     # -- raw-format reconstruction -----------------------------------------
     def attach_values(self, *data) -> "BCSR | WCSR":

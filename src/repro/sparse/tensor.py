@@ -7,6 +7,7 @@ One wrapper over the co-designed formats with array-API ergonomics::
                                    # precedence applies: use_config / env)
     st.T, st.astype(jnp.bfloat16), st.density, st.fill_ratio(w)
     st.to("wcsr", block=(64, 8))   # conversion graph
+    st.quantize("int8")            # per-block-scaled value codec
 
 Structure/values separation is the point: ``st.structure`` is a hashable
 ``SparseStructure`` shared across value swaps (weight updates, dtype casts),
@@ -16,11 +17,20 @@ plans once and decodes forever. ``SparseTensor`` is a registered pytree with
 static aux data, which also makes the WCSR kernel path traceable (its task
 decomposition comes from the concrete structure, not from a traced
 ``window_ptr``).
+
+Value codecs (``repro.sparse.codecs``) extend the same separation to the
+value *representation*: a quantized tensor carries ``(payload, scales)`` as
+its two value leaves and the codec name as static aux data, while the
+structure object stays codec-free — so quantized and raw tensors of one
+pruning pattern share every structure-keyed cache (plans' task splits,
+mesh partitions) verbatim. ``quantize``/``dequantize`` hop between the
+representations; kernels consume the payload directly with fused
+in-register dequant (``repro.ops.spmm`` threads payload + scales through).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -31,16 +41,25 @@ from repro.sparse.structure import SparseStructure
 __all__ = ["SparseTensor"]
 
 
+def _is_traced(data) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in data)
+
+
 class SparseTensor:
-    """structure: static ``SparseStructure``; data: tuple of value leaves."""
+    """structure: static ``SparseStructure``; data: tuple of value leaves
+    (one raw value array, or ``(payload, scales)`` under a value codec)."""
 
-    __slots__ = ("structure", "data", "_raw", "_sharded")
+    __slots__ = ("structure", "data", "codec", "_raw", "_sharded",
+                 "_quantized")
 
-    def __init__(self, structure: SparseStructure, data):
+    def __init__(self, structure: SparseStructure, data,
+                 codec: str = "none"):
         self.structure = structure
         self.data = tuple(data)
+        self.codec = str(codec)
         self._raw = None
         self._sharded = None  # memoized (mesh, axis) -> ShardedSparseTensor
+        self._quantized = None  # memoized codec name -> SparseTensor
 
     @classmethod
     def wrap(cls, raw) -> "SparseTensor":
@@ -58,17 +77,38 @@ class SparseTensor:
 
     @classmethod
     def from_dense(cls, dense, format: str = "bcsr", **kw) -> "SparseTensor":
-        """Convert a dense matrix and wrap it: ``from_dense(d, "wcsr", block=...)``."""
+        """Convert a dense matrix and wrap it: ``from_dense(d, "wcsr", block=...)``.
+
+        ``codec=`` quantizes on conversion (``repro.sparse.codecs``).
+        """
         from repro.sparse.convert import convert
 
-        return cls.wrap(convert(dense, format, **kw))
+        out = convert(dense, format, **kw)
+        return out if isinstance(out, SparseTensor) else cls.wrap(out)
 
     # -- views -------------------------------------------------------------
     @property
     def raw(self):
-        """The raw format container (rebuilt lazily after pytree round-trips)."""
+        """The raw format container (rebuilt lazily after pytree round-trips).
+
+        Under a value codec this **dequantizes**: the raw containers store
+        dense-dtype values, so conversions / densify / transpose see the
+        decoded matrix. The hot spmm path never calls this for quantized
+        tensors — ``repro.ops.spmm`` ships the compressed payload + scales
+        straight to the kernels.
+        """
         if self._raw is None:
-            self._raw = self.structure.attach_values(*self.data)
+            if self.codec != "none":
+                from repro.sparse.codecs import decode_format_values
+
+                values = decode_format_values(
+                    self.format, self.block, self.data[0], self.data[1])
+                raw = self.structure.attach_values(values)
+            else:
+                raw = self.structure.attach_values(*self.data)
+            if _is_traced(self.data):
+                return raw  # don't let traced constants outlive the trace
+            self._raw = raw
         return self._raw
 
     @property
@@ -85,7 +125,18 @@ class SparseTensor:
 
     @property
     def dtype(self):
+        """Dtype of the stored leaf (the payload dtype under a codec)."""
         return self.data[0].dtype
+
+    @property
+    def payload(self) -> jax.Array:
+        """The stored value leaf (compressed under a codec)."""
+        return self.data[0]
+
+    @property
+    def scales(self) -> Optional[jax.Array]:
+        """Per-group f32 codec scales, or None for codec ``"none"``."""
+        return self.data[1] if self.codec != "none" else None
 
     @property
     def density(self) -> float:
@@ -96,23 +147,78 @@ class SparseTensor:
         """Fraction of stored values that are true nonzeros of ``dense``."""
         return _fill_ratio(dense, self.raw)
 
+    # -- value codecs ------------------------------------------------------
+    def quantize(self, codec: str) -> "SparseTensor":
+        """Re-encode the values under ``codec`` — same structure object.
+
+        Quantized variants are memoized per codec on this tensor (eager
+        values only), so a serving loop that adopts a tuned codec pays the
+        encode once per layer. ``quantize("none")`` dequantizes.
+        """
+        from repro.sparse.codecs import encode_format_values, get_codec
+
+        name = get_codec(codec).name
+        if name == self.codec:
+            return self
+        if self.codec != "none":  # re-encode via the decoded values
+            base = self.dequantize()
+            return base if name == "none" else base.quantize(name)
+        if name == "none":
+            return self
+        if self._quantized is not None and name in self._quantized:
+            return self._quantized[name]
+        payload, scales = encode_format_values(
+            self.format, self.block, self.data[0], name)
+        q = SparseTensor(self.structure, (payload, scales), codec=name)
+        if not _is_traced(self.data):
+            if self._quantized is None:
+                self._quantized = {}
+            self._quantized[name] = q
+        return q
+
+    def dequantize(self, dtype=None) -> "SparseTensor":
+        """Decode back to a raw-value tensor (codec ``"none"``)."""
+        if self.codec == "none":
+            return self if dtype is None else self.astype(dtype)
+        from repro.sparse.codecs import decode_format_values
+
+        import jax.numpy as jnp
+
+        values = decode_format_values(
+            self.format, self.block, self.data[0], self.data[1],
+            dtype=dtype or jnp.float32)
+        return SparseTensor(self.structure, (values,))
+
     # -- transforms --------------------------------------------------------
     def with_values(self, *data) -> "SparseTensor":
-        """Same structure, new value leaves — never re-plans."""
-        return SparseTensor(self.structure, data)
+        """Same structure (and codec) new value leaves — never re-plans."""
+        return SparseTensor(self.structure, data, codec=self.codec)
 
     def astype(self, dtype) -> "SparseTensor":
+        """Cast the value dtype. Under a codec this **re-quantizes**:
+        decode -> cast -> encode, keeping the same structure object so
+        every structure-keyed cache (plans, tasks, partitions) still
+        hits."""
+        if self.codec != "none":
+            return self.dequantize(dtype).quantize(self.codec)
         return self.with_values(*(x.astype(dtype) for x in self.data))
 
     @property
     def T(self) -> "SparseTensor":
+        if self.codec != "none":
+            # transpose re-packs groups -> decode, transpose, re-encode
+            return self.dequantize().T.quantize(self.codec)
         desc = format_of(self.raw)
         if desc.transpose is None:
             raise TypeError(f"format {desc.name!r} has no transpose")
         return SparseTensor.wrap(desc.transpose(self.raw))
 
     def to(self, format: str, **kw) -> "SparseTensor":
-        """Convert through the registered conversion graph."""
+        """Convert through the registered conversion graph.
+
+        Cross-format hops dequantize and re-quantize (the destination
+        groups differ); pass ``codec=`` to override the destination codec.
+        """
         from repro.sparse.convert import convert
 
         return convert(self, format, **kw)
@@ -128,9 +234,12 @@ class SparseTensor:
         Returns a ``repro.parallel.sparse.ShardedSparseTensor``: per-device
         shards balanced by nonzero/block count (the paper's §III-C split at
         mesh scale), whose ``@``/``spmm`` runs the local kernel per device
-        and sums partial outputs. The partition is memoized per structure
-        (``repro.ops.make_partition``) and the sharded wrapper per
-        (mesh, axis) on this tensor, so serving shards each layer once::
+        and sums partial outputs. Quantized tensors ship their shards in
+        compressed form — each shard's payload slice travels with the f32
+        scales of exactly its chunks/blocks. The partition is memoized per
+        structure (``repro.ops.make_partition``) and the sharded wrapper
+        per (mesh, axis) on this tensor, so serving shards each layer
+        once::
 
             sst = st.shard(mesh, "data")
             y = sst @ b                  # == st @ b, on mesh.shape["data"]
@@ -141,7 +250,7 @@ class SparseTensor:
         from repro.parallel.sparse import shard_tensor
 
         sst = shard_tensor(self, mesh, axis)
-        if not any(isinstance(x, jax.core.Tracer) for x in self.data):
+        if not _is_traced(self.data):
             if self._sharded is None:
                 self._sharded = {}
             self._sharded[key] = sst
@@ -161,13 +270,14 @@ class SparseTensor:
         return spmm(self, b, **kw)
 
     def __repr__(self):
+        codec = "" if self.codec == "none" else f", codec={self.codec}"
         return (f"SparseTensor({self.format}, shape={self.shape}, "
                 f"block={self.block}, dtype={self.dtype}, "
-                f"density={self.density:.4f})")
+                f"density={self.density:.4f}{codec})")
 
 
 jax.tree_util.register_pytree_node(
     SparseTensor,
-    lambda st: (st.data, st.structure),
-    lambda structure, data: SparseTensor(structure, data),
+    lambda st: (st.data, (st.structure, st.codec)),
+    lambda aux, data: SparseTensor(aux[0], data, codec=aux[1]),
 )

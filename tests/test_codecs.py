@@ -1,0 +1,440 @@
+"""Value codecs end-to-end: per-block-scaled int8 / emulated fp8 sparse
+values with fused in-kernel dequant.
+
+Acceptance surface: quantized spmm (BCSR + WCSR, pipeline depths 1-3) and
+sddmm match the f32 reference within the documented tolerance; the fused
+kernels are (near-)bit-consistent with the materialized quantize-dequantize
+reference; autotune adopts a codec only when the accuracy guard passes;
+casts re-quantize but still hit the structure-keyed caches; bcsr_matmul's
+backward routes through the codec-aware dequant path; the unified
+``cache_stats`` aggregator and the bytes-moved model report codec traffic.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.ops as ops
+from repro.sparse import (SparseTensor, convert, registered_value_codecs,
+                          sparsify)
+from repro.sparse.codecs import (decode_format_values, encode_format_values,
+                                 get_codec, modeled_value_bytes)
+
+DEPTHS = (1, 2, 3)
+# documented accuracy bounds vs the f32 reference (docs/performance.md):
+# error measured as max|got - ref| / max|ref| on normal-distributed data
+TOL = {"int8": 0.02, "fp8_e4m3": 0.06}
+CODECS = tuple(c for c in ("int8", "fp8_e4m3")
+               if c in registered_value_codecs())
+
+
+def _mats(rng, m=96, k=160, n=64, density=0.25):
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    sa = SparseTensor.from_dense(d, "bcsr", block=(32, 32))
+    sw = SparseTensor.from_dense(d, "wcsr", block=(32, 8))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    return d, sa, sw, b
+
+
+def _rel(got, ref):
+    return float(np.max(np.abs(got - ref)) / (np.max(np.abs(ref)) + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: quantized spmm matches the f32 reference, all depths/formats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("fmt", ["bcsr", "wcsr"])
+def test_spmm_codec_matches_f32_reference_across_depths(rng, codec, fmt):
+    d, sa, sw, b = _mats(rng)
+    st = {"bcsr": sa, "wcsr": sw}[fmt]
+    ref = np.asarray(ops.spmm(st, b, impl="ref"))
+    q = st.quantize(codec)
+    assert q.structure is st.structure  # codec never forks the structure
+    fakequant = np.asarray(ops.spmm(q, b, impl="ref"))
+    for depth in DEPTHS:
+        got = np.asarray(ops.spmm(q, b, impl="kernel_interpret", bn=32,
+                                  pipeline_depth=depth))
+        assert _rel(got, ref) <= TOL[codec], (fmt, codec, depth)
+        # the fused in-kernel dequant must agree with the materialized
+        # quantize-dequantize reference to float roundoff
+        np.testing.assert_allclose(got, fakequant, atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_spmm_codec_under_jit(rng, codec):
+    """Quantized SparseTensor traces through jit: payload + scales are the
+    leaves, structure + codec are static aux data."""
+    _, sa, sw, b = _mats(rng)
+    for st in (sa, sw):
+        q = st.quantize(codec)
+        leaves, treedef = jax.tree_util.tree_flatten(q)
+        assert len(leaves) == 2  # payload + scales
+        q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert q2.codec == codec and q2.structure is q.structure
+        f = jax.jit(lambda t, x: ops.spmm(t, x, impl="kernel_interpret",
+                                          bn=32))
+        np.testing.assert_allclose(
+            np.asarray(f(q, b)),
+            np.asarray(q.matmul(b, impl="kernel_interpret", bn=32)),
+            atol=1e-5)
+
+
+def test_spmm_value_codec_applies_to_raw_operands(rng):
+    """An explicit codec on a raw BCSR/WCSR container must quantize (via a
+    one-shot wrap), never silently no-op."""
+    _, sa, sw, b = _mats(rng)
+    for st in (sa, sw):
+        want = np.asarray(ops.spmm(st.quantize("int8"), b,
+                                   impl="kernel_interpret", bn=32))
+        got = np.asarray(ops.spmm(st.raw, b, impl="kernel_interpret", bn=32,
+                                  value_codec="int8"))
+        np.testing.assert_array_equal(got, want)
+        raw = np.asarray(ops.spmm(st.raw, b, impl="kernel_interpret", bn=32))
+        assert not np.array_equal(got, raw)  # the knob demonstrably applied
+
+
+def test_spmm_value_codec_kwarg_quantizes_on_the_fly(rng):
+    """spmm(st, b, value_codec="int8") quantizes an unquantized operand
+    (memoized on the tensor) — same result as quantizing up front."""
+    _, sa, _, b = _mats(rng)
+    want = np.asarray(ops.spmm(sa.quantize("int8"), b,
+                               impl="kernel_interpret", bn=32))
+    got = np.asarray(ops.spmm(sa, b, impl="kernel_interpret", bn=32,
+                              value_codec="int8"))
+    np.testing.assert_array_equal(got, want)
+    assert sa._quantized is not None and "int8" in sa._quantized
+    # an operand's own codec wins over a conflicting config
+    got2 = np.asarray(ops.spmm(sa.quantize("int8"), b,
+                               impl="kernel_interpret", bn=32,
+                               value_codec="none"))
+    np.testing.assert_array_equal(got2, want)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_sddmm_codec_matches_f32_reference(rng, codec):
+    from repro.sparse import apply_block_mask, bcsr_from_dense, \
+        random_block_mask
+
+    d = apply_block_mask(
+        rng.normal(size=(64, 96)).astype(np.float32),
+        random_block_mask((64, 96), (32, 32), 0.5, seed=2), (32, 32))
+    a = bcsr_from_dense(d, (32, 32))
+    dc = jnp.asarray(rng.normal(size=(64, 80)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(96, 80)).astype(np.float32))
+    ref = np.asarray(ops.sddmm(dc, b, a, impl="ref"))
+    fakequant = np.asarray(ops.sddmm(dc, b, a, impl="ref",
+                                     value_codec=codec))
+    for depth in (0,) + DEPTHS:
+        got = np.asarray(ops.sddmm(dc, b, a, impl="kernel_interpret", bn=16,
+                                   pipeline_depth=depth, value_codec=codec))
+        assert _rel(got, ref) <= TOL[codec], (codec, depth)
+        np.testing.assert_allclose(got, fakequant, atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_block_attn_codec_matches_fakequant_reference(rng, codec):
+    """Quantized K/V gather: the kernel must agree with the ref backend
+    running the same quantize-dequantize round trip; softmax amplifies
+    the quantization error vs true f32, so that check is looser."""
+    B, H, KVH, S, D = 2, 4, 2, 256, 32
+    bq = bk = 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, KVH, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, KVH, S, D)).astype(np.float32))
+    nb = S // bq
+    mask = np.zeros((H, nb, nb), bool)
+    for h in range(H):
+        for i in range(nb):
+            mask[h, i, max(0, i - 1 - h % 2): i + 1] = True
+            mask[h, i, 0] = True
+    mask[0, 0, :] = False  # empty q-block (count == 0 < depth)
+    ref = np.asarray(ops.sparse_attention(q, k, v, mask, block_q=bq,
+                                          block_k=bk, impl="ref"))
+    fakequant = np.asarray(ops.sparse_attention(
+        q, k, v, mask, block_q=bq, block_k=bk, impl="ref",
+        value_codec=codec))
+    for depth in (0,) + DEPTHS:
+        got = np.asarray(ops.sparse_attention(
+            q, k, v, mask, block_q=bq, block_k=bk, impl="kernel_interpret",
+            pipeline_depth=depth, value_codec=codec))
+        np.testing.assert_allclose(got, fakequant, atol=1e-4)
+        assert float(np.max(np.abs(got - ref))) <= 0.2, (codec, depth)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: astype / value swaps re-quantize but hit structure-keyed caches
+# ---------------------------------------------------------------------------
+
+
+def test_astype_requantizes_but_hits_structure_caches(rng):
+    _, _, sw, b = _mats(rng)
+    q = sw.quantize("int8")
+    ops.clear_plan_cache()
+    q.matmul(b, impl="kernel_interpret")
+    info = ops.plan_cache_info()
+    assert info.task_decompositions == 1 and info.misses == 1
+
+    # cast: must re-quantize (fresh payload/scales) on the same structure
+    qc = q.astype(jnp.bfloat16)
+    assert qc.codec == "int8"
+    assert qc.structure is q.structure
+    assert qc.data[0] is not q.data[0]
+    qc.matmul(b, impl="kernel_interpret")
+    info = ops.plan_cache_info()
+    # new (dtype-keyed) plan, but the §III-C task split is structure-keyed
+    # and shared — the serving amortization contract survives quantization
+    assert info.task_decompositions == 1
+
+    # value swap keeps codec + structure, never re-plans
+    q2 = q.with_values(q.payload, q.scales * 2.0)
+    assert q2.codec == "int8" and q2.structure is q.structure
+    got = np.asarray(q2.matmul(b, impl="kernel_interpret"))
+    want = 2.0 * np.asarray(q.matmul(b, impl="kernel_interpret"))
+    np.testing.assert_allclose(got, want, atol=1e-3,
+                               rtol=1e-4)
+    assert ops.plan_cache_info().task_decompositions == 1
+
+    # quantized and raw tensors of one structure share the task cache too
+    sw.matmul(b, impl="kernel_interpret")
+    assert ops.plan_cache_info().task_decompositions == 1
+
+
+def test_plan_carries_and_keys_codec(rng):
+    _, _, sw, b = _mats(rng)
+    ops.clear_plan_cache()
+    p0 = ops.make_plan(sw, b.shape[1], ops.OpConfig(bn=32))
+    pq = ops.make_plan(sw.quantize("int8"), b.shape[1], ops.OpConfig(bn=32))
+    assert p0.value_codec == "none" and pq.value_codec == "int8"
+    assert p0 is not pq  # distinct cache entries per codec
+    assert pq.tasks is p0.tasks  # ...sharing the structure-keyed task split
+    assert ops.make_plan(sw.quantize("int8"), b.shape[1],
+                         ops.OpConfig(bn=32)) is pq
+
+
+# ---------------------------------------------------------------------------
+# Autotune: codec sweep + accuracy guard
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_codec_guard_rejects_and_adopts(rng):
+    _, _, sw, b = _mats(rng)
+    ops.clear_tuning_cache()
+    # impossible tolerance: every codec is rejected before timing, the
+    # winner stays raw
+    best = ops.autotune_spmm(sw, b, impl="kernel_interpret", bns=(32,),
+                             chunks_per_task=(4,), depths=(1,),
+                             codecs=("none", "int8"), codec_tol=1e-9,
+                             warmup=0, iters=1)
+    assert best["value_codec"] == "none"
+    assert "int8" in best["rejected_codecs"]
+    assert best["rejected_codecs"]["int8"] > 1e-9
+    y = np.asarray(ops.spmm(sw, b, impl="kernel_interpret",
+                            value_codec="auto"))
+    ref = np.asarray(ops.spmm(sw, b, impl="ref"))
+    np.testing.assert_allclose(y, ref, atol=2e-4 * max(1, np.abs(ref).max()))
+
+    # permissive tolerance + an int8-only sweep: the codec passes the guard
+    # and wins; "auto" callers adopt it, everyone else stays raw
+    ops.clear_tuning_cache()
+    best = ops.autotune_spmm(sw, b, impl="kernel_interpret", bns=(32,),
+                             chunks_per_task=(4,), depths=(1,),
+                             codecs=("int8",), codec_tol=0.05,
+                             warmup=0, iters=1)
+    assert best["value_codec"] == "int8"
+    assert best["rejected_codecs"] == {}
+    y_auto = np.asarray(ops.spmm(sw, b, impl="kernel_interpret",
+                                 value_codec="auto"))
+    y_q = np.asarray(ops.spmm(sw.quantize("int8"), b,
+                              impl="kernel_interpret"))
+    np.testing.assert_array_equal(y_auto, y_q)
+    # without the opt-in the raw path is untouched
+    y_raw = np.asarray(ops.spmm(sw, b, impl="kernel_interpret"))
+    np.testing.assert_allclose(y_raw, ref,
+                               atol=2e-4 * max(1, np.abs(ref).max()))
+    ops.clear_tuning_cache()
+
+
+def test_autotune_all_codecs_rejected_raises(rng):
+    """codecs= without "none" and an impossible tolerance: every candidate
+    is rejected, so there is no winner — a clear error, not a crash."""
+    _, _, sw, b = _mats(rng)
+    ops.clear_tuning_cache()
+    with pytest.raises(ValueError, match="rejected by the accuracy guard"):
+        ops.autotune_spmm(sw, b, impl="kernel_interpret", bns=(32,),
+                          chunks_per_task=(4,), depths=(1,),
+                          codecs=("int8",), codec_tol=1e-9,
+                          warmup=0, iters=1)
+    assert ops.tuning_cache_info().autotuned == 0  # nothing was cached
+    ops.clear_tuning_cache()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: bcsr_matmul codec-aware backward (grad equivalence)
+# ---------------------------------------------------------------------------
+
+
+def test_bcsr_matmul_codec_grad_matches_dequantized_forward(rng):
+    from repro.sparse import apply_block_mask, bcsr_from_dense, \
+        random_block_mask
+    from repro.ops.matmul import _quantized_values, structure_of
+
+    d = apply_block_mask(
+        rng.normal(size=(64, 96)).astype(np.float32),
+        random_block_mask((64, 96), (32, 32), 0.5, seed=3), (32, 32))
+    a = bcsr_from_dense(d, (32, 32))
+    s = structure_of(a)
+    values = a.blocks
+    b = jnp.asarray(rng.normal(size=(96, 48)).astype(np.float32))
+
+    with ops.use_config(impl="ref"):
+        # forward parity: codec path == explicit quantize-dequantize path
+        yq = ops.bcsr_matmul(values, b, s, None, "int8")
+        vq = _quantized_values(values, "int8")
+        y2 = ops.bcsr_matmul(vq, b, s)
+        np.testing.assert_allclose(np.asarray(yq), np.asarray(y2),
+                                   atol=1e-4, rtol=1e-5)
+
+        # grad equivalence: dB must come from Q(values)^T (the codec-aware
+        # dequant path), dvalues is the straight-through estimate
+        gv_q, gb_q = jax.grad(
+            lambda v_, b_: ops.bcsr_matmul(v_, b_, s, None, "int8").sum(),
+            argnums=(0, 1))(values, b)
+        gv_2, gb_2 = jax.grad(
+            lambda v_, b_: ops.bcsr_matmul(v_, b_, s).sum(),
+            argnums=(0, 1))(vq, b)
+    np.testing.assert_allclose(np.asarray(gb_q), np.asarray(gb_2),
+                               atol=1e-4, rtol=1e-5)
+    # STE: parameter grad is codec-independent (sddmm of dC, B)
+    np.testing.assert_allclose(np.asarray(gv_q), np.asarray(gv_2),
+                               atol=1e-4, rtol=1e-5)
+    # and the raw-value path's dB differs whenever quantization moved A
+    gb_raw = jax.grad(
+        lambda b_: ops.bcsr_matmul(values, b, s, "ref").sum())(b)
+    assert not np.allclose(np.asarray(gb_q), np.asarray(gb_raw),
+                           atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Representation layer: encode/decode, conversion, sparsify, repr
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_encode_decode_roundtrip_tolerance(rng, codec):
+    d, sa, sw, _ = _mats(rng)
+    for st in (sa, sw):
+        payload, scales = encode_format_values(
+            st.format, st.block, st.data[0], codec)
+        assert payload.dtype == get_codec(codec).storage_dtype
+        assert scales.dtype == jnp.float32
+        back = decode_format_values(st.format, st.block, payload, scales)
+        ref = np.asarray(st.data[0])
+        err = np.max(np.abs(np.asarray(back) - ref))
+        assert err <= TOL[codec] * np.max(np.abs(ref))
+        # exact zeros stay exact (zero-scale groups)
+        assert np.all(np.asarray(back)[ref == 0] == 0)
+
+
+def test_quantize_dequantize_todense(rng):
+    d, sa, _, _ = _mats(rng)
+    q = sa.quantize("int8")
+    assert q.codec == "int8" and q.dtype == jnp.int8
+    assert q.scales is not None and sa.scales is None
+    assert "codec=int8" in repr(q)
+    # memoized per codec; quantize("none") decodes
+    assert sa.quantize("int8") is q
+    dq = q.quantize("none")
+    assert dq.codec == "none" and len(dq.data) == 1
+    np.testing.assert_allclose(np.asarray(q.todense()), d, atol=0.02)
+    np.testing.assert_allclose(np.asarray(q.T.todense()), d.T, atol=0.02)
+
+
+def test_convert_and_sparsify_codec_plumbing(rng):
+    d, sa, _, _ = _mats(rng)
+    # quantize on conversion, from dense and raw inputs
+    q = convert(d, "bcsr", block=(32, 32), codec="int8")
+    assert isinstance(q, SparseTensor) and q.codec == "int8"
+    # same-format convert with only a codec change re-encodes in place
+    q2 = convert(sa, "bcsr", codec="int8")
+    assert q2.codec == "int8" and q2.structure is sa.structure
+    assert convert(q2, "bcsr") is q2  # identity keeps the codec
+    # cross-format hop: dequantize for the hop, re-quantize on the way out
+    w = q2.to("wcsr", block=(32, 8))
+    assert w.format == "wcsr" and w.codec == "int8"
+    np.testing.assert_allclose(np.asarray(w.todense()), d, atol=0.05)
+    # codec="none" strips it
+    assert convert(q2, "bcsr", codec="none").codec == "none"
+    sp = sparsify(np.asarray(d), format="wcsr", block=(32, 8),
+                  sparsity=0.9, method="random", codec="int8")
+    assert sp.codec == "int8"
+    with pytest.raises(ValueError, match="unknown value codec"):
+        sa.quantize("int4")
+
+
+def test_modeled_value_bytes():
+    m = modeled_value_bytes(1024, 256, "int8")
+    assert m["baseline_bytes"] == 4096
+    assert m["compressed_bytes"] == 1024 + 4 * 4  # payload + 4 group scales
+    assert 3.9 < m["reduction"] < 4.0
+    assert modeled_value_bytes(1024, 256, "none")["reduction"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Counters: cache_stats aggregator, codec selections, bytes report
+# ---------------------------------------------------------------------------
+
+
+def test_cache_stats_unifies_counters(rng):
+    _, _, sw, b = _mats(rng)
+    ops.clear_plan_cache()
+    ops.clear_tuning_cache()
+    sw.quantize("int8").matmul(b, impl="kernel_interpret")
+    sw.matmul(b, impl="kernel_interpret")
+    cs = ops.cache_stats()
+    assert set(cs) == {"plan", "tasks", "partition", "tuning", "selections"}
+    # derived from the same counters as the legacy accessors — never a
+    # second set that can drift
+    p = ops.plan_cache_info()
+    t = ops.tuning_cache_info()
+    assert cs["plan"] == {"hits": p.hits, "misses": p.misses, "size": p.size}
+    assert cs["tasks"]["decompositions"] == p.task_decompositions == 1
+    assert cs["partition"]["misses"] == p.partition_misses
+    assert cs["tuning"]["autotuned"] == t.autotuned
+    assert cs["selections"]["pipeline_depth"] == t.pipeline_depths
+    assert cs["selections"]["value_codec"] == t.value_codecs
+    assert cs["selections"]["value_codec"].get("int8", 0) >= 1
+    assert cs["selections"]["value_codec"].get("none", 0) >= 1
+    # the bytes-moved model reports the quantized plan
+    rep = ops.codec_bytes_report()
+    mine = [r for r in rep if r["codec"] == "int8"
+            and r["shape"] == sw.shape and r["fmt"] == "wcsr"]
+    assert mine and mine[0]["reduction"] > 2.0
+
+
+def test_serve_stats_surface_codec_keys():
+    from repro.serve.engine import ServeEngine
+
+    class _Cache:
+        kv = ssm = prev1 = prev2 = None
+
+    class _Model:
+        cfg = None
+
+        def init_decode_cache(self, slots, max_len):
+            return _Cache()
+
+        def decode_step(self, p, c, tok, pos):
+            return jnp.zeros((tok.shape[0], 4)), c
+
+    eng = ServeEngine(_Model(), params={}, slots=2, max_len=8)
+    s = eng.stats()
+    assert {"value_codecs", "codec_bytes", "cache_stats",
+            "pipeline_depths"} <= set(s)
+    assert s["value_codecs"] == s["tuning_cache"].value_codecs
+    assert s["cache_stats"]["selections"]["value_codec"] == s["value_codecs"]
+    assert isinstance(s["codec_bytes"], list)
