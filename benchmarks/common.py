@@ -120,6 +120,34 @@ def bench_json_payload(rows) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Synthetic many-user arrival trace (serve benchmark / CI smoke)
+# ---------------------------------------------------------------------------
+
+
+def arrival_trace(n_requests: int, *, mean_interarrival_ticks: float = 2.0,
+                  prompt_lens=(8, 64), max_new: int = 8, seed: int = 0):
+    """Deterministic synthetic serving workload.
+
+    Poisson-ish arrivals (geometric inter-arrival gaps in engine ticks) with
+    uniformly drawn prompt lengths — the many-user trace behind the ``serve``
+    benchmark row. Returns a list of dicts sorted by ``arrive_tick``:
+    ``{"rid", "arrive_tick", "prompt_len", "max_new"}``.
+    """
+    rng = np.random.default_rng(seed)
+    lo, hi = prompt_lens
+    tick, out = 0, []
+    for rid in range(n_requests):
+        out.append({
+            "rid": rid,
+            "arrive_tick": tick,
+            "prompt_len": int(rng.integers(lo, hi + 1)),
+            "max_new": max_new,
+        })
+        tick += int(rng.geometric(1.0 / mean_interarrival_ticks))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Synthetic SuiteSparse-style matrices (banded / power-law / uniform)
 # ---------------------------------------------------------------------------
 

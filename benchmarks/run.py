@@ -31,8 +31,8 @@ def main() -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     only = args[0] if args else None
     from benchmarks import (dist_scaling, fig7_tilewidth, fig8_prefill,
-                            table1_suitesparse, table2_ablation,
-                            table3_gateproj)
+                            serve_throughput, table1_suitesparse,
+                            table2_ablation, table3_gateproj)
     from benchmarks.common import bench_json_payload
 
     modules = {
@@ -41,6 +41,8 @@ def main() -> None:
         "table3": table3_gateproj,
         "fig7": fig7_tilewidth,
         "fig8": fig8_prefill,
+        # serving runtime: chunked prefill vs legacy + arrival-trace TTFT
+        "serve": serve_throughput,
         # multi-device scaling smoke (forced host mesh in a child process)
         "dist": dist_scaling,
     }

@@ -1,0 +1,129 @@
+"""Serving-runtime throughput under a synthetic many-user arrival trace.
+
+Two measurements on a tiny CPU-runnable model:
+
+1. **Prefill throughput** — one long prompt through the chunked block-sparse
+   prefill (the §IV-D path: one ``sparse_attention`` dispatch per layer per
+   chunk) vs the legacy token-at-a-time decode loop. The acceptance
+   invariant is ``chunked prefill tok/s > legacy prefill tok/s`` — CI
+   asserts it from the JSON extras.
+2. **Continuous-batching trace** — the ``benchmarks.common.arrival_trace``
+   workload driven tick-by-tick through the paged engine: generated-token
+   throughput, p50/p95 TTFT, and the amortization guard
+   (``plan_cache.task_decompositions`` flat across ticks once the first
+   request has traced).
+
+Both engines warm up on a throwaway request first so compile time doesn't
+pollute TTFT.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import JSON_EXTRAS, SMOKE, arrival_trace
+from repro.configs import ARCHS, reduced_config
+from repro.models.registry import build_model
+from repro.serve.engine import Request, ServeEngine
+
+PROMPT = 64 if SMOKE else 256
+CHUNK = 32 if SMOKE else 64
+PAGE = 16 if SMOKE else 32
+MAX_LEN = 2 * PROMPT
+N_REQS = 4 if SMOKE else 10
+TRACE_LENS = (8, 24) if SMOKE else (16, 64)
+
+
+def _engine(m, params, *, legacy, slots=2):
+    return ServeEngine(m, params, slots=slots, max_len=MAX_LEN,
+                       page_size=PAGE, chunk=CHUNK, prefill_block_q=16,
+                       legacy_prefill=legacy)
+
+
+def _warmup(eng, rng, cfg):
+    # longer than one chunk so both prefill variants (mid-prompt and final
+    # with-logits chunk) compile before anything is timed
+    eng.run([Request(rid=-1,
+                     prompt=rng.integers(0, cfg.vocab_size, (CHUNK + 5,)),
+                     max_new_tokens=2)])
+    eng.telemetry.records.clear()  # keep compile out of the percentiles
+
+
+def _prefill_tok_s(eng, rng, cfg) -> float:
+    """Tokens/s of prompt ingestion = prompt_len / time-to-first-token."""
+    req = Request(rid=1000, prompt=rng.integers(0, cfg.vocab_size, (PROMPT,)),
+                  max_new_tokens=2)
+    eng.run([req])
+    ttft = eng.telemetry.records[1000].ttft_seconds
+    return PROMPT / ttft
+
+
+def _run_trace(eng, rng, cfg):
+    trace = [dict(t) for t in arrival_trace(
+        N_REQS, prompt_lens=TRACE_LENS, max_new=4, seed=1)]
+    reqs = {t["rid"]: Request(
+        rid=t["rid"], prompt=rng.integers(0, cfg.vocab_size,
+                                          (t["prompt_len"],)),
+        max_new_tokens=t["max_new"]) for t in trace}
+    from repro.ops import plan_cache_info
+
+    base_tick = eng.ticks
+    i = 0
+    decomp_after_first = None
+    t0 = time.perf_counter()
+    while i < len(trace) or len(eng.queue) or any(
+            a is not None for a in eng.active):
+        while i < len(trace) and trace[i]["arrive_tick"] <= eng.ticks - base_tick:
+            eng.submit(reqs[trace[i]["rid"]])
+            i += 1
+        eng.tick()
+        if decomp_after_first is None:
+            decomp_after_first = plan_cache_info().task_decompositions
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs.values())
+    s = eng.stats()
+    gen = sum(len(r.out_tokens) for r in reqs.values())
+    return {
+        "wall_s": wall,
+        "gen_tok_s": gen / wall,
+        "ttft_p50_s": s["ttft"]["p50_s"],
+        "ttft_p95_s": s["ttft"]["p95_s"],
+        "ttft_p50_ticks": s["ttft"]["p50_ticks"],
+        "ttft_p95_ticks": s["ttft"]["p95_ticks"],
+        "task_decomp_first_tick": decomp_after_first,
+        "task_decomp_last_tick": plan_cache_info().task_decompositions,
+    }
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+    cfg = reduced_config(ARCHS["granite-3-2b"], num_layers=2, vocab_size=512)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+
+    tok_s = {}
+    for mode, legacy in (("chunked", False), ("legacy", True)):
+        eng = _engine(m, params, legacy=legacy)
+        _warmup(eng, rng, cfg)
+        tok_s[mode] = _prefill_tok_s(eng, rng, cfg)
+        csv_rows.append((f"serve/{mode}_prefill", 1e6 * PROMPT / tok_s[mode],
+                         f"prefill_tok_s={tok_s[mode]:.0f}"))
+    speedup = tok_s["chunked"] / tok_s["legacy"]
+    JSON_EXTRAS["serve/chunked_prefill"] = {
+        "prefill_tok_s": tok_s["chunked"],
+        "legacy_prefill_tok_s": tok_s["legacy"],
+        "prefill_speedup": speedup,
+    }
+
+    eng = _engine(m, params, legacy=False)
+    _warmup(eng, rng, cfg)
+    t = _run_trace(eng, rng, cfg)
+    csv_rows.append((
+        "serve/trace_continuous_batching", 1e6 * t["wall_s"],
+        f"gen_tok_s={t['gen_tok_s']:.0f}_ttft_p50={t['ttft_p50_ticks']:.0f}t"
+        f"_p95={t['ttft_p95_ticks']:.0f}t"))
+    JSON_EXTRAS["serve/trace_continuous_batching"] = t
+    return csv_rows

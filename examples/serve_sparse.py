@@ -27,24 +27,34 @@ print(f"model: {cfg.name} reduced, {cfg.num_layers}L d={cfg.d_model} "
       f"ffn_sparsity={cfg.ffn_sparsity}")
 
 # op_config pins the sparse-op backend engine-wide (repro.ops semantics);
-# REPRO_SPARSE_IMPL=... would do the same without code changes
-engine = ServeEngine(model, params, slots=4, max_len=128,
+# REPRO_SPARSE_IMPL=... would do the same without code changes. Prompts are
+# bulk-prefilled chunk-by-chunk through the block-sparse attention path
+# (docs/serving.md) into a paged KV cache — one long prompt costs
+# ceil(P/chunk) engine ticks, not P.
+engine = ServeEngine(model, params, slots=4, max_len=128, page_size=16,
+                     chunk=32, prefill_block_q=16,
                      op_config=OpConfig(impl="ref"))
 requests = [
     Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (p,)),
             max_new_tokens=8)
-    for i, p in enumerate([5, 9, 3, 7, 6, 4])
+    for i, p in enumerate([5, 9, 50, 7, 6, 4])  # rid 2: a 2-chunk prompt
 ]
 t0 = time.perf_counter()
 done = engine.run(requests)
 dt = time.perf_counter() - t0
 total_new = sum(len(r.out_tokens) for r in requests)
 print(f"served {len(done)}/{len(requests)} requests, {total_new} tokens "
-      f"in {dt:.2f}s ({total_new/dt:.1f} tok/s on CPU)")
+      f"in {dt:.2f}s ({total_new/dt:.1f} tok/s on CPU, "
+      f"{engine.ticks} engine ticks)")
 for r in requests[:3]:
     print(f"  req{r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
 assert all(r.done for r in requests)
 stats = engine.stats()
-print(f"engine stats: free_slots={stats['free_slots']} "
-      f"plan_cache={stats['plan_cache']}")
+print(f"engine stats: mode={stats['mode']} queue_depth={stats['queue_depth']} "
+      f"page_utilization={stats['page_utilization']:.2f} "
+      f"prefill_tokens={stats['prefill_tokens']} "
+      f"decode_tokens={stats['decode_tokens']}")
+print(f"  ttft: p50={stats['ttft']['p50_ticks']:.0f} ticks "
+      f"p95={stats['ttft']['p95_ticks']:.0f} ticks")
+print(f"  plan_cache={stats['plan_cache']}")
 print("serve_sparse OK")

@@ -18,6 +18,13 @@ prefetched; K/V are *indirect* operands (block index chased through
 
 Online softmax runs in VMEM scratch across the active-block grid dimension.
 Grid = (B*H, num_q_blocks, max_active_kblocks).
+
+Prefill-chunk entry (serving runtime): q and K/V may have different sequence
+lengths (``s_q`` = one prompt chunk, ``s_kv`` = the whole gathered prefix),
+and ``q_offset`` — the chunk's absolute start position, a *traced* scalar
+prefetched alongside the CSR arrays — shifts the causal mask so chunk
+``i`` of a long prompt reuses the compiled kernel of chunk ``i-1`` (only
+array contents change per chunk, never shapes).
 """
 
 from __future__ import annotations
@@ -36,8 +43,12 @@ from repro.kernels.pipeline import (dequant_tile, emit_gather_pipeline,
 NEG_INF = -1e30
 
 
-def _scores(q, k_blk, kidx, *, bq, bk, qb, causal, scale):
-    """Scaled (and causally masked) QK^T scores for one active k-block."""
+def _scores(q, k_blk, kidx, *, bq, bk, qb, q_off, causal, scale):
+    """Scaled (and causally masked) QK^T scores for one active k-block.
+
+    ``q_off`` is the absolute position of q row 0 (a traced scalar for the
+    prefill-chunk entry; 0 for the classic square case).
+    """
     s = (
         jax.lax.dot_general(
             q,
@@ -48,7 +59,7 @@ def _scores(q, k_blk, kidx, *, bq, bk, qb, causal, scale):
         * scale
     )  # [bq, bk]
     if causal:
-        qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        qpos = q_off + qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = kidx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         s = jnp.where(kpos <= qpos, s, NEG_INF)
     return s
@@ -88,6 +99,7 @@ def _softmax_step(s, m_ref, l_ref, acc_ref, v, v_dtype):
 def _kernel(
     ptr_ref,  # [H*nqb + 1] i32 CSR pointers into kcols
     kcols_ref,  # [total_active] i32 active k-block indices
+    qoff_ref,  # [1] i32 absolute position of q row 0 (prefill-chunk entry)
     q_ref,  # [1, bq, d]
     k_ref,  # [1, bk, d] (codec payload when quantized)
     v_ref,  # [1, bk, d] (codec payload when quantized)
@@ -128,7 +140,7 @@ def _kernel(
         v_blk = dequant_tile(v_ref[0], codec,
                              None if vs_ref is None else vs_ref[0, 0])
         s = _scores(q_ref[0], k_blk, kidx, bq=bq, bk=bk, qb=qb,
-                    causal=causal, scale=scale)
+                    q_off=qoff_ref[0], causal=causal, scale=scale)
         _softmax_step(s, m_ref, l_ref, acc_ref, v_blk,
                       v_ref.dtype if codec == "none" else jnp.float32)
 
@@ -140,6 +152,7 @@ def _kernel(
 def _kernel_pipelined(
     ptr_ref,  # [H*nqb + 1] i32 CSR pointers into kcols
     kcols_ref,  # [total_active] i32 active k-block indices
+    qoff_ref,  # [1] i32 absolute position of q row 0 (prefill-chunk entry)
     q_ref,  # [1, bq, d]
     k_hbm_ref,  # [B*KVH, S, D] (ANY/HBM — gathered; codec payload)
     v_hbm_ref,  # [B*KVH, S, D] (ANY/HBM; codec payload)
@@ -206,7 +219,8 @@ def _kernel_pipelined(
         v_blk = dequant_tile(v_slots_ref[slot], codec,
                              None if vs_ref is None else vs_ref[0, 0])
         s = _scores(q_ref[0], k_blk, kidx_of(chunk), bq=bq,
-                    bk=bk, qb=qb, causal=causal, scale=scale)
+                    bk=bk, qb=qb, q_off=qoff_ref[0], causal=causal,
+                    scale=scale)
         _softmax_step(s, m_ref, l_ref, acc_ref, v_blk,
                       v_slots_ref.dtype if codec == "none" else jnp.float32)
 
@@ -236,11 +250,11 @@ def _kernel_pipelined(
 def block_sparse_attention_kernel(
     ptr: jax.Array,  # [H*nqb + 1] i32
     kcols: jax.Array,  # [total_active] i32
-    q: jax.Array,  # [B*H, S, D]
-    k: jax.Array,  # [B*KVH, S, D] (codec payload when quantized)
-    v: jax.Array,  # [B*KVH, S, D] (codec payload when quantized)
-    kscales: jax.Array = None,  # [B*KVH, S // block_k] f32 per-block scales
-    vscales: jax.Array = None,  # [B*KVH, S // block_k] f32 per-block scales
+    q: jax.Array,  # [B*H, Sq, D]
+    k: jax.Array,  # [B*KVH, Skv, D] (codec payload when quantized)
+    v: jax.Array,  # [B*KVH, Skv, D] (codec payload when quantized)
+    kscales: jax.Array = None,  # [B*KVH, Skv // block_k] f32 per-block scales
+    vscales: jax.Array = None,  # [B*KVH, Skv // block_k] f32 per-block scales
     *,
     heads: int,
     kv_heads: int,
@@ -252,6 +266,7 @@ def block_sparse_attention_kernel(
     interpret: bool = True,
     pipeline_depth: int = 0,
     codec: str = "none",
+    q_offset: jax.Array | int = 0,
 ) -> jax.Array:
     depth = validate_depth(pipeline_depth, allow_zero=True)
     if codec != "none" and (kscales is None or vscales is None):
@@ -262,11 +277,17 @@ def block_sparse_attention_kernel(
     nqb = s // block_q
     group = heads // kv_heads
     grid = (bh, nqb, max_active)
-    q_spec = pl.BlockSpec((1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0))
+    # traced scalar: chunk i and chunk i+1 of a serving prefill hit the same
+    # compiled kernel (shapes identical, only ptr/kcols/qoff contents change)
+    qoff = jnp.full((1,), q_offset, jnp.int32) if isinstance(q_offset, int) \
+        else jnp.asarray(q_offset, jnp.int32).reshape(1)
+    q_spec = pl.BlockSpec((1, block_q, d),
+                          lambda b, qb, j, ptr, kcols, qo: (b, qb, 0))
 
-    def _kv_lookup(b, qb, j, ptr, kcols):
+    def _kv_lookup(b, qb, j, ptr, kcols, qo):
         # kv row for this q head; padding steps clamp to the last active
         # block (and an empty list clamps to its base entry)
+        del qo
         row = (b // heads) * kv_heads + (b % heads) // group
         base = ptr[(b % heads) * nqb + qb]
         cnt = ptr[(b % heads) * nqb + qb + 1] - base
@@ -276,11 +297,10 @@ def block_sparse_attention_kernel(
     # the K/V block scales always stream via BlockSpec — at depth 0 next to
     # their payload blocks, at depth >= 1 as the only streamed K/V operand
     # (the payload itself rides the explicit gather pipeline)
-    scale_index = lambda b, qb, j, ptr, kcols: _kv_lookup(b, qb, j, ptr, kcols)
-    scale_spec = pl.BlockSpec((1, 1), scale_index)
+    scale_spec = pl.BlockSpec((1, 1), _kv_lookup)
     if depth == 0:
-        kv_index = lambda b, qb, j, ptr, kcols: (
-            *_kv_lookup(b, qb, j, ptr, kcols), 0)
+        kv_index = lambda b, qb, j, ptr, kcols, qo: (
+            *_kv_lookup(b, qb, j, ptr, kcols, qo), 0)
         body = functools.partial(
             _kernel,
             bq=block_q,
@@ -327,11 +347,11 @@ def block_sparse_attention_kernel(
     return pl.pallas_call(
         body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=in_specs,
             out_specs=pl.BlockSpec(
-                (1, block_q, d), lambda b, qb, j, ptr, kcols: (b, qb, 0)
+                (1, block_q, d), lambda b, qb, j, ptr, kcols, qo: (b, qb, 0)
             ),
             scratch_shapes=scratch + [
                 pltpu.VMEM((block_q, 128), jnp.float32),
@@ -344,4 +364,4 @@ def block_sparse_attention_kernel(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(ptr, kcols, *operands)
+    )(ptr, kcols, qoff, *operands)

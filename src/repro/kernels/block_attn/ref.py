@@ -3,6 +3,12 @@
 Dense attention with -inf applied outside the allowed (q-block, k-block)
 pairs, plus optional causal masking. The block mask is per *kv-head group*
 (MInference selects patterns per head).
+
+Rectangular (prefill-chunk) support mirrors the kernel: q may cover a chunk
+of ``s_q`` tokens starting at absolute position ``q_offset`` while K/V span
+the whole ``s_kv``-token prefix; the block mask is then [H, s_q//block_q,
+s_kv//block_k] and may be a traced ``jnp`` array (the serving runtime builds
+it on-device per chunk).
 """
 
 from __future__ import annotations
@@ -13,18 +19,19 @@ import numpy as np
 
 
 def block_sparse_attention_ref(
-    q: jax.Array,  # [B, H, S, D]
-    k: jax.Array,  # [B, KVH, S, D]
-    v: jax.Array,  # [B, KVH, S, D]
-    block_mask: np.ndarray,  # [H, nqb, nkb] bool
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, KVH, Skv, D]
+    v: jax.Array,  # [B, KVH, Skv, D]
+    block_mask,  # [H, nqb, nkb] bool (np or jnp)
     *,
     block_q: int,
     block_k: int,
     causal: bool = True,
     scale: float | None = None,
+    q_offset: jax.Array | int = 0,
 ) -> jax.Array:
-    b, h, s, d = q.shape
-    kvh = k.shape[1]
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
     group = h // kvh
     scale = scale if scale is not None else 1.0 / np.sqrt(d)
     kk = jnp.repeat(k, group, axis=1)
@@ -32,12 +39,13 @@ def block_sparse_attention_ref(
     scores = jnp.einsum(
         "bhqd,bhkd->bhqk", q, kk, preferred_element_type=jnp.float32
     ) * scale
-    mask = jnp.asarray(np.asarray(block_mask, bool))
+    mask = jnp.asarray(block_mask).astype(bool)
     mask_el = jnp.repeat(jnp.repeat(mask, block_q, axis=1), block_k, axis=2)
-    mask_el = mask_el[:, :s, :s]
+    mask_el = mask_el[:, :sq, :skv]
     if causal:
-        tri = jnp.tril(jnp.ones((s, s), bool))
-        mask_el = jnp.logical_and(mask_el, tri[None])
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        mask_el = jnp.logical_and(mask_el, (kpos <= qpos)[None])
     scores = jnp.where(mask_el[None], scores, -jnp.inf)
     # rows with no allowed key at all produce zeros, not NaNs
     probs = jax.nn.softmax(scores, axis=-1)

@@ -264,6 +264,122 @@ def cache_update(cache: KVCache, k_new, v_new, cur_pos) -> KVCache:
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (serving runtime: repro.serve.kvcache owns the allocator)
+# ---------------------------------------------------------------------------
+#
+# Physical layout per layer: ``kl``/``vl`` [P+1, page_size, KVH, D] — a pool
+# of fixed-size token pages shared by every sequence, plus one *null page*
+# (physical id P) that absorbs writes from masked batch rows and pads short
+# page-table rows. ``pos_tab`` [P+1, page_size] holds the absolute position
+# of each stored token (-1 = empty) and is shared across layers (every layer
+# stores the same token set). A sequence's logical view is its page-table
+# row ``pages`` [W]: physical page ids in logical order, null-padded — so
+# the gathered [W*page_size] view is *position-linear* (linear index ==
+# absolute position), which is what lets chunked prefill reuse the
+# block-sparse kernel's causal masking unchanged.
+
+
+def paged_gather(kl, vl, pos_tab, pages) -> KVCache:
+    """Linearize page-table rows into a masked KVCache view.
+
+    kl/vl: [P+1, ps, KVH, D]; pages: [B, W] physical ids (null-padded).
+    Returns KVCache with k/v [B, W*ps, KVH, D] and pos [B, W*ps]; entries
+    whose ``pos_tab`` slot is -1 (empty / null page) stay masked out of
+    attention exactly like empty ring-cache slots.
+    """
+    b, w = pages.shape
+    ps, kvh, hd = kl.shape[1], kl.shape[2], kl.shape[3]
+    kg = kl[pages].reshape(b, w * ps, kvh, hd)
+    vg = vl[pages].reshape(b, w * ps, kvh, hd)
+    pos = pos_tab[pages].reshape(b, w * ps)
+    return KVCache(k=kg, v=vg, pos=pos)
+
+
+def paged_update(kl, vl, k_new, v_new, pages, cur_pos):
+    """Scatter one roped (k, v) token per batch row into its page slot.
+
+    Masked rows must point at the null page (their writes land there and
+    the null page's ``pos_tab`` entries stay/become -1, so nothing ever
+    attends to them).
+    """
+    ps = kl.shape[1]
+    page_idx = (cur_pos // ps).astype(jnp.int32)[:, None]
+    phys = jnp.take_along_axis(pages, jnp.clip(page_idx, 0, pages.shape[1] - 1),
+                               axis=1)[:, 0]
+    within = (cur_pos % ps).astype(jnp.int32)
+    kl = kl.at[phys, within].set(k_new[:, 0])
+    vl = vl.at[phys, within].set(v_new[:, 0])
+    return kl, vl
+
+
+def apply_attention_decode_paged(params, x, cfg, kl, vl, pos_tab, pages,
+                                 cur_pos):
+    """Decode one token per batch row against the paged KV pool.
+
+    x: [B, 1, d_model]; returns (out [B, 1, d_model], kl, vl). ``pos_tab``
+    must already carry ``cur_pos`` for valid rows (``decode_step_paged``
+    stamps it once, outside the layer scan).
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, 1, h, hd)
+    k = (x @ params["wk"]).reshape(b, 1, kv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, kv, hd)
+    pos2 = cur_pos[:, None]
+    q = apply_rope(q, pos2, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_theta)
+    kl, vl = paged_update(kl, vl, k, v, pages, cur_pos)
+    cache = paged_gather(kl, vl, pos_tab, pages)
+    out = decode_sdpa(q, cache, cur_pos, cfg.sliding_window)
+    return out.reshape(b, 1, h * hd) @ params["wo"], kl, vl
+
+
+def apply_attention_prefill_chunk(params, x, cfg, kl, vl, pos_tab, pages_row,
+                                  positions, scatter_page, within, mask_csr,
+                                  *, block_q, block_k, attn_impl=None):
+    """Bulk-prefill one prompt chunk against the paged KV pool (§IV-D).
+
+    x: [1, C, d_model] chunk hidden states; ``positions`` [C] absolute token
+    positions (chunk start + i); ``scatter_page``/``within`` [C] physical
+    destination of each chunk token (null page for padding rows);
+    ``pages_row`` [W] the sequence's page-table row; ``mask_csr`` a
+    ``(ptr, kcols)`` causal-band CSR over [C//block_q, W*ps//block_k]
+    blocks. The chunk attends to the whole gathered prefix (earlier chunks
+    + itself, causally) through ``repro.ops.sparse_attention`` — i.e. the
+    block_attn pipeline emitter, inheriting the ambient ``OpConfig``
+    (impl / pipeline_depth / value_codec) exactly like every other op the
+    engine traces. Returns (out [1, C, d_model], kl, vl).
+    """
+    b, c, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, c, h, hd)
+    k = (x @ params["wk"]).reshape(b, c, kv, hd)
+    v = (x @ params["wv"]).reshape(b, c, kv, hd)
+    q = apply_rope(q, positions[None], cfg.rope_theta)
+    k = apply_rope(k, positions[None], cfg.rope_theta)
+    kl = kl.at[scatter_page, within].set(k[0])
+    vl = vl.at[scatter_page, within].set(v[0])
+    view = paged_gather(kl, vl, pos_tab, pages_row[None])
+    # the gathered view is position-linear and its invalid tail sits at
+    # linear indices strictly greater than any valid q position, so the
+    # kernel's causal mask (with q_offset = positions[0]) subsumes the
+    # pos >= 0 validity mask the decode path needs
+    out = sparse_attention(
+        q.transpose(0, 2, 1, 3),
+        view.k.transpose(0, 2, 1, 3),
+        view.v.transpose(0, 2, 1, 3),
+        mask_csr,
+        block_q=block_q,
+        block_k=block_k,
+        causal=True,
+        impl=attn_impl,
+        q_offset=positions[0],
+        pad_active_to=view.k.shape[1] // block_k,
+    ).transpose(0, 2, 1, 3)
+    return out.reshape(b, c, h * hd) @ params["wo"], kl, vl
+
+
+# ---------------------------------------------------------------------------
 # Full layers
 # ---------------------------------------------------------------------------
 

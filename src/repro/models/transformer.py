@@ -411,3 +411,104 @@ def decode_step(params, cache: DecodeCache, token: jax.Array, pos: jax.Array, cf
         pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
         logits = jnp.where(pad_mask, logits, -1e30)
     return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Paged decode + chunked prefill (serving runtime; dense/moe families only —
+# SSM/hybrid state and cross-attention have no paged analogue here, those
+# families stay on the ring-cache engine path)
+# ---------------------------------------------------------------------------
+
+
+def _mask_vocab_pad(logits, cfg):
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def decode_step_paged(params, kstore, vstore, pos_tab, token, pos, pages,
+                      valid, cfg):
+    """One pooled decode tick against the paged KV pool.
+
+    kstore/vstore: [L, P+1, ps, KVH, D]; pos_tab: [P+1, ps] i32 (-1 = empty,
+    shared across layers); token/pos: [B]; pages: [B, W] page-table rows
+    (rows of non-decoding slots must be all-null-page); valid: [B] bool.
+    Returns (logits [B, Vp], kstore, vstore, pos_tab). Invalid rows write
+    only into the null page and their pos_tab stamp is forced to -1, so
+    they perturb nothing another sequence can attend to.
+    """
+    ps = kstore.shape[2]
+    page_idx = jnp.clip((pos // ps).astype(jnp.int32), 0, pages.shape[1] - 1)
+    phys = jnp.take_along_axis(pages, page_idx[:, None], axis=1)[:, 0]
+    within = (pos % ps).astype(jnp.int32)
+    pos_tab = pos_tab.at[phys, within].set(
+        jnp.where(valid, pos.astype(jnp.int32), -1))
+
+    x = params["embed"][token][:, None, :]  # [B, 1, d]
+
+    def body(x, inp):
+        lp, kl, vl = inp
+        xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, kl, vl = attn.apply_attention_decode_paged(
+            lp["attn"], xn, cfg, kl, vl, pos_tab, pages, pos)
+        x = x + a
+        xn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            h, _ = moe_mod.apply_moe(lp["moe"], xn, cfg)
+        else:
+            h = ffn_mod.apply_ffn(lp["ffn"], xn, cfg)
+        return x + h, (kl, vl)
+
+    x, (kstore, vstore) = jax.lax.scan(body, x, (params["layers"], kstore,
+                                                 vstore))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return _mask_vocab_pad(logits, cfg)[:, 0], kstore, vstore, pos_tab
+
+
+def prefill_chunk(params, kstore, vstore, pos_tab, pages_row, tokens,
+                  positions, scatter_page, within, pos_vals, mask_csr, cfg, *,
+                  block_q, block_k, with_logits=False, attn_impl=None):
+    """Run one whole prompt chunk through every layer in a single call.
+
+    tokens: [1, C]; positions/scatter_page/within/pos_vals: [C] (padding
+    rows carry the null page and pos_vals = -1); pages_row: [W]; mask_csr:
+    ``(ptr, kcols)`` causal-band block CSR for this chunk. Each layer's
+    attention is the block-sparse ``sparse_attention`` pipeline over the
+    gathered paged prefix — the §IV-D prefill path — so a C-token chunk
+    costs one forward instead of C decode ticks. Returns
+    (logits [C, Vp] | None, kstore, vstore, pos_tab); logits are only
+    materialized on the final chunk (``with_logits``), where the last valid
+    row seeds decoding.
+    """
+    pos_tab = pos_tab.at[scatter_page, within].set(
+        jnp.asarray(pos_vals, jnp.int32))
+    x = params["embed"][tokens]  # [1, C, d]
+
+    def body(x, inp):
+        lp, kl, vl = inp
+        xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, kl, vl = attn.apply_attention_prefill_chunk(
+            lp["attn"], xn, cfg, kl, vl, pos_tab, pages_row, positions,
+            scatter_page, within, mask_csr, block_q=block_q, block_k=block_k,
+            attn_impl=attn_impl)
+        x = x + a
+        xn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            h, _ = moe_mod.apply_moe(lp["moe"], xn, cfg)
+        else:
+            h = ffn_mod.apply_ffn(lp["ffn"], xn, cfg)
+        return x + h, (kl, vl)
+
+    x, (kstore, vstore) = jax.lax.scan(body, x, (params["layers"], kstore,
+                                                 vstore))
+    if not with_logits:
+        return None, kstore, vstore, pos_tab
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return _mask_vocab_pad(logits, cfg)[0], kstore, vstore, pos_tab

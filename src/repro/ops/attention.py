@@ -21,7 +21,7 @@ from repro.ops.tiling import resolve_pipeline_depth
 from repro.sparse.codecs import (encode_seq_blocks, fake_quant_seq_blocks,
                                  resolve_codec_name)
 
-__all__ = ["sparse_attention", "csr_encode_block_mask"]
+__all__ = ["sparse_attention", "csr_encode_block_mask", "csr_mask_to_dense"]
 
 
 def csr_encode_block_mask(block_mask: np.ndarray):
@@ -38,11 +38,29 @@ def csr_encode_block_mask(block_mask: np.ndarray):
     return ptr, kcols, max(max_active, 1)
 
 
+def csr_mask_to_dense(ptr, kcols, heads: int, nqb: int, nkb: int):
+    """Inverse of ``csr_encode_block_mask`` — works on traced arrays.
+
+    The serving prefill path builds its causal-band CSR on-device; the
+    reference backend reconstructs the dense [H, nqb, nkb] mask from it.
+    Entries past ``ptr[-1]`` (shape padding) are ignored.
+    """
+    ptr = jnp.asarray(ptr, jnp.int32)
+    kcols = jnp.asarray(kcols, jnp.int32)
+    p = jnp.arange(kcols.shape[0])
+    row = jnp.clip(jnp.searchsorted(ptr, p, side="right") - 1, 0,
+                   heads * nqb - 1)
+    valid = p < ptr[-1]
+    dense = jnp.zeros((heads * nqb, nkb), jnp.bool_)
+    dense = dense.at[row, jnp.clip(kcols, 0, nkb - 1)].max(valid)
+    return dense.reshape(heads, nqb, nkb)
+
+
 def sparse_attention(
-    q: jax.Array,  # [B, H, S, D]
-    k: jax.Array,  # [B, KVH, S, D]
-    v: jax.Array,  # [B, KVH, S, D]
-    block_mask: np.ndarray,  # [H, nqb, nkb] bool (host-side / static)
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, KVH, Skv, D]
+    v: jax.Array,  # [B, KVH, Skv, D]
+    block_mask,  # [H, nqb, nkb] bool (static) | (ptr, kcols) CSR arrays
     *,
     block_q: int = 128,
     block_k: int = 128,
@@ -52,6 +70,8 @@ def sparse_attention(
     interpret=None,
     pipeline_depth=None,
     value_codec=None,
+    q_offset: "jax.Array | int" = 0,
+    pad_active_to=None,
 ) -> jax.Array:
     """Block-sparse flash attention over a static per-head block mask.
 
@@ -62,19 +82,50 @@ def sparse_attention(
     (``repro.sparse.codecs`` — the KV-cache-quantization analogue): the
     kernel moves int8/fp8 blocks plus one f32 scale each and dequantizes
     in-register before the softmax step.
+
+    Prefill-chunk entry (serving runtime): q may cover ``Sq`` chunk tokens
+    starting at absolute position ``q_offset`` (int or traced scalar) while
+    K/V span the full ``Skv``-token prefix. ``block_mask`` may then be a
+    pre-encoded ``(ptr, kcols)`` pair of (possibly traced) arrays — built
+    per chunk on-device — instead of a host-side dense mask, and
+    ``pad_active_to`` pins the kernel's active-block grid extent so every
+    chunk of a prompt reuses one compiled kernel (padding steps are
+    compute-masked; with ``pipeline_depth >= 1`` they issue no DMA).
     """
     cfg = resolved_config(impl=impl, interpret=interpret,
                           pipeline_depth=pipeline_depth,
                           value_codec=value_codec)
     backend = resolve_backend("sparse_attention", cfg.impl)
     return backend.fn(q, k, v, block_mask, cfg, block_q=block_q,
-                      block_k=block_k, causal=causal, scale=scale)
+                      block_k=block_k, causal=causal, scale=scale,
+                      q_offset=q_offset, pad_active_to=pad_active_to)
 
+
+
+def _resolve_mask(block_mask, *, heads, nqb, nkb, pad_active_to):
+    """Normalize either mask form to (ptr, kcols, max_active).
+
+    ``kcols`` is shape-padded to the next power of two (edge values; the
+    kernel reads only ``[base, base + count)`` per row) so masks whose
+    active count drifts — serving prefill chunks — hit a bounded number of
+    jit cache entries instead of one per distinct count.
+    """
+    if isinstance(block_mask, tuple):
+        ptr, kcols = block_mask
+        return (jnp.asarray(ptr, jnp.int32), jnp.asarray(kcols, jnp.int32),
+                int(pad_active_to or nkb))
+    ptr, kcols, max_active = csr_encode_block_mask(block_mask)
+    if pad_active_to:
+        max_active = max(max_active, int(pad_active_to))
+    padded = 1 << (len(kcols) - 1).bit_length()
+    kcols = np.pad(kcols, (0, padded - len(kcols)), mode="edge")
+    return jnp.asarray(ptr), jnp.asarray(kcols), max_active
 
 
 @register_backend("sparse_attention", "ref", priority=50)
 def _attn_ref(q, k, v, block_mask, cfg: OpConfig, *, block_q, block_k,
-              causal, scale):
+              causal, scale, q_offset=0, pad_active_to=None):
+    del pad_active_to  # grid sizing is a kernel-path concern
     codec = resolve_codec_name(cfg.value_codec)
     if codec != "none":
         b, kvh, s, d = k.shape
@@ -82,30 +133,36 @@ def _attn_ref(q, k, v, block_mask, cfg: OpConfig, *, block_q, block_k,
             k.reshape(b * kvh, s, d), block_k, codec).reshape(k.shape)
         v = fake_quant_seq_blocks(
             v.reshape(b * kvh, s, d), block_k, codec).reshape(v.shape)
+    if isinstance(block_mask, tuple):
+        h, sq, skv = q.shape[1], q.shape[2], k.shape[2]
+        block_mask = csr_mask_to_dense(*block_mask, heads=h,
+                                       nqb=sq // block_q, nkb=skv // block_k)
     return block_sparse_attention_ref(
         q, k, v, block_mask, block_q=block_q, block_k=block_k, causal=causal,
-        scale=scale)
+        scale=scale, q_offset=q_offset)
 
 
 def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
-                 scale, cfg: OpConfig):
+                 scale, cfg: OpConfig, q_offset=0, pad_active_to=None):
     b, h, s, d = q.shape
-    kvh = k.shape[1]
+    kvh, skv = k.shape[1], k.shape[2]
     scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
     depth = resolve_pipeline_depth(
         cfg.pipeline_depth, default=0, op="sparse_attention", fmt="block",
         shape=(h, s), n=s, block=(block_q, block_k), dtype=q.dtype)
-    ptr, kcols, max_active = csr_encode_block_mask(block_mask)
+    ptr, kcols, max_active = _resolve_mask(
+        block_mask, heads=h, nqb=s // block_q, nkb=skv // block_k,
+        pad_active_to=pad_active_to)
     codec = resolve_codec_name(cfg.value_codec)
-    k3 = k.reshape(b * kvh, s, d)
-    v3 = v.reshape(b * kvh, s, d)
+    k3 = k.reshape(b * kvh, skv, d)
+    v3 = v.reshape(b * kvh, skv, d)
     kscales = vscales = None
     if codec != "none":
         k3, kscales = encode_seq_blocks(k3, block_k, codec)
         v3, vscales = encode_seq_blocks(v3, block_k, codec)
     out = block_sparse_attention_kernel(
-        jnp.asarray(ptr),
-        jnp.asarray(kcols),
+        ptr,
+        kcols,
         q.reshape(b * h, s, d),
         k3,
         v3,
@@ -121,6 +178,7 @@ def _attn_pallas(q, k, v, block_mask, interpret, *, block_q, block_k, causal,
         interpret=interpret,
         pipeline_depth=depth,
         codec=codec,
+        q_offset=q_offset,
     )
     return out.reshape(b, h, s, d)
 

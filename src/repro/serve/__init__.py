@@ -1,0 +1,17 @@
+"""Serving runtime: chunked block-sparse prefill, paged KV cache, and a
+continuous-batching scheduler (docs/serving.md).
+
+Import surface:
+  ServeEngine / Request    — the tick-loop engine (engine.py)
+  PagedKVCache             — block-granular KV allocator (kvcache.py)
+  ChunkedPrefiller         — fixed-shape bulk prefill (prefill.py)
+  WaitQueue / Telemetry    — admission + latency ledger (scheduler.py)
+"""
+
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvcache import PageAllocationError, PagedKVCache
+from repro.serve.prefill import ChunkedPrefiller
+from repro.serve.scheduler import Telemetry, WaitQueue
+
+__all__ = ["Request", "ServeEngine", "PagedKVCache", "PageAllocationError",
+           "ChunkedPrefiller", "WaitQueue", "Telemetry"]

@@ -1,17 +1,29 @@
-"""Batched serving engine: prefill + decode with continuous-batching-lite.
+"""Batched serving engine: chunked prefill + paged KV + continuous batching.
 
-The engine keeps a fixed pool of decode slots. Requests are admitted into
-free slots (their prompt prefilled into the slot's cache region), decode
-steps run the whole pool every tick, finished sequences free their slots.
-This is the serving-side end-to-end driver for the paper's inference story
-(§IV-D): the FFN can be block-sparse and the prefill attention block-sparse.
+The engine keeps a fixed pool of decode slots over a shared *paged* KV pool
+(``repro.serve.kvcache``). Requests wait in a priority queue, are admitted
+when a slot and enough pages are free, have their prompt bulk-prefilled
+chunk-by-chunk through the block-sparse attention path
+(``repro.serve.prefill`` — the paper's §IV-D prefill actually running
+block-sparse), then join the pooled decode step. Each engine tick is
+Sarathi-style: at most one prefill chunk interleaved with one pooled decode
+step, so long prompts never starve decode. Pages are allocated on admit and
+on decode growth, freed (zeroed + position-invalidated) on completion.
+
+The token-at-a-time **legacy path** survives behind ``legacy_prefill=True``
+— and remains the automatic fallback for families the paged path doesn't
+cover (SSM/hybrid state, cross-attention, sliding-window rings) — with its
+historical defect fixed: prefilling one slot no longer rewrites every other
+active slot's KV (non-target slots are masked out of the cache merge).
 
 Sparse-op amortization: ops traced under the engine inherit its
 ``op_config`` (``repro.ops`` precedence), and any host-side planning they
 trigger — §IV-C tile selection, the WCSR §III-C task decomposition — is
 memoized per ``SparseStructure`` in the ``repro.ops.make_plan`` cache, so a
 deployment plans each layer once and decodes forever. ``stats()`` surfaces
-those cache counters for serving dashboards.
+those cache counters for serving dashboards, plus the serving ledger:
+queue depth, page utilization, prefill/decode token counters and TTFT
+percentiles (``repro.serve.scheduler.Telemetry``).
 
 Multi-device serving: pass ``mesh=`` and decode steps trace inside a
 ``repro.parallel.sparse.use_sparse_mesh`` scope — every ``SparseTensor``
@@ -25,13 +37,16 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.ops import OpConfig, use_config
+from repro.serve.kvcache import PagedKVCache
+from repro.serve.prefill import ChunkedPrefiller
+from repro.serve.scheduler import Telemetry, WaitQueue
 
 
 @dataclasses.dataclass
@@ -39,15 +54,59 @@ class Request:
     rid: int
     prompt: np.ndarray  # [P] i32
     max_new_tokens: int
+    priority: int = 0  # lower = admitted first
     out_tokens: Optional[List[int]] = None
     done: bool = False
+
+
+def _paged_capable(cfg) -> bool:
+    """Families the paged/chunked path covers; the rest stay legacy."""
+    return (getattr(cfg, "family", None) in ("dense", "moe")
+            and not getattr(cfg, "cross_attn_every", None)
+            and getattr(cfg, "sliding_window", None) is None)
+
+
+def _merge_slot_cache(old, new, s: int, cfg):
+    """Adopt only batch row ``s`` of a freshly decoded cache tree.
+
+    The legacy prefill decodes the whole pool per prompt token; merging
+    just the target slot's rows keeps every other active slot's KV/SSM
+    state untouched (the historical bug rewrote them all).
+    """
+    from repro.models.attention import KVCache
+    from repro.serve.step import decode_cache_axes
+
+    ax = decode_cache_axes(cfg)
+
+    def pick(o, n, a):
+        if o is None:
+            return n
+        sl = (slice(None),) * a.index("batch") + (s,)
+        return o.at[sl].set(n[sl])
+
+    kv = old.kv
+    if kv is not None:
+        kv = KVCache(*(pick(getattr(old.kv, f), getattr(new.kv, f),
+                            getattr(ax.kv, f)) for f in ("k", "v", "pos")))
+    return old._replace(
+        kv=kv,
+        ssm=pick(old.ssm, new.ssm, ax.ssm) if old.ssm is not None else None,
+        prev1=(pick(old.prev1, new.prev1, ax.prev1)
+               if old.prev1 is not None else None),
+        prev2=(pick(old.prev2, new.prev2, ax.prev2)
+               if old.prev2 is not None else None),
+    )
 
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 512,
                  frontend_inputs: Optional[dict] = None, greedy: bool = True,
                  op_config: Optional[OpConfig] = None,
-                 mesh=None, mesh_axis: str = "data"):
+                 mesh=None, mesh_axis: str = "data",
+                 page_size: int = 64, num_pages: Optional[int] = None,
+                 chunk: int = 256, prefill_block_q: Optional[int] = None,
+                 prefill_attn_budget: float = 1.0, prefill_attn_impl=None,
+                 legacy_prefill: bool = False):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -61,32 +120,207 @@ class ServeEngine:
         # use_sparse_mesh so SparseTensor spmm distributes over mesh_axis
         self.mesh = mesh
         self.mesh_axis = mesh_axis
-        kw = frontend_inputs or {}
-        self.cache = model.init_decode_cache(slots, max_len, **kw)
+        self.greedy = greedy
         self.pos = np.zeros(slots, np.int64)  # next position per slot
         self.active: List[Optional[Request]] = [None] * slots
         self.budget = np.zeros(slots, np.int64)
-        self.greedy = greedy
-        self._decode_jit = jax.jit(
-            lambda p, c, tok, pos: model.decode_step(p, c, tok, pos)
-        )
         self.last_token = np.zeros(slots, np.int64)
+        self.queue = WaitQueue()
+        self.telemetry = Telemetry()
+        self.ticks = 0
+
+        self.paged = (not legacy_prefill) and _paged_capable(self.cfg)
+        if self.paged:
+            self.chunk = int(chunk)
+            width = -(-max_len // page_size)  # page-table width per slot
+            if num_pages is None:
+                num_pages = slots * width
+            self.pool = PagedKVCache(self.cfg, num_pages, page_size)
+            self.pages: List[List[int]] = [[] for _ in range(slots)]
+            # free -> prefill -> decode (-> stalled <-> decode) -> free
+            self.state = ["free"] * slots
+            self._prefill_cursor = np.zeros(slots, np.int64)
+            self.prefiller = ChunkedPrefiller(
+                self.cfg, page_size=page_size, null_page=self.pool.null_page,
+                width=width, chunk=self.chunk, block_q=prefill_block_q,
+                attn_budget=prefill_attn_budget, attn_impl=prefill_attn_impl)
+            from repro.models.transformer import decode_step_paged
+
+            cfg = self.cfg
+            self._decode_paged_jit = jax.jit(
+                lambda p, k, v, pt, tok, pos, pages, valid:
+                decode_step_paged(p, k, v, pt, tok, pos, pages, valid, cfg))
+        else:
+            kw = frontend_inputs or {}
+            self.cache = model.init_decode_cache(slots, max_len, **kw)
+            self._decode_jit = jax.jit(
+                lambda p, c, tok, pos: model.decode_step(p, c, tok, pos)
+            )
+
+    def _scope(self):
+        """Ambient OpConfig + sparse-mesh scope for every traced call."""
+        stack = contextlib.ExitStack()
+        if self.op_config is not None:
+            stack.enter_context(use_config(self.op_config))
+        if self.mesh is not None:
+            from repro.parallel.sparse import use_sparse_mesh
+
+            stack.enter_context(use_sparse_mesh(self.mesh, self.mesh_axis))
+        return stack
 
     def _decode(self, p, c, tok, pos):
-        with contextlib.ExitStack() as stack:
-            if self.op_config is not None:
-                stack.enter_context(use_config(self.op_config))
-            if self.mesh is not None:
-                from repro.parallel.sparse import use_sparse_mesh
-
-                stack.enter_context(use_sparse_mesh(self.mesh,
-                                                    self.mesh_axis))
+        with self._scope():
             return self._decode_jit(p, c, tok, pos)
 
     # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request for admission (priority, FIFO within priority).
+
+        Raises ``ValueError`` for requests that could *never* run — a
+        prompt longer than the per-slot page-table window (``max_len``) or
+        than the whole page pool. Transient fullness is not an error: the
+        request waits in the queue (admit-when-full queues, never drops).
+        """
+        plen = len(req.prompt)
+        if plen >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {plen} tokens >= engine "
+                f"max_len {self.max_len}")
+        if self.paged:
+            need = self.pool.pages_needed(plen)
+            if need > self.pool.num_pages:
+                raise ValueError(
+                    f"request {req.rid}: prompt of {plen} tokens needs "
+                    f"{need} pages but the pool holds only "
+                    f"{self.pool.num_pages} (page_size "
+                    f"{self.pool.page_size})")
+        self.queue.push(req, req.priority)
+        self.telemetry.on_submit(req.rid, plen, req.priority)
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.slots):
+            if self.active[s] is None:
+                return s
+        return None
+
+    def _admit_ready(self):
+        """Admit queue heads while a slot + prompt pages are available."""
+        while len(self.queue):
+            s = self._free_slot()
+            if s is None:
+                return
+            req = self.queue.peek()
+            need = self.pool.pages_needed(len(req.prompt))
+            if need > self.pool.free_pages:
+                return  # backpressure: head-of-line waits, no starvation
+            self.queue.pop()
+            self.pages[s] = self.pool.alloc(need)
+            self.state[s] = "prefill"
+            self.active[s] = req
+            req.out_tokens = []
+            self._prefill_cursor[s] = 0
+            self.pos[s] = 0
+            # the prefill emits the first generated token: 1 budget spent
+            self.budget[s] = req.max_new_tokens - 1
+            self.telemetry.on_admit(req.rid)
+
+    # -- paged tick ---------------------------------------------------------
+    def tick(self):
+        """One engine tick: admit, <= 1 prefill chunk, pooled decode."""
+        assert self.paged, "tick() is the paged-mode loop; use step()"
+        self.ticks += 1
+        self.telemetry.ticks = self.ticks
+        self._admit_ready()
+        self._prefill_tick()
+        self._decode_tick()
+
+    def _prefill_tick(self):
+        for s in range(self.slots):
+            if self.state[s] != "prefill":
+                continue
+            req = self.active[s]
+            cur = int(self._prefill_cursor[s])
+            n = min(self.chunk, len(req.prompt) - cur)
+            final = cur + n == len(req.prompt)
+            with self._scope():
+                logits = self.prefiller.run_chunk(
+                    self.params, self.pool, self.pages[s], cur,
+                    req.prompt[cur:cur + n], with_logits=final)
+            self._prefill_cursor[s] = cur + n
+            self.telemetry.prefill_tokens += n
+            if final:
+                nxt = int(np.argmax(logits[n - 1]))
+                self.pos[s] = len(req.prompt)
+                self.last_token[s] = nxt
+                req.out_tokens.append(nxt)
+                self.telemetry.on_first_token(req.rid)
+                self.state[s] = "decode"
+                if self.budget[s] <= 0:
+                    self._complete(s)
+            return  # Sarathi chunk budget: one chunk per tick
+
+    def _decode_tick(self):
+        from repro.serve.kvcache import PageAllocationError
+
+        # growth: a decoding slot crossing a page boundary needs one page;
+        # failure stalls just that slot until completions free pages
+        for s in range(self.slots):
+            if self.state[s] not in ("decode", "stalled"):
+                continue
+            if int(self.pos[s]) // self.pool.page_size >= len(self.pages[s]):
+                try:
+                    self.pages[s] += self.pool.alloc(1)
+                    self.state[s] = "decode"
+                except PageAllocationError:
+                    self.state[s] = "stalled"
+            else:
+                self.state[s] = "decode"
+        dec = [s for s in range(self.slots) if self.state[s] == "decode"]
+        if not dec:
+            return
+        valid = np.zeros(self.slots, bool)
+        valid[dec] = True
+        table = self.pool.table(
+            [self.pages[s] if valid[s] else [] for s in range(self.slots)],
+            self.prefiller.width)
+        with self._scope():
+            logits, self.pool.k, self.pool.v, self.pool.pos = (
+                self._decode_paged_jit(
+                    self.params, self.pool.k, self.pool.v, self.pool.pos,
+                    jnp.asarray(self.last_token, jnp.int32),
+                    jnp.asarray(self.pos, jnp.int32), table,
+                    jnp.asarray(valid)))
+        logits = np.asarray(logits)
+        self.telemetry.decode_tokens += len(dec)
+        for s in dec:
+            req = self.active[s]
+            self.pos[s] += 1
+            nxt = int(np.argmax(logits[s]))
+            self.last_token[s] = nxt
+            req.out_tokens.append(nxt)
+            self.budget[s] -= 1
+            if self.budget[s] <= 0 or self.pos[s] >= self.max_len - 1:
+                self._complete(s)
+
+    def _complete(self, s: int):
+        req = self.active[s]
+        req.done = True
+        self.telemetry.on_finish(req.rid, len(req.out_tokens))
+        self.active[s] = None
+        self.state[s] = "free"
+        self.pool.free(self.pages[s])  # zero + pos=-1: no stale KV reuse
+        self.pages[s] = []
+        self.pos[s] = 0
+        self.last_token[s] = 0
+
+    # -- legacy path (token-at-a-time prefill over ring caches) -------------
     def try_admit(self, req: Request) -> bool:
         for s in range(self.slots):
             if self.active[s] is None:
+                if req.rid not in self.telemetry.records:
+                    self.telemetry.on_submit(req.rid, len(req.prompt),
+                                             req.priority)
+                self.telemetry.on_admit(req.rid)
                 self._prefill_slot(s, req)
                 return True
         return False
@@ -113,25 +347,41 @@ class ServeEngine:
         self.active[s] = req
         # the prefill emits the first generated token, so it spends 1 budget
         self.budget[s] = req.max_new_tokens - 1
-        # token-by-token prefill through the decode path: exact and reuses
-        # the slot's cache region. (A bulk prefill kernel is a serving
-        # optimization; exactness is what matters for the engine tests.)
+        # token-by-token prefill through the decode path — exact, and kept
+        # (behind legacy_prefill / non-paged families) as the equivalence
+        # oracle for the chunked path. Other active slots are masked out of
+        # the cache merge: only slot s's rows are adopted, so prefilling
+        # here no longer rewrites their KV at an unchanged position.
+        others = any(r is not None and i != s
+                     for i, r in enumerate(self.active))
         for t, tok in enumerate(req.prompt):
             toks = jnp.asarray(self.last_token, jnp.int32).at[s].set(int(tok))
             poss = jnp.asarray(self.pos, jnp.int32)
-            logits, self.cache = self._decode(self.params, self.cache, toks, poss)
+            logits, new_cache = self._decode(self.params, self.cache, toks,
+                                             poss)
+            self.cache = (_merge_slot_cache(self.cache, new_cache, s, self.cfg)
+                          if others else new_cache)
             self.pos[s] += 1
+            self.ticks += 1
+            self.telemetry.ticks = self.ticks
+            self.telemetry.prefill_tokens += 1
         nxt = int(np.argmax(np.asarray(logits)[s]))
         self.last_token[s] = nxt
         req.out_tokens.append(nxt)
+        self.telemetry.on_first_token(req.rid)
         if self.budget[s] <= 0:
             req.done = True
+            self.telemetry.on_finish(req.rid, len(req.out_tokens))
             self.active[s] = None
 
     # -- decode tick --------------------------------------------------------
     def step(self):
+        if self.paged:
+            return self.tick()
         if not any(a is not None for a in self.active):
             return
+        self.ticks += 1
+        self.telemetry.ticks = self.ticks
         toks = jnp.asarray(self.last_token, jnp.int32)
         poss = jnp.asarray(self.pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, toks, poss)
@@ -140,12 +390,14 @@ class ServeEngine:
             if req is None:
                 continue
             self.pos[s] += 1
+            self.telemetry.decode_tokens += 1
             nxt = int(np.argmax(logits[s]))
             self.last_token[s] = nxt
             req.out_tokens.append(nxt)
             self.budget[s] -= 1
             if self.budget[s] <= 0 or self.pos[s] >= self.max_len - 1:
                 req.done = True
+                self.telemetry.on_finish(req.rid, len(req.out_tokens))
                 self.active[s] = None
                 self.pos[s] = 0  # slot reset (ring caches tolerate reuse)
 
@@ -174,6 +426,13 @@ class ServeEngine:
         unified aggregator over every counter above
         (``repro.ops.cache_stats`` — fixed key naming; the legacy
         per-cache dataclasses remain for existing dashboards).
+
+        Serving-runtime keys (``docs/serving.md``): ``mode``
+        ("paged"/"legacy"), ``queue_depth`` (requests waiting for
+        admission), ``page_utilization`` + ``pages`` (paged-pool
+        occupancy; 0.0/None under legacy), ``ttft`` (p50/p95
+        time-to-first-token in engine ticks and seconds),
+        ``prefill_tokens`` / ``decode_tokens`` / ``ticks``.
         """
         from repro.ops import (cache_stats, codec_bytes_report,
                                partition_balance_report, plan_cache_info,
@@ -190,11 +449,32 @@ class ServeEngine:
             "codec_bytes": codec_bytes_report(),
             "cache_stats": cache_stats(),
             "sparse_shards": partition_balance_report(),
+            "mode": "paged" if self.paged else "legacy",
+            "queue_depth": len(self.queue),
+            "page_utilization": (self.pool.utilization() if self.paged
+                                 else 0.0),
+            "pages": self.pool.stats() if self.paged else None,
+            "ttft": self.telemetry.ttft_percentiles(),
+            "prefill_tokens": self.telemetry.prefill_tokens,
+            "decode_tokens": self.telemetry.decode_tokens,
+            "ticks": self.ticks,
         }
 
     def run(self, requests: List[Request], max_ticks: int = 10_000):
-        pending = list(requests)
         done: List[Request] = []
+        if self.paged:
+            for r in requests:
+                self.submit(r)
+            start = self.ticks
+            while ((len(self.queue) or any(a is not None
+                                           for a in self.active))
+                   and self.ticks - start < max_ticks):
+                self.tick()
+            return [r for r in requests if r.done]
+        for r in requests:  # stamp arrivals so legacy TTFT spans queue wait
+            if r.rid not in self.telemetry.records:
+                self.telemetry.on_submit(r.rid, len(r.prompt), r.priority)
+        pending = list(requests)
         ticks = 0
         while (pending or any(a is not None for a in self.active)) and ticks < max_ticks:
             while pending and self.try_admit(pending[0]):

@@ -1,0 +1,127 @@
+"""Paged KV cache for the serving runtime (vLLM-style block granularity).
+
+One physical pool of fixed-size token *pages* is shared by every admitted
+sequence, decoupling sequence length from fixed ``max_len`` slot regions: a
+sequence holds exactly ``ceil(len / page_size)`` pages, allocated on admit
+(enough for the prompt) and one at a time as decode crosses page
+boundaries, and freed — zeroed, positions invalidated — on completion. The
+device-side layout mirrors ``models/attention.py``'s paged helpers:
+
+  k/v      [L, P+1, page_size, KVH, D]   per-layer page pool
+  pos      [P+1, page_size] i32          absolute position per slot (-1 empty;
+                                         shared across layers)
+  table()  [B, W] i32                    page-table rows, null-page padded
+
+Physical page ``P`` (the last one) is the *null page*: it is never
+allocated, pads every short page-table row, and absorbs the writes of
+masked batch rows in the pooled decode step. Because freed and null pages
+carry ``pos = -1``, a recycled page can never leak a previous request's KV
+into attention — the staleness regression tests pin this down.
+
+The allocator itself is host-side and O(1) per op (a free list); only the
+zero-on-free touches the device arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax.numpy as jnp
+
+from repro.models.common import DTYPES
+
+
+class PageAllocationError(RuntimeError):
+    """Raised when a request needs more pages than the pool can ever hold."""
+
+
+class PagedKVCache:
+    def __init__(self, cfg, num_pages: int, page_size: int = 64):
+        if num_pages < 1:
+            raise ValueError("num_pages must be >= 1")
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.num_pages = int(num_pages)
+        self.null_page = self.num_pages  # physical id of the write sink
+        L = cfg.num_layers
+        kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dtype = DTYPES[cfg.dtype]
+        shape = (L, self.num_pages + 1, self.page_size, kvh, hd)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self.pos = -jnp.ones((self.num_pages + 1, self.page_size), jnp.int32)
+        self._free: List[int] = list(range(self.num_pages))
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / self.num_pages
+
+    def pages_needed(self, tokens: int) -> int:
+        return max(1, -(-int(tokens) // self.page_size))
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` physical page ids, or raise if the pool is exhausted.
+
+        Transient exhaustion (other sequences hold the pages) raises
+        ``PageAllocationError`` too — the scheduler treats it as
+        backpressure (queue / stall), not as a request failure; only
+        ``ServeEngine.submit`` turns *permanent* infeasibility (request
+        larger than the whole pool) into a user-facing error.
+        """
+        if n > len(self._free):
+            raise PageAllocationError(
+                f"need {n} pages, {len(self._free)} free of {self.num_pages}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Return pages to the pool, zeroing KV and invalidating positions.
+
+        Zeroing is the defense-in-depth half of the staleness story: the
+        ``pos = -1`` mask alone already blocks attention to recycled pages,
+        and the zeros make any masking bug show up as an obviously-wrong
+        all-zero value rather than a plausible stale one.
+        """
+        if not pages:
+            return
+        idx = jnp.asarray(list(pages), jnp.int32)
+        self.k = self.k.at[:, idx].set(0)
+        self.v = self.v.at[:, idx].set(0)
+        self.pos = self.pos.at[idx].set(-1)
+        for p in pages:
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"page {p} out of range")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+    # -- page tables --------------------------------------------------------
+    def table(self, page_lists: Sequence[Sequence[int]], width: int):
+        """Stack per-sequence page lists into a [B, width] i32 table.
+
+        Rows are null-page padded; an empty list yields an all-null row
+        (the masked-slot row for the pooled decode step).
+        """
+        rows = []
+        for pl in page_lists:
+            if len(pl) > width:
+                raise ValueError(f"page list of {len(pl)} exceeds width {width}")
+            rows.append(list(pl) + [self.null_page] * (width - len(pl)))
+        return jnp.asarray(rows, jnp.int32)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "used_pages": self.used_pages,
+            "free_pages": self.free_pages,
+            "utilization": self.utilization(),
+        }

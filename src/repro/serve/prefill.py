@@ -1,0 +1,121 @@
+"""Chunked bulk prefill: whole prompt chunks through the block-sparse path.
+
+The legacy engine fed prompts token-by-token through the decode step — a
+64K prompt cost 64K engine ticks, each one redundantly re-decoding every
+other active slot. ``ChunkedPrefiller`` instead runs one C-token chunk per
+call through ``models.transformer.prefill_chunk``: every layer's attention
+is a single ``sparse_attention`` dispatch (the §IV-D block-sparse prefill,
+on the same pipeline emitter / OpConfig the rest of the engine traces) and
+the chunk's KV lands in the paged pool in one scatter.
+
+Retrace discipline — the part that makes this serve-able: the compiled
+chunk function is fixed-shape. Chunk length ``C``, page-table width ``W``
+and the CSR buffers (``ptr`` [H*nqb+1], ``kcols`` [H*nqb*nkb]) are static;
+the chunk start, valid count, tokens and page ids are *traced* operands.
+The causal-band block mask is therefore built on-device from the traced
+``start`` (band widths via cumsum + searchsorted), and the kernel's grid is
+pinned to the full ``nkb`` extent (``pad_active_to``) with padding steps
+compute-masked. Net effect: one compile per (with_logits) variant, every
+chunk of every prompt reuses it.
+
+``attn_budget < 1`` swaps the full causal band for a sink + local-window
+block pattern (the MInference/H2O-style sparse prefill): per q-row the band
+of ``nblk`` causal blocks is cut to ``max(2, ceil(budget * nblk))`` — block
+0 (the attention sink) plus the trailing window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import prefill_chunk
+
+
+class ChunkedPrefiller:
+    def __init__(self, cfg, *, page_size: int, null_page: int, width: int,
+                 chunk: int = 256, block_q: int | None = None,
+                 attn_budget: float = 1.0, attn_impl=None):
+        self.cfg = cfg
+        self.chunk = int(chunk)
+        bq = int(block_q or min(128, self.chunk))
+        if self.chunk % bq:
+            raise ValueError(f"chunk {self.chunk} not a multiple of "
+                             f"block_q {bq}")
+        self.block_q = bq
+        self.page_size = ps = int(page_size)
+        self.width = W = int(width)
+        self.null_page = int(null_page)
+        self.attn_budget = float(attn_budget)
+        self.attn_impl = attn_impl
+
+        C, h = self.chunk, cfg.num_heads
+        nqb = C // bq
+        nkb = W  # block_k == page_size, so kv blocks are exactly the pages
+        budget = self.attn_budget
+        null = self.null_page
+
+        def _band_csr(start):
+            """Causal-band block CSR from the traced chunk start."""
+            qi = jnp.arange(nqb)
+            last = start + (qi + 1) * bq  # exclusive max qpos per row
+            nblk = jnp.clip((last + ps - 1) // ps, 1, nkb).astype(jnp.int32)
+            if budget < 1.0:
+                count = jnp.minimum(nblk, jnp.maximum(
+                    2, jnp.ceil(budget * nblk).astype(jnp.int32)))
+            else:
+                count = nblk
+            counts = jnp.tile(count, h)  # row r = head*nqb + qi
+            ptr = jnp.concatenate(
+                [jnp.zeros(1, jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)])
+            p = jnp.arange(h * nqb * nkb)
+            row = jnp.clip(jnp.searchsorted(ptr, p, side="right") - 1, 0,
+                           h * nqb - 1)
+            j = (p - ptr[row]).astype(jnp.int32)
+            if budget < 1.0:
+                # sink block 0 + trailing window; count==nblk degenerates to
+                # the full band so no column ever repeats within a row
+                kcols = jnp.where(j == 0, 0, nblk[row % nqb] - counts[row] + j)
+            else:
+                kcols = j  # full band: columns 0..count-1
+            return ptr, jnp.clip(kcols, 0, nkb - 1).astype(jnp.int32)
+
+        def _run(params, k, v, pos_tab, pages_row, tokens, start, n_valid,
+                 with_logits):
+            i = jnp.arange(C)
+            t = (start + i).astype(jnp.int32)
+            valid = i < n_valid
+            scatter_page = jnp.where(
+                valid, pages_row[jnp.clip(t // ps, 0, W - 1)], null)
+            within = (t % ps).astype(jnp.int32)
+            pos_vals = jnp.where(valid, t, -1)
+            return prefill_chunk(
+                params, k, v, pos_tab, pages_row, tokens[None], t,
+                scatter_page, within, pos_vals, _band_csr(start), cfg,
+                block_q=bq, block_k=ps, with_logits=with_logits,
+                attn_impl=attn_impl)
+
+        self._fn = jax.jit(_run, static_argnames=("with_logits",))
+
+    def run_chunk(self, params, pool, pages, start: int, tokens, *,
+                  with_logits: bool):
+        """Prefill ``tokens`` (<= chunk) at absolute ``start`` into ``pool``.
+
+        ``pages`` is the sequence's page list (logical order). Mutates the
+        pool's device arrays; returns logits [len(tokens), Vp] when
+        ``with_logits`` (the final chunk — its last row seeds decode),
+        else None.
+        """
+        n = len(tokens)
+        if not 0 < n <= self.chunk:
+            raise ValueError(f"chunk of {n} tokens (capacity {self.chunk})")
+        buf = np.zeros(self.chunk, np.int32)
+        buf[:n] = np.asarray(tokens, np.int32)
+        row = jnp.asarray(
+            list(pages) + [self.null_page] * (self.width - len(pages)),
+            jnp.int32)
+        logits, pool.k, pool.v, pool.pos = self._fn(
+            params, pool.k, pool.v, pool.pos, row, jnp.asarray(buf),
+            jnp.int32(start), jnp.int32(n), with_logits)
+        return None if logits is None else np.asarray(logits[:n])

@@ -1,0 +1,131 @@
+"""Continuous-batching scheduler pieces: priority wait queue + telemetry.
+
+The queue replaces first-free-slot admission: requests wait in a priority
+heap (lower ``priority`` first, FIFO within a priority) until both a slot
+and enough KV pages are free — admission backpressure instead of drops.
+The head of the queue gates admission (no starvation by smaller requests
+skipping ahead within a priority class).
+
+``Telemetry`` is the per-request latency/throughput ledger behind
+``ServeEngine.stats()``: arrival/admit/first-token/finish are stamped in
+engine ticks *and* wall-clock seconds, and TTFT percentiles are computed
+over finished-or-started requests. Same balancing idea as the paper's
+§III-C row-window task decomposition, one level up: the chunk budget
+spreads long-prompt work across ticks so prefill never starves decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Dict, List, Optional
+
+
+class WaitQueue:
+    """Priority admission queue (lower priority value = served first)."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def push(self, req, priority: int = 0) -> None:
+        heapq.heappush(self._heap, (int(priority), self._seq, req))
+        self._seq += 1
+
+    def peek(self):
+        return self._heap[0][2] if self._heap else None
+
+    def pop(self):
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    prompt_tokens: int
+    priority: int = 0
+    arrival_tick: int = 0
+    arrival_time: float = 0.0
+    admit_tick: Optional[int] = None
+    first_token_tick: Optional[int] = None
+    first_token_time: Optional[float] = None
+    finish_tick: Optional[int] = None
+    finish_time: Optional[float] = None
+    new_tokens: int = 0
+
+    @property
+    def ttft_ticks(self) -> Optional[int]:
+        if self.first_token_tick is None:
+            return None
+        return self.first_token_tick - self.arrival_tick
+
+    @property
+    def ttft_seconds(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+
+class Telemetry:
+    """Engine-side accounting: per-request records + token counters."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.records: Dict[int, RequestRecord] = {}
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.ticks = 0
+        self._clock = clock
+
+    def on_submit(self, rid: int, prompt_tokens: int, priority: int = 0):
+        self.records[rid] = RequestRecord(
+            rid=rid, prompt_tokens=prompt_tokens, priority=priority,
+            arrival_tick=self.ticks, arrival_time=self._clock())
+
+    def on_admit(self, rid: int):
+        self.records[rid].admit_tick = self.ticks
+
+    def on_first_token(self, rid: int):
+        r = self.records[rid]
+        if r.first_token_tick is None:
+            r.first_token_tick = self.ticks
+            r.first_token_time = self._clock()
+
+    def on_finish(self, rid: int, new_tokens: int):
+        r = self.records[rid]
+        r.finish_tick = self.ticks
+        r.finish_time = self._clock()
+        r.new_tokens = new_tokens
+
+    def ttft_percentiles(self, pcts=(50, 95)) -> Dict[str, float]:
+        """p50/p95 time-to-first-token, in ticks and seconds."""
+        ticks = [r.ttft_ticks for r in self.records.values()
+                 if r.ttft_ticks is not None]
+        secs = [r.ttft_seconds for r in self.records.values()
+                if r.ttft_seconds is not None]
+        out: Dict[str, float] = {}
+        for p in pcts:
+            out[f"p{p}_ticks"] = _percentile(ticks, p)
+            out[f"p{p}_s"] = _percentile(secs, p)
+        return out
+
+    def finished(self) -> List[RequestRecord]:
+        return [r for r in self.records.values() if r.finish_tick is not None]
+
+
+def _percentile(xs, p) -> float:
+    """Linear-interpolated percentile; NaN-free empty case (no numpy dep
+    at import time keeps this usable from stubbed-engine tests)."""
+    if not xs:
+        return float("nan")
+    xs = sorted(float(x) for x in xs)
+    if len(xs) == 1:
+        return xs[0]
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1 - frac) + xs[hi] * frac
