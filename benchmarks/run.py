@@ -32,7 +32,8 @@ def main() -> None:
     only = args[0] if args else None
     from benchmarks import (dist_scaling, fig7_tilewidth, fig8_prefill,
                             serve_throughput, table1_suitesparse,
-                            table2_ablation, table3_gateproj)
+                            table2_ablation, table3_gateproj,
+                            tune_warmstart)
     from benchmarks.common import bench_json_payload
 
     modules = {
@@ -45,6 +46,8 @@ def main() -> None:
         "serve": serve_throughput,
         # multi-device scaling smoke (forced host mesh in a child process)
         "dist": dist_scaling,
+        # persistent-tuning warm-start: farm -> restart with zero sweeps
+        "tune": tune_warmstart,
     }
     rows = [("name", "us_per_call", "derived")]
     for name, mod in modules.items():

@@ -1,0 +1,113 @@
+"""Persistent-tuning warm-start: farm once, restart with zero sweeps.
+
+The row CI diffs (``tune/warmstart``) measures what the TuneDB buys a
+restarting replica: the cost of resolving a tuned configuration from the
+farm-produced DB (``warm``) vs re-paying the full measured
+``autotune_spmm`` sweep in-process (``cold``). The module also re-runs the
+acceptance invariant end-to-end — a ``ServeEngine`` cold-started against
+the farm DB must reach steady state with ``db_hits > 0`` and
+``sweeps == 0`` in ``stats()["tune_db"]`` — so the benchmark fails loudly
+if the warm-start wiring regresses, not just slowly.
+
+Everything runs against a throwaway DB under ``results/`` — the harness
+never touches a deployment's ``REPRO_TUNE_DB``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import JSON_EXTRAS
+from repro.configs import ARCHS, reduced_config
+from repro.models.registry import build_model
+from repro.ops import (autotune_spmm, clear_tuning_cache, set_tune_db,
+                       tuning_cache_info)
+from repro.serve.engine import Request, ServeEngine
+from repro.tune import TuneDB, run_farm, smoke_fleet
+from repro.tune.farm import _make_operands
+
+
+def _trace_engine(db_path, cfg, m, params, rng):
+    """Cold-process simulation: fresh tuned cache, engine owns the DB."""
+    clear_tuning_cache()
+    eng = ServeEngine(m, params, slots=2, max_len=64, page_size=16,
+                      chunk=32, prefill_block_q=16, tune_db=db_path)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (12,)),
+                    max_new_tokens=3) for i in range(3)]
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    return eng.stats()["tune_db"]
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+    fleet = smoke_fleet()  # CI-sized even off-smoke: the row is a guard
+    db_path = os.path.join(tempfile.mkdtemp(prefix="repro-tune-"),
+                           "tune.jsonl")
+
+    import repro.ops.tiling as _tiling
+    prior_db = _tiling._TUNE_DB  # restore after: don't leak into modules
+    set_tune_db(None)
+    clear_tuning_cache()
+    try:
+        t0 = time.perf_counter()
+        farm = run_farm(fleet, db_path, workers=0)
+        farm_s = time.perf_counter() - t0
+        assert not farm["failed"], farm["failed"]
+
+        # the fleet's first problem, re-synthesized deterministically
+        import jax.numpy as jnp
+        st, b = _make_operands(fleet[0])
+        b = jnp.asarray(b)
+
+        # cold: no DB — the replica pays the measured sweep
+        clear_tuning_cache()
+        t0 = time.perf_counter()
+        cold = autotune_spmm(st, b, codecs=tuple(fleet[0].codecs),
+                             use_db=False)
+        cold_us = (time.perf_counter() - t0) * 1e6
+
+        # warm: same problem resolved from the farm DB — no sweep
+        clear_tuning_cache()
+        set_tune_db(TuneDB(db_path))
+        t0 = time.perf_counter()
+        warm = autotune_spmm(st, b, codecs=tuple(fleet[0].codecs))
+        warm_us = (time.perf_counter() - t0) * 1e6
+        ti = tuning_cache_info()
+        assert ti.sweeps == 0 and ti.db_hits > 0, ti
+        assert warm["bn"] == cold["bn"], (warm, cold)
+
+        # acceptance invariant: engine restart against the farm DB
+        cfg = reduced_config(ARCHS["granite-3-2b"], num_layers=1,
+                             vocab_size=512)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        eng_db = _trace_engine(db_path, cfg, m, params, rng)
+        assert eng_db["db_hits"] > 0 and eng_db["sweeps"] == 0, eng_db
+
+        speedup = cold_us / max(warm_us, 1e-9)
+        csv_rows.append((
+            "tune/warmstart", warm_us,
+            f"cold_sweep_us={cold_us:.0f}_speedup={speedup:.0f}x"
+            f"_db_hits={eng_db['db_hits']}_sweeps={eng_db['sweeps']}"))
+        JSON_EXTRAS["tune/warmstart"] = {
+            "farm_jobs": farm["jobs"],
+            "farm_s": farm_s,
+            "cold_sweep_us": cold_us,
+            "warm_lookup_us": warm_us,
+            "warm_speedup": speedup,
+            "db_entries": eng_db["entries"],
+            "db_hits": eng_db["db_hits"],
+            "db_misses": eng_db["db_misses"],
+            "db_stale": eng_db["db_stale"],
+            "sweeps": eng_db["sweeps"],
+        }
+    finally:
+        set_tune_db(prior_db)
+        clear_tuning_cache()
+    return csv_rows

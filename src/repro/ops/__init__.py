@@ -68,7 +68,11 @@ structure, num_shards)`` (memoized mesh shard split),
 ``autotune_spmm(a, b)`` (measured sweep over
 ``(bn, chunks_per_task, pipeline_depth, value_codec)`` with an accuracy
 guard, whose winner steers every ``"auto"`` knob), ``tuned_entry(...)`` /
-``resolve_pipeline_depth(...)`` (lookups the planners use).
+``resolve_pipeline_depth(...)`` (lookups the planners use),
+``set_tune_db(db)`` / ``active_tune_db()`` / ``adopt_tuned_entries(...)``
+(persistent tuning-DB wiring: winners survive the process in a
+``repro.tune.TuneDB`` — ``REPRO_TUNE_DB`` points every replica at one —
+and ``autotune_spmm`` / ``tuned_entry`` consult it before sweeping).
 """
 
 from repro.ops.attention import csr_encode_block_mask, sparse_attention
@@ -85,9 +89,10 @@ from repro.ops.registry import (available_backends, register_backend,
                                 resolve_backend, resolve_format)
 from repro.ops.sddmm import sddmm
 from repro.ops.spmm import spmm
-from repro.ops.tiling import (auto_bn, autotune_spmm, clear_tuning_cache,
+from repro.ops.tiling import (active_tune_db, adopt_tuned_entries, auto_bn,
+                              autotune_spmm, clear_tuning_cache,
                               resolve_bn, resolve_pipeline_depth,
-                              tuned_entry, tuning_cache_info)
+                              set_tune_db, tuned_entry, tuning_cache_info)
 
 __all__ = [
     # ops
@@ -107,4 +112,6 @@ __all__ = [
     "cache_stats", "codec_bytes_report",
     "auto_bn", "resolve_bn", "tuning_cache_info", "clear_tuning_cache",
     "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
+    # persistent tuning DB (repro.tune) wiring
+    "set_tune_db", "active_tune_db", "adopt_tuned_entries",
 ]

@@ -257,8 +257,14 @@ def cache_stats() -> dict:
          "tasks":     {"decompositions"},
          "partition": {"hits", "misses", "size"},
          "tuning":    {"hits", "misses", "size", "autotuned"},
+         "tune_db":   {"hits", "misses", "stale", "sweeps"},
          "selections": {"pipeline_depth": {Q: count},
                         "value_codec":   {name: count}}}
+
+    ``tune_db`` is the persistent tuning database (``repro.tune``) view:
+    warm-start adoptions vs consults that fell back, plus in-process
+    measured sweeps — ``hits > 0, sweeps == 0`` is the warm-started
+    replica invariant CI asserts.
 
     The legacy accessors stay (tests and external dashboards key on them);
     this aggregator is derived from the same counters, never a second set.
@@ -272,6 +278,8 @@ def cache_stats() -> dict:
                       "size": p.partitions},
         "tuning": {"hits": t.hits, "misses": t.misses, "size": t.size,
                    "autotuned": t.autotuned},
+        "tune_db": {"hits": t.db_hits, "misses": t.db_misses,
+                    "stale": t.db_stale, "sweeps": t.sweeps},
         "selections": {"pipeline_depth": dict(t.pipeline_depths),
                        "value_codec": dict(t.value_codecs)},
     }

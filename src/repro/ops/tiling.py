@@ -21,11 +21,22 @@ Three pieces the per-kernel dispatchers used to duplicate or lacked:
   whenever the config leaves the knobs on ``"auto"``. Selections are
   counted per depth and surfaced in ``tuning_cache_info()`` (and thus
   ``ServeEngine.stats()``).
+
+* **Persistent tuning DB wiring** (``repro.tune``): when a ``TuneDB`` is
+  active — ``set_tune_db(...)`` or the ``REPRO_TUNE_DB`` env var —
+  ``tuned_entry`` consults it on an in-process miss (adopting env-valid
+  winners), ``autotune_spmm`` checks it *before* sweeping and records
+  winners *after*, and ``adopt_tuned_entries`` bulk-preloads records
+  (``ServeEngine(tune_db=...)`` warm-start). ``db_hits`` / ``db_misses``
+  / ``db_stale`` and the measured-``sweeps`` counter land in
+  ``tuning_cache_info()`` so a dashboard can prove a replica warm-started
+  (``db_hits > 0, sweeps == 0``) instead of re-paying the sweep.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
@@ -37,7 +48,14 @@ from repro.kernels.tuning import select_bn
 __all__ = ["resolve_bn", "auto_bn", "pad_cols", "unpad_cols",
            "tuning_cache_info", "clear_tuning_cache", "TuningCacheInfo",
            "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
-           "count_codec_selection"]
+           "count_codec_selection", "set_tune_db", "active_tune_db",
+           "adopt_tuned_entries", "ENV_TUNE_ITERS_VAR",
+           "ENV_TUNE_WARMUP_VAR"]
+
+# measured-timing overrides for autotune_spmm (stable DB entries need
+# stable measurements; CI smoke can dial them down)
+ENV_TUNE_ITERS_VAR = "REPRO_TUNE_ITERS"
+ENV_TUNE_WARMUP_VAR = "REPRO_TUNE_WARMUP"
 
 
 @dataclasses.dataclass
@@ -54,6 +72,13 @@ class TuningCacheInfo:
     # value-codec selection counters: codec name -> number of times a plan
     # resolved with that codec ("none" = raw dense-dtype values)
     value_codecs: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # persistent tuning DB (repro.tune) counters: warm-start adoptions,
+    # consults that found nothing, consults that found only an
+    # env-mismatched (stale) entry, and in-process measured sweeps run
+    db_hits: int = 0
+    db_misses: int = 0
+    db_stale: int = 0
+    sweeps: int = 0
 
 
 _CACHE: dict = {}
@@ -67,30 +92,173 @@ _TUNED: dict = {}
 _DEPTH_SELECTIONS: Dict[int, int] = {}
 # codec name -> times make_plan resolved a plan carrying that codec
 _CODEC_SELECTIONS: Dict[str, int] = {}
+# persistent tuning DB (repro.tune) state: the explicitly-installed handle
+# (set_tune_db), memoized env-var opens, keys known absent (negative cache
+# so a hot tuned_entry miss doesn't re-consult the DB per call), counters
+_TUNE_DB = None
+_ENV_DBS: dict = {}
+_DB_NEG: set = set()
+_DB_HITS = 0
+_DB_MISSES = 0
+_DB_STALE = 0
+_SWEEPS = 0
 
 
 def clear_tuning_cache() -> None:
-    """Drop all memoized §IV-C tile selections, measured auto-tune entries
-    and pipeline-depth / value-codec selection counters."""
-    global _HITS, _MISSES
+    """Drop all memoized §IV-C tile selections, measured auto-tune entries,
+    pipeline-depth / value-codec selection counters, and the tuning-DB
+    consult counters (``db_hits``/``db_misses``/``db_stale``/``sweeps`` —
+    ``tuning_cache_info()`` never reports stale tallies after a clear).
+    The on-disk DB itself and the active handle are untouched: subsequent
+    misses consult it afresh."""
+    global _HITS, _MISSES, _DB_HITS, _DB_MISSES, _DB_STALE, _SWEEPS
     _CACHE.clear()
     _TUNED.clear()
     _DEPTH_SELECTIONS.clear()
     _CODEC_SELECTIONS.clear()
+    _DB_NEG.clear()
     _HITS = 0
     _MISSES = 0
+    _DB_HITS = 0
+    _DB_MISSES = 0
+    _DB_STALE = 0
+    _SWEEPS = 0
 
 
 def tuning_cache_info() -> TuningCacheInfo:
     """Hit/miss/size counters for the §IV-C tile-selection cache, plus the
-    measured auto-tune entry count and per-depth / per-codec selection
-    counters."""
+    measured auto-tune entry count, per-depth / per-codec selection
+    counters, and the persistent-DB consult/sweep counters."""
     # a codec winner is mirrored under its payload dtype key (same dict
     # object), so count distinct winners, not raw entries
     return TuningCacheInfo(hits=_HITS, misses=_MISSES, size=len(_CACHE),
                            autotuned=len({id(v) for v in _TUNED.values()}),
                            pipeline_depths=dict(_DEPTH_SELECTIONS),
-                           value_codecs=dict(_CODEC_SELECTIONS))
+                           value_codecs=dict(_CODEC_SELECTIONS),
+                           db_hits=_DB_HITS, db_misses=_DB_MISSES,
+                           db_stale=_DB_STALE, sweeps=_SWEEPS)
+
+
+# ---------------------------------------------------------------------------
+# Persistent tuning DB (repro.tune) wiring
+# ---------------------------------------------------------------------------
+
+
+def set_tune_db(db):
+    """Install (or clear, with ``None``) the process-active ``TuneDB``.
+
+    Accepts a ``repro.tune.TuneDB`` or a path. An installed handle wins
+    over the ``REPRO_TUNE_DB`` env var. Returns the handle (or None).
+    """
+    global _TUNE_DB
+    if db is not None and not hasattr(db, "lookup"):
+        from repro.tune.db import TuneDB
+
+        db = TuneDB(str(db))
+    _TUNE_DB = db
+    _DB_NEG.clear()
+    return db
+
+
+def active_tune_db():
+    """The ``TuneDB`` consulted by ``tuned_entry`` / ``autotune_spmm``.
+
+    An explicitly installed handle (``set_tune_db`` — what
+    ``ServeEngine(tune_db=...)`` uses) wins; otherwise a ``REPRO_TUNE_DB``
+    path is opened lazily and memoized per path. None when neither is set
+    — every DB feature then degrades to today's in-process behavior. A DB
+    that fails to open (bad path, import error) also degrades to None:
+    the persistent layer must never take down the op path.
+    """
+    if _TUNE_DB is not None:
+        return _TUNE_DB
+    path = os.environ.get("REPRO_TUNE_DB")
+    if not path:
+        return None
+    db = _ENV_DBS.get(path)
+    if db is None:
+        try:
+            from repro.tune.db import TuneDB
+
+            db = TuneDB(path)
+        except Exception:  # noqa: BLE001 — degrade, never crash the op path
+            db = False
+        _ENV_DBS[path] = db
+    return db or None
+
+
+def _install_winner(op: str, fmt: str, shape, n: int, block, dtype,
+                    best: dict):
+    """Memoize a winner in-process (+ payload-dtype mirror for codecs)."""
+    _TUNED[_tuned_key(op, fmt, shape, n, block, dtype)] = best
+    if best.get("value_codec") not in (None, "none"):
+        # a quantized operand plans under its *payload* dtype; mirror the
+        # winner there so "auto" bn / chunks / depth resolve for it too
+        from repro.sparse.codecs import get_codec
+
+        pdtype = get_codec(best["value_codec"]).storage_dtype
+        _TUNED[_tuned_key(op, fmt, shape, n, block, pdtype)] = best
+
+
+def adopt_tuned_entries(pairs) -> int:
+    """Bulk-adopt DB records into the in-process tuned cache (warm-start).
+
+    ``pairs`` is an iterable of ``(key_tuple, winner_dict)`` as returned by
+    ``TuneDB.match`` / ``TuneDB.entries`` — key layout identical to
+    ``_tuned_key``. Already-adopted keys are skipped (idempotent: engines
+    re-preload at every admission). Each *newly* adopted entry counts one
+    ``db_hit``; returns the number adopted.
+    """
+    global _DB_HITS
+    adopted = 0
+    for key, winner in pairs:
+        if key in _TUNED:
+            continue
+        op, fmt, shape_n, block, dtype = key
+        _install_winner(op, fmt, shape_n[:-1], int(shape_n[-1]), block,
+                        dtype, dict(winner))
+        _DB_NEG.discard(key)
+        _DB_HITS += 1
+        adopted += 1
+    if adopted:
+        from repro.ops.plan import drop_auto_plans
+
+        drop_auto_plans()
+    return adopted
+
+
+def _db_consult(key) -> Optional[dict]:
+    """DB lookup behind an in-process ``tuned_entry`` miss (negative-cached)."""
+    global _DB_HITS, _DB_MISSES, _DB_STALE
+    db = active_tune_db()
+    if db is None or key in _DB_NEG:
+        return None
+    status, winner = db.lookup(key)
+    if status == "hit":
+        _DB_HITS += 1
+        op, fmt, shape_n, block, dtype = key
+        winner = dict(winner)
+        _install_winner(op, fmt, shape_n[:-1], int(shape_n[-1]), block,
+                        dtype, winner)
+        return winner
+    if status == "stale":
+        _DB_STALE += 1
+    else:
+        _DB_MISSES += 1
+    _DB_NEG.add(key)
+    return None
+
+
+def _env_tune_int(var: str, default: int, minimum: int) -> int:
+    """Parse a timing env override; malformed values fall back loudly-ish
+    (ignored) rather than crashing a tune in a mis-set environment."""
+    raw = os.environ.get(var)
+    if not raw:
+        return default
+    try:
+        return max(minimum, int(raw))
+    except ValueError:
+        return default
 
 
 def count_codec_selection(codec: str) -> None:
@@ -164,8 +332,20 @@ def _tuned_key(op: str, fmt: str, shape, n: int, block, dtype):
 
 def tuned_entry(op: str, fmt: str, shape, n: int, block, dtype
                 ) -> Optional[dict]:
-    """The measured auto-tune winner for this problem, or None."""
-    return _TUNED.get(_tuned_key(op, fmt, shape, n, block, dtype))
+    """The measured auto-tune winner for this problem, or None.
+
+    In-process winners (this process ran ``autotune_spmm``, or a DB entry
+    was already adopted) are a dict hit; otherwise the active persistent
+    ``TuneDB`` (``set_tune_db`` / ``REPRO_TUNE_DB``) is consulted once per
+    key — env-valid records are adopted (``db_hits``), absent or
+    env-mismatched ones fall back to the analytical policies
+    (``db_misses`` / ``db_stale``) and are negative-cached.
+    """
+    key = _tuned_key(op, fmt, shape, n, block, dtype)
+    entry = _TUNED.get(key)
+    if entry is not None:
+        return entry
+    return _db_consult(key)
 
 
 def resolve_pipeline_depth(depth: Union[int, str, None], *, default: int,
@@ -197,6 +377,14 @@ def resolve_pipeline_depth(depth: Union[int, str, None], *, default: int,
 
 
 def _time_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median-of-``iters`` wall time (microseconds) after ``warmup`` calls.
+
+    Median, not min: persistent DB entries are reused across replica
+    lifetimes, so a winner picked off one lucky minimum would bake
+    measurement noise into the fleet. ``REPRO_TUNE_ITERS`` /
+    ``REPRO_TUNE_WARMUP`` raise the sample count for tunes whose winners
+    are meant to be committed (``autotune_spmm`` resolves them).
+    """
     import time
 
     import jax
@@ -213,7 +401,8 @@ def _time_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
                   codecs=None, codec_tol: float = 0.05,
-                  impl=None, warmup: int = 1, iters: int = 3) -> dict:
+                  impl=None, warmup: Optional[int] = None,
+                  iters: Optional[int] = None, use_db: bool = True) -> dict:
     """Measured sweep over ``(bn, chunks_per_task, pipeline_depth,
     value_codec)``.
 
@@ -227,6 +416,17 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
     partitions are untouched). The tuned ``value_codec`` is adopted only by
     calls that opt in with ``value_codec="auto"`` — quantization changes
     numerics, so it never rides along silently.
+
+    **Persistent DB:** with a ``TuneDB`` active (``set_tune_db`` /
+    ``REPRO_TUNE_DB``) and ``use_db=True``, an env-valid DB record for
+    this problem is adopted *without measuring* (a ``db_hit``; the record
+    already carries its guard verdicts), and a freshly measured winner is
+    committed back to the DB. ``use_db=False`` forces the in-process sweep
+    and skips the commit — what the offline tune farm runs. Each candidate
+    is timed as the **median** of ``iters`` runs after ``warmup`` calls;
+    both default from ``REPRO_TUNE_ITERS`` / ``REPRO_TUNE_WARMUP`` (else
+    3 / 1) so committed entries can be measured with more samples than an
+    ad-hoc in-process tune.
 
     **Accuracy guard:** each non-``"none"`` codec candidate is first
     checked against the f32 ``impl="ref"`` result; a codec whose
@@ -247,6 +447,8 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
     the registry pick (interpret-mode kernels on CPU), so CI can exercise
     the tuner; on TPU the same call measures compiled kernels.
     """
+    global _DB_HITS, _DB_MISSES, _DB_STALE, _SWEEPS
+
     from repro.ops.config import use_config
     from repro.ops.plan import drop_auto_plans
     from repro.ops.spmm import spmm
@@ -262,6 +464,28 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
     n = int(b.shape[1])
     bm, bk = st.block
     dtype = base.dtype
+    warmup = (_env_tune_int(ENV_TUNE_WARMUP_VAR, 1, minimum=0)
+              if warmup is None else int(warmup))
+    iters = (_env_tune_int(ENV_TUNE_ITERS_VAR, 3, minimum=1)
+             if iters is None else int(iters))
+    db = active_tune_db() if use_db else None
+    key = _tuned_key("spmm", st.fmt, st.shape, n, st.block, dtype)
+    if db is not None:
+        status, winner = db.lookup(key)
+        if status == "hit":
+            _DB_HITS += 1
+            winner = dict(winner)
+            winner.setdefault("rejected_codecs", {})
+            _install_winner("spmm", st.fmt, st.shape, n, st.block, dtype,
+                            winner)
+            _DB_NEG.discard(key)
+            drop_auto_plans()
+            return dict(winner)
+        if status == "stale":
+            _DB_STALE += 1
+        else:
+            _DB_MISSES += 1
+    _SWEEPS += 1
     if bns is None:
         policy = select_bn(n, bm, bk, np.dtype(dtype).itemsize)
         bns = tuple(dict.fromkeys(
@@ -277,11 +501,13 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
     codecs = ("none", "int8") if codecs is None else codecs
     best = None
     rejected = {}
-    # the sweep itself resolves every candidate depth/codec; snapshot the
-    # selection counters so the dashboard reflects only what real traffic
+    # the sweep itself resolves every candidate depth/codec (and its spmm
+    # probes consult the DB through make_plan); snapshot the selection and
+    # DB-consult counters so the dashboard reflects only what real traffic
     # runs with, not the tuner's probing
     depth_counters = dict(_DEPTH_SELECTIONS)
     codec_counters = dict(_CODEC_SELECTIONS)
+    db_counters = (_DB_HITS, _DB_MISSES, _DB_STALE)
     try:
         ref = None
         operands = []  # (codec_name, operand) pairs that passed the guard
@@ -324,6 +550,7 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
         _DEPTH_SELECTIONS.update(depth_counters)
         _CODEC_SELECTIONS.clear()
         _CODEC_SELECTIONS.update(codec_counters)
+        _DB_HITS, _DB_MISSES, _DB_STALE = db_counters
     if best is None:
         # every candidate codec failed the guard and "none" wasn't swept:
         # nothing was timed, so there is no winner to cache
@@ -333,13 +560,16 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
             + ", ".join(f"{c}: err={e:.4g}" for c, e in rejected.items())
             + "; include 'none' in codecs= or loosen codec_tol")
     best["rejected_codecs"] = rejected
-    _TUNED[_tuned_key("spmm", st.fmt, st.shape, n, st.block, dtype)] = best
-    if best["value_codec"] != "none":
-        # a quantized operand plans under its *payload* dtype; mirror the
-        # winner there so "auto" bn / chunks / depth resolve for it too
-        pdtype = get_codec(best["value_codec"]).storage_dtype
-        _TUNED[_tuned_key("spmm", st.fmt, st.shape, n, st.block,
-                          pdtype)] = best
+    _install_winner("spmm", st.fmt, st.shape, n, st.block, dtype, best)
+    if db is not None:
+        # commit the freshly measured winner; the append is atomic and
+        # merge-safe, and a write failure must never fail the tune itself
+        try:
+            db.record(key, best, structure=st.content_digest(),
+                      source="autotune")
+        except OSError:
+            pass
+        _DB_NEG.discard(key)
     # auto-plans cached before this tune baked in the old bn selection;
     # task splits, partitions and counters are tune-invariant and kept
     drop_auto_plans()

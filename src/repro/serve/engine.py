@@ -31,6 +31,16 @@ spmm in the model auto-shards over the mesh (partitioned by nonzero work
 via the ``make_partition`` cache, so the partitioner too runs once per
 layer). ``stats()["sparse_shards"]`` reports the per-layer shard-balance
 (worst/mean stored-work ratio per cached partition).
+
+Warm-started tuning: pass ``tune_db=`` (a ``repro.tune.TuneDB`` or a path)
+and the engine installs it process-wide (``repro.ops.set_tune_db``) and
+preloads every env-valid farm-measured winner at construction and again at
+each admission — so all ``"auto"`` knobs (tile width, chunks-per-task,
+pipeline depth, value codec) resolve from disk and the replica performs
+zero in-process autotune sweeps. ``stats()["tune_db"]`` reports the
+db_hits / db_misses / db_stale / sweeps counters plus DB health; with no
+(or a corrupt) DB the engine behaves bitwise-identically to today's
+in-process path.
 """
 
 from __future__ import annotations
@@ -106,7 +116,7 @@ class ServeEngine:
                  page_size: int = 64, num_pages: Optional[int] = None,
                  chunk: int = 256, prefill_block_q: Optional[int] = None,
                  prefill_attn_budget: float = 1.0, prefill_attn_impl=None,
-                 legacy_prefill: bool = False):
+                 legacy_prefill: bool = False, tune_db=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -128,6 +138,17 @@ class ServeEngine:
         self.queue = WaitQueue()
         self.telemetry = Telemetry()
         self.ticks = 0
+        # persistent tuning DB (repro.tune): install + warm-start preload,
+        # so every "auto" knob (bn / chunks_per_task / pipeline_depth /
+        # value_codec="auto") resolves from farm-measured winners and this
+        # replica never pays an in-process sweep (db_hits > 0, sweeps == 0
+        # in stats() — the warm-start invariant). None = today's behavior.
+        self.tune_db = None
+        if tune_db is not None:
+            from repro.ops import set_tune_db
+
+            self.tune_db = set_tune_db(tune_db)
+            self._preload_tuning()
 
         self.paged = (not legacy_prefill) and _paged_capable(self.cfg)
         if self.paged:
@@ -156,6 +177,39 @@ class ServeEngine:
             self._decode_jit = jax.jit(
                 lambda p, c, tok, pos: model.decode_step(p, c, tok, pos)
             )
+
+    def _preload_tuning(self, *, refresh: bool = False) -> int:
+        """Warm the in-process tuned cache from the persistent DB.
+
+        Adopts every env-valid DB winner (``repro.ops.adopt_tuned_entries``
+        — idempotent, so the admission-time re-preload is a cheap no-op at
+        steady state), then counts the model's own sparse-layer structures
+        against the DB via their content digests so ``stats()["tune_db"]``
+        can report per-layer coverage. Runs at construction and at every
+        admission (new structures may have appeared — e.g. layers swapped
+        in, or another replica extended the DB between ``reload()`` s).
+        """
+        from repro.ops import adopt_tuned_entries
+        from repro.sparse.tensor import SparseTensor
+
+        if refresh:
+            self.tune_db.reload()
+        adopted = adopt_tuned_entries(self.tune_db.winners())
+        # per-layer coverage: which of this model's SparseTensor params
+        # have at least one farm-measured entry (matched by fmt/shape/block)
+        covered = seen = 0
+        leaves = jax.tree_util.tree_leaves(
+            self.params, is_leaf=lambda x: isinstance(x, SparseTensor))
+        for leaf in leaves:
+            if not isinstance(leaf, SparseTensor):
+                continue
+            seen += 1
+            if self.tune_db.match(op="spmm", fmt=leaf.format,
+                                  shape=leaf.shape, block=leaf.block):
+                covered += 1
+        self._tune_coverage = {"sparse_params": seen,
+                               "covered_params": covered}
+        return adopted
 
     def _scope(self):
         """Ambient OpConfig + sparse-mesh scope for every traced call."""
@@ -205,6 +259,11 @@ class ServeEngine:
 
     def _admit_ready(self):
         """Admit queue heads while a slot + prompt pages are available."""
+        if self.tune_db is not None and len(self.queue):
+            # re-preload at admission: pick up winners another replica (or
+            # the farm) appended since construction; idempotent, so at
+            # steady state this is a no-op dict scan
+            self._preload_tuning(refresh=True)
         while len(self.queue):
             s = self._free_slot()
             if s is None:
@@ -315,6 +374,8 @@ class ServeEngine:
 
     # -- legacy path (token-at-a-time prefill over ring caches) -------------
     def try_admit(self, req: Request) -> bool:
+        if self.tune_db is not None:
+            self._preload_tuning(refresh=True)
         for s in range(self.slots):
             if self.active[s] is None:
                 if req.rid not in self.telemetry.records:
@@ -427,6 +488,15 @@ class ServeEngine:
         (``repro.ops.cache_stats`` — fixed key naming; the legacy
         per-cache dataclasses remain for existing dashboards).
 
+        ``tune_db`` reports the persistent-tuning warm-start state (None
+        when the engine was built without one): the DB summary
+        (path / entries / stale_entries / quarantined / env) merged with
+        the process-wide ``db_hits`` / ``db_misses`` / ``db_stale`` /
+        ``sweeps`` counters and the model's sparse-param coverage. The
+        warm-start invariant a farm-produced DB must satisfy:
+        ``db_hits > 0 and sweeps == 0`` — the replica adopted measured
+        winners and never paid an in-process sweep.
+
         Serving-runtime keys (``docs/serving.md``): ``mode``
         ("paged"/"legacy"), ``queue_depth`` (requests waiting for
         admission), ``page_utilization`` + ``pages`` (paged-pool
@@ -439,6 +509,14 @@ class ServeEngine:
                                tuning_cache_info)
 
         tuning = tuning_cache_info()
+        tune_db = None
+        if self.tune_db is not None:
+            tune_db = dict(self.tune_db.stats(),
+                           db_hits=tuning.db_hits,
+                           db_misses=tuning.db_misses,
+                           db_stale=tuning.db_stale,
+                           sweeps=tuning.sweeps,
+                           **getattr(self, "_tune_coverage", {}))
         return {
             "active_slots": sum(a is not None for a in self.active),
             "free_slots": sum(a is None for a in self.active),
@@ -448,6 +526,7 @@ class ServeEngine:
             "value_codecs": tuning.value_codecs,
             "codec_bytes": codec_bytes_report(),
             "cache_stats": cache_stats(),
+            "tune_db": tune_db,
             "sparse_shards": partition_balance_report(),
             "mode": "paged" if self.paged else "legacy",
             "queue_depth": len(self.queue),

@@ -91,6 +91,25 @@ class SparseStructure:
             self._hash = hash(self._key())
         return self._hash
 
+    def content_digest(self) -> str:
+        """Stable hex digest of the full structure content.
+
+        Unlike ``__hash__`` (salted per process for str/bytes), this is
+        reproducible across processes and hosts — it is the structure key
+        the persistent tuning database (``repro.tune``) records, so a
+        farm-tuned entry can be matched back to the exact pruning pattern
+        it was measured on.
+        """
+        import hashlib
+
+        h = hashlib.sha1()
+        h.update(f"{self.fmt}|{self.shape}|{self.block}|{self.nnz}|"
+                 .encode())
+        h.update(self.ptrs.tobytes())
+        for ix in self.indices:
+            h.update(ix.tobytes())
+        return h.hexdigest()
+
     def __repr__(self):
         return (f"SparseStructure(fmt={self.fmt!r}, shape={self.shape}, "
                 f"block={self.block}, nnz={self.nnz})")

@@ -1,0 +1,28 @@
+"""``repro.tune`` — persistent tuning database + offline autotune farm.
+
+The measured ``repro.ops.autotune_spmm`` sweep used to live and die with
+the process; this package makes its winners durable and fleet-shareable:
+
+  TuneDB            — on-disk JSON-lines store of autotune winners, keyed by
+                      (op family, format, shape+N, block geometry, dtype)
+                      with schema versioning, env fingerprinting and
+                      corrupt-entry quarantine (db.py)
+  run_farm/TuneJob  — the offline tune farm: a declarative job fleet swept
+                      across a subprocess pool, winners merged into one DB
+                      (farm.py; CLI: tools/tune_farm.py)
+
+Warm-start wiring lives in ``repro.ops.tiling`` (``tuned_entry`` consults
+the active DB, ``autotune_spmm`` records to it, ``set_tune_db`` /
+``REPRO_TUNE_DB`` select it) and ``ServeEngine(tune_db=...)`` (preload at
+construction + admission). docs/performance.md ("Persistent tuning") is
+the user-facing story.
+"""
+
+from repro.tune.db import (ENV_DB_VAR, TUNE_DB_SCHEMA, TuneDB,
+                           env_fingerprint, problem_key)
+from repro.tune.farm import (TuneJob, default_fleet, load_fleet, run_farm,
+                             run_job, smoke_fleet)
+
+__all__ = ["TuneDB", "TUNE_DB_SCHEMA", "ENV_DB_VAR", "env_fingerprint",
+           "problem_key", "TuneJob", "run_farm", "run_job", "load_fleet",
+           "default_fleet", "smoke_fleet"]

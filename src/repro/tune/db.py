@@ -1,0 +1,288 @@
+"""``TuneDB`` — the persistent, append-merge-safe autotune database.
+
+The measured ``repro.ops.autotune_spmm`` sweep is the expensive step that
+makes the paper's kernels hit their numbers (the per-matrix adaptivity
+Acc-SpMM and cuTeSpMM show is decisive), and until now its winners lived in
+a per-process dict: every serving replica re-paid the full sweep per
+structure on startup. ``TuneDB`` serializes those winners to disk so a
+fleet tunes once — offline, in ``tools/tune_farm.py`` — and every engine
+warm-starts from the file.
+
+Design (the Inductor cache-entry playbook, adapted to JSON-lines):
+
+* **One record per line**, appended with a single ``O_APPEND`` ``write()``
+  — concurrent workers (the tune farm's subprocess pool, or several
+  engines tuning live) interleave whole lines and never clobber each
+  other. Merging is a pure read-side fold: for duplicate keys the record
+  with the best (lowest) measured ``us`` wins, ties to the latest line.
+* **Schema-versioned records** (``schema: "repro-tune/v1"``). A record
+  with a different schema, an unparsable line, or a missing/malformed
+  winner is *quarantined*: counted, skipped, and never fatal — a corrupt
+  DB degrades to the in-process sweep, bitwise-identical to running with
+  no DB at all.
+* **Environment-fingerprinted entries**. Each record carries
+  ``{"jax": jax.__version__, "backend": jax.default_backend()}``; an entry
+  measured under a different jax or backend is *stale* — kept out of the
+  live table (visible in ``stale_entries``) so a CPU-tuned DB never steers
+  a TPU deployment, and a jax upgrade invalidates old timings.
+* **Keys mirror the in-process tuning cache**: (op family, format,
+  shape + N, block geometry, value dtype) — exactly
+  ``repro.ops.tiling._tuned_key`` — plus the operand's structure content
+  digest for provenance and per-structure preloads.
+
+The ``repro.ops`` wiring (consult-on-miss, record-after-sweep, the
+``db_hits``/``db_misses``/``db_stale``/``sweeps`` counters) lives in
+``repro.ops.tiling``; ``ServeEngine(tune_db=...)`` preloads from here at
+construction and admission time. See docs/performance.md
+("Persistent tuning").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["TuneDB", "TUNE_DB_SCHEMA", "ENV_DB_VAR", "env_fingerprint",
+           "problem_key", "key_to_record", "record_to_key"]
+
+TUNE_DB_SCHEMA = "repro-tune/v1"
+
+# Path of the process-wide default DB; repro.ops.tiling.active_tune_db()
+# opens it lazily on first tuned-entry miss.
+ENV_DB_VAR = "REPRO_TUNE_DB"
+
+# required winner fields and their validators (bn must be a positive int;
+# the others may be None for formats that don't tune them)
+_WINNER_FIELDS = ("bn", "chunks_per_task", "pipeline_depth", "value_codec",
+                  "us")
+
+
+def env_fingerprint() -> Dict[str, str]:
+    """The (jax version, backend platform) pair an entry was measured under.
+
+    Timings (and even candidate availability — interpret-mode vs compiled
+    kernels) are only comparable within one fingerprint; entries from any
+    other are treated as stale at load time.
+    """
+    import jax
+
+    return {"jax": str(jax.__version__),
+            "backend": str(jax.default_backend())}
+
+
+def problem_key(op: str, fmt: str, shape, n: int, block, dtype
+                ) -> Tuple:
+    """The canonical lookup key — mirrors ``repro.ops.tiling._tuned_key``."""
+    import numpy as np
+
+    return (str(op), str(fmt or ""), tuple(int(s) for s in shape) + (int(n),),
+            (int(block[0]), int(block[1])), str(np.dtype(dtype)))
+
+
+def key_to_record(key: Tuple) -> dict:
+    """Serialize a problem key tuple into the record's ``"key"`` object."""
+    op, fmt, shape_n, block, dtype = key
+    return {"op": op, "fmt": fmt, "shape": list(shape_n[:-1]),
+            "n": int(shape_n[-1]), "block": list(block), "dtype": dtype}
+
+
+def record_to_key(k: dict) -> Tuple:
+    """Inverse of ``key_to_record`` (raises on malformed input)."""
+    return (str(k["op"]), str(k["fmt"]),
+            tuple(int(s) for s in k["shape"]) + (int(k["n"]),),
+            (int(k["block"][0]), int(k["block"][1])), str(k["dtype"]))
+
+
+def _valid_winner(w) -> bool:
+    if not isinstance(w, dict) or any(f not in w for f in _WINNER_FIELDS):
+        return False
+    try:
+        return int(w["bn"]) > 0 and float(w["us"]) >= 0
+    except (TypeError, ValueError):
+        return False
+
+
+class TuneDB:
+    """On-disk autotune-winner store (JSON-lines, append-merge-safe).
+
+    ``TuneDB(path)`` parses the file once (missing file = empty DB);
+    ``reload()`` re-reads after external writers appended. All malformed
+    input is counted, never raised — see the module docstring for the
+    quarantine / staleness rules.
+
+    Attributes after load:
+      entries      {key_tuple: record} — env-valid winners, best ``us`` per key
+      stale        {key_tuple: record} — env-mismatched entries (not served)
+      quarantined  int — lines dropped as corrupt / wrong schema / malformed
+    """
+
+    def __init__(self, path: str, *, env: Optional[dict] = None):
+        self.path = str(path)
+        self.env = dict(env) if env is not None else env_fingerprint()
+        self.entries: Dict[Tuple, dict] = {}
+        self.stale: Dict[Tuple, dict] = {}
+        self.quarantined = 0
+        self.reload()
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __repr__(self) -> str:
+        return (f"TuneDB({self.path!r}, entries={len(self.entries)}, "
+                f"stale={len(self.stale)}, quarantined={self.quarantined})")
+
+    # -- read side ----------------------------------------------------------
+    def reload(self) -> "TuneDB":
+        """(Re-)parse the file into the merged in-memory tables."""
+        self.entries, self.stale, self.quarantined = {}, {}, 0
+        try:
+            with open(self.path, "rb") as f:
+                raw = f.read()
+        except (FileNotFoundError, IsADirectoryError, PermissionError,
+                OSError):
+            return self
+        for line in raw.splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            self._fold(line)
+        return self
+
+    def _fold(self, line: bytes) -> None:
+        try:
+            rec = json.loads(line)
+        except (ValueError, UnicodeDecodeError):
+            self.quarantined += 1
+            return
+        if not isinstance(rec, dict) or rec.get("schema") != TUNE_DB_SCHEMA:
+            self.quarantined += 1
+            return
+        try:
+            key = record_to_key(rec["key"])
+        except (KeyError, TypeError, ValueError, IndexError):
+            self.quarantined += 1
+            return
+        if not _valid_winner(rec.get("winner")):
+            self.quarantined += 1
+            return
+        env = rec.get("env")
+        table = self.entries if env == self.env else self.stale
+        cur = table.get(key)
+        # merge fold: best measured time wins, ties to the later line
+        if cur is None or float(rec["winner"]["us"]) <= float(
+                cur["winner"]["us"]):
+            table[key] = rec
+
+    def lookup(self, key: Tuple) -> Tuple[str, Optional[dict]]:
+        """``("hit", winner)`` for an env-valid entry, ``("stale", None)``
+        when only an env-mismatched entry exists, else ``("miss", None)``."""
+        rec = self.entries.get(key)
+        if rec is not None:
+            return "hit", dict(rec["winner"])
+        if key in self.stale:
+            return "stale", None
+        return "miss", None
+
+    def match(self, *, op: Optional[str] = None, fmt: Optional[str] = None,
+              shape=None, block=None,
+              structure: Optional[str] = None) -> List[Tuple[Tuple, dict]]:
+        """Env-valid ``(key, winner)`` pairs filtered by problem fields.
+
+        ``shape`` matches the logical (m, k) prefix of the key (any N);
+        ``structure`` matches the recorded content digest. This is the
+        preload query ``ServeEngine`` runs per layer structure.
+        """
+        out = []
+        want_shape = (tuple(int(s) for s in shape)
+                      if shape is not None else None)
+        want_block = ((int(block[0]), int(block[1]))
+                      if block is not None else None)
+        for key, rec in self.entries.items():
+            k_op, k_fmt, k_shape_n, k_block, _ = key
+            if op is not None and k_op != op:
+                continue
+            if fmt is not None and k_fmt != fmt:
+                continue
+            if want_shape is not None and k_shape_n[:-1] != want_shape:
+                continue
+            if want_block is not None and k_block != want_block:
+                continue
+            if structure is not None and rec.get("structure") != structure:
+                continue
+            out.append((key, dict(rec["winner"])))
+        return out
+
+    def winners(self) -> List[Tuple[Tuple, dict]]:
+        """Every env-valid ``(key, winner)`` pair — the bulk warm-start
+        feed for ``repro.ops.adopt_tuned_entries``."""
+        return [(k, dict(r["winner"])) for k, r in self.entries.items()]
+
+    # -- write side ---------------------------------------------------------
+    def record(self, key: Tuple, winner: dict, *,
+               structure: Optional[str] = None,
+               source: str = "autotune") -> dict:
+        """Append one winner (atomic single-line ``O_APPEND`` write).
+
+        Also folds the record into the live tables, so a subsequent
+        ``lookup`` in this process sees it without a ``reload()``.
+        Returns the record written.
+        """
+        w = {f: winner.get(f) for f in _WINNER_FIELDS}
+        w["bn"] = int(w["bn"])
+        w["us"] = float(w["us"])
+        rec = {
+            "schema": TUNE_DB_SCHEMA,
+            "key": key_to_record(key),
+            "structure": structure,
+            "env": dict(self.env),
+            "winner": w,
+            "meta": {"ts": time.time(), "pid": os.getpid(),
+                     "source": str(source)},
+        }
+        line = (json.dumps(rec, sort_keys=True) + "\n").encode()
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+                     0o644)
+        try:
+            os.write(fd, line)
+        finally:
+            os.close(fd)
+        self._fold(line)
+        return rec
+
+    def compact(self) -> int:
+        """Rewrite the file as one merged record per key (atomic replace).
+
+        Drops quarantined lines and duplicate-key losers; keeps stale
+        (env-mismatched) entries — another fingerprint's deployment may
+        still want them. Returns the number of records written.
+        """
+        recs = [dict(r) for r in self.entries.values()]
+        recs += [dict(r) for r in self.stale.values()]
+        recs.sort(key=lambda r: json.dumps(r["key"], sort_keys=True))
+        d = os.path.dirname(os.path.abspath(self.path)) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".tunedb-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                for rec in recs:
+                    f.write(json.dumps(rec, sort_keys=True) + "\n")
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.quarantined = 0
+        return len(recs)
+
+    def stats(self) -> dict:
+        """Dashboard summary: path + live/stale/quarantined entry counts."""
+        return {"path": self.path, "entries": len(self.entries),
+                "stale_entries": len(self.stale),
+                "quarantined": self.quarantined, "env": dict(self.env)}

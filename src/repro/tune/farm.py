@@ -1,0 +1,196 @@
+"""Offline autotune farm: sweep a declarative job fleet into a ``TuneDB``.
+
+The serving story wants every measured ``(bn, chunks_per_task,
+pipeline_depth, value_codec)`` sweep paid *offline, once per fleet* — not
+per replica at startup. This module turns a declarative list of
+``TuneJob``\\ s (shape, sparsity structure, format, codec set) into DB
+records:
+
+* each job synthesizes a deterministic operand (seeded sparsity pattern),
+  runs the real measured ``repro.ops.autotune_spmm`` sweep with the DB
+  consult *disabled* (a farm always re-measures), and commits the winner;
+* jobs fan out over a subprocess pool (the Inductor
+  ``compile_worker/subproc_pool`` pattern: isolated interpreters, each
+  with its own jax runtime, so one wedged sweep can't take the farm down);
+  every worker appends to the shared DB with atomic single-line writes —
+  concurrent results merge without clobbering (``repro.tune.db``);
+* the parent reloads + compacts the DB at the end and reports winners.
+
+``tools/tune_farm.py`` is the CLI; ``workers=0`` runs jobs inline in the
+calling process (tests / CI smoke / measurement on the actual serving
+host). See docs/performance.md ("Persistent tuning").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["TuneJob", "run_farm", "run_job", "load_fleet", "default_fleet",
+           "smoke_fleet"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneJob:
+    """One (structure, dense-operand) tuning problem.
+
+    The synthesized operand is deterministic in the spec — the same job on
+    any worker reproduces the same sparsity pattern, so its DB key (which
+    covers the structure content digest) is stable across the fleet.
+    """
+
+    fmt: str = "bcsr"                 # "bcsr" | "wcsr"
+    m: int = 256
+    k: int = 256
+    n: int = 128                      # dense-operand width (the key's N)
+    block: Tuple[int, int] = (32, 32)
+    sparsity: float = 0.75
+    method: str = "random"            # sparsify block-mask method
+    dtype: str = "float32"
+    codecs: Sequence[str] = ("none",)
+    seed: int = 0
+    impl: Optional[str] = None        # backend override for the sweep
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuneJob":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"TuneJob: unknown fields {sorted(unknown)}; "
+                             f"accepted: {sorted(known)}")
+        kw = dict(d)
+        if "block" in kw:
+            kw["block"] = (int(kw["block"][0]), int(kw["block"][1]))
+        if "codecs" in kw:
+            kw["codecs"] = tuple(kw["codecs"])
+        return cls(**kw)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["block"] = list(d["block"])
+        d["codecs"] = list(d["codecs"])
+        return d
+
+
+def default_fleet() -> List[TuneJob]:
+    """A representative serving fleet: FFN-ish BCSR + attention-ish WCSR
+    shapes across sparsities and codecs."""
+    jobs = []
+    for fmt, block in (("bcsr", (32, 32)), ("wcsr", (32, 8))):
+        for m, k in ((256, 256), (512, 256)):
+            for sparsity in (0.5, 0.8):
+                jobs.append(TuneJob(fmt=fmt, m=m, k=k, n=128, block=block,
+                                    sparsity=sparsity,
+                                    codecs=("none", "int8")))
+    return jobs
+
+
+def smoke_fleet() -> List[TuneJob]:
+    """The CI-sized fleet: two tiny jobs, one per format."""
+    return [
+        TuneJob(fmt="bcsr", m=64, k=64, n=32, block=(16, 16), sparsity=0.5),
+        TuneJob(fmt="wcsr", m=64, k=64, n=32, block=(16, 8), sparsity=0.5),
+    ]
+
+
+def load_fleet(path: str) -> List[TuneJob]:
+    """Load a declarative fleet: a JSON list of ``TuneJob`` field dicts."""
+    with open(path) as f:
+        spec = json.load(f)
+    if not isinstance(spec, list):
+        raise ValueError(f"{path}: fleet spec must be a JSON list of job "
+                         "objects")
+    return [TuneJob.from_dict(d) for d in spec]
+
+
+def _make_operands(job: TuneJob):
+    """Synthesize the job's (SparseTensor, dense B) pair deterministically."""
+    import numpy as np
+
+    from repro.sparse import sparsify
+
+    rng = np.random.default_rng(job.seed + 1)
+    w = rng.normal(size=(job.m, job.k)).astype(job.dtype)
+    st = sparsify(w, format=job.fmt, sparsity=job.sparsity,
+                  method=job.method, block=job.block, seed=job.seed)
+    b = np.asarray(rng.normal(size=(job.k, job.n)), job.dtype)
+    return st, b
+
+
+def run_job(job: TuneJob, db_path: Optional[str] = None) -> dict:
+    """Run one measured sweep and (optionally) commit the winner.
+
+    Returns ``{"job", "key", "winner"}``. With ``db_path`` the winner is
+    appended to that DB (atomic, merge-safe — safe to call concurrently
+    from many workers against one path).
+    """
+    import jax.numpy as jnp
+
+    from repro.ops import autotune_spmm
+    from repro.tune.db import TuneDB, problem_key
+
+    st, b = _make_operands(job)
+    b = jnp.asarray(b)
+    winner = autotune_spmm(st, b, codecs=tuple(job.codecs), impl=job.impl,
+                           use_db=False)
+    key = problem_key("spmm", st.format, st.shape, job.n, st.block,
+                      st.dtype)
+    if db_path:
+        TuneDB(db_path).record(
+            key, winner, structure=st.structure.content_digest(),
+            source="farm")
+    winner = dict(winner)
+    winner.pop("rejected_codecs", None)
+    return {"job": job.to_dict(), "key": list(key[:2]) + [list(key[2]),
+            list(key[3]), key[4]], "winner": winner}
+
+
+def _pool_entry(job_dict: dict, db_path: Optional[str]) -> dict:
+    """Top-level subprocess entry (must be importable under spawn)."""
+    return run_job(TuneJob.from_dict(job_dict), db_path)
+
+
+def run_farm(jobs: Iterable[TuneJob], db_path: str, *, workers: int = 0,
+             compact: bool = True, timeout: Optional[float] = None
+             ) -> dict:
+    """Sweep ``jobs`` into the DB at ``db_path``; return a summary.
+
+    ``workers > 0`` fans jobs out over a spawn-based subprocess pool
+    (each worker owns a fresh jax runtime; results stream into the shared
+    DB via atomic appends, so a crashed worker loses only its own jobs).
+    ``workers=0`` runs inline. A job that raises is reported in
+    ``"failed"`` — the farm commits every winner it got, it never gives
+    up the fleet over one bad job.
+    """
+    jobs = list(jobs)
+    results, failed = [], []
+    if workers > 0:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+
+        ctx = mp.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=ctx) as pool:
+            futs = {pool.submit(_pool_entry, j.to_dict(), db_path): j
+                    for j in jobs}
+            for fut, job in futs.items():
+                try:
+                    results.append(fut.result(timeout=timeout))
+                except Exception as e:  # noqa: BLE001 — farm must survive
+                    failed.append({"job": job.to_dict(), "error": repr(e)})
+    else:
+        for job in jobs:
+            try:
+                results.append(run_job(job, db_path))
+            except Exception as e:  # noqa: BLE001
+                failed.append({"job": job.to_dict(), "error": repr(e)})
+    from repro.tune.db import TuneDB
+
+    db = TuneDB(db_path)
+    if compact and results:
+        db.compact()
+    return {"db": db.stats(), "jobs": len(jobs), "tuned": len(results),
+            "failed": failed, "results": results,
+            "workers": int(workers), "pid": os.getpid()}

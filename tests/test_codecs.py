@@ -396,7 +396,8 @@ def test_cache_stats_unifies_counters(rng):
     sw.quantize("int8").matmul(b, impl="kernel_interpret")
     sw.matmul(b, impl="kernel_interpret")
     cs = ops.cache_stats()
-    assert set(cs) == {"plan", "tasks", "partition", "tuning", "selections"}
+    assert set(cs) == {"plan", "tasks", "partition", "tuning", "selections",
+                       "tune_db"}
     # derived from the same counters as the legacy accessors — never a
     # second set that can drift
     p = ops.plan_cache_info()
@@ -409,6 +410,8 @@ def test_cache_stats_unifies_counters(rng):
     assert cs["selections"]["value_codec"] == t.value_codecs
     assert cs["selections"]["value_codec"].get("int8", 0) >= 1
     assert cs["selections"]["value_codec"].get("none", 0) >= 1
+    assert cs["tune_db"] == {"hits": t.db_hits, "misses": t.db_misses,
+                             "stale": t.db_stale, "sweeps": t.sweeps}
     # the bytes-moved model reports the quantized plan
     rep = ops.codec_bytes_report()
     mine = [r for r in rep if r["codec"] == "int8"

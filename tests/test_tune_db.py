@@ -1,0 +1,398 @@
+"""Persistent tuning DB (repro.tune): robustness + warm-start invariants.
+
+The contract under test: a farm-produced DB lets a cold process resolve
+measured winners with zero in-process sweeps, while a missing, corrupt,
+wrong-schema, or env-mismatched DB degrades to exactly today's in-process
+path — never a crash — with the fallback visible in the
+``db_hits`` / ``db_misses`` / ``db_stale`` / ``sweeps`` counters.
+"""
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.ops as ops
+import repro.ops.tiling as tiling
+from repro.sparse import SparseTensor, wcsr_from_dense
+from repro.tune import (TuneDB, TuneJob, run_farm, run_job, smoke_fleet)
+from repro.tune.db import (TUNE_DB_SCHEMA, env_fingerprint, key_to_record,
+                           problem_key, record_to_key)
+
+SWEEP = dict(impl="kernel_interpret", bns=(32,), chunks_per_task=(4,),
+             depths=(1,), warmup=0, iters=1)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tuning(monkeypatch):
+    """Every test starts and ends with no DB installed and clean counters."""
+    monkeypatch.delenv("REPRO_TUNE_DB", raising=False)
+    monkeypatch.delenv(tiling.ENV_TUNE_ITERS_VAR, raising=False)
+    monkeypatch.delenv(tiling.ENV_TUNE_WARMUP_VAR, raising=False)
+    ops.set_tune_db(None)
+    tiling._ENV_DBS.clear()
+    ops.clear_tuning_cache()
+    yield
+    ops.set_tune_db(None)
+    tiling._ENV_DBS.clear()
+    ops.clear_tuning_cache()
+
+
+def _operands(rng, m=64, k=96, n=64):
+    d = rng.normal(size=(m, k)).astype(np.float32)
+    d[np.abs(d) < 0.8] = 0.0
+    st = SparseTensor.wrap(wcsr_from_dense(d, b_row=32, b_col=8))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    return st, b
+
+
+def _key(st, n):
+    return problem_key("spmm", st.format, st.shape, n, st.block, st.dtype)
+
+
+def _winner(us=10.0, bn=32):
+    return {"bn": bn, "chunks_per_task": 4, "pipeline_depth": 1,
+            "value_codec": "none", "us": us}
+
+
+# ---------------------------------------------------------------------------
+# TuneDB core: round-trip, merge, quarantine, staleness
+# ---------------------------------------------------------------------------
+
+
+def test_db_roundtrip_and_key_codec(tmp_path, rng):
+    st, b = _operands(rng)
+    key = _key(st, 64)
+    assert record_to_key(key_to_record(key)) == key
+    db = TuneDB(tmp_path / "t.jsonl")
+    assert db.lookup(key) == ("miss", None)
+    db.record(key, _winner(), structure="abc", source="test")
+    status, w = db.lookup(key)
+    assert status == "hit" and w["bn"] == 32 and w["us"] == 10.0
+    # a fresh handle reads the same entry back from disk
+    db2 = TuneDB(tmp_path / "t.jsonl")
+    assert db2.lookup(key)[0] == "hit"
+    assert len(db2) == 1 and db2.quarantined == 0
+
+
+def test_db_merge_best_us_wins(tmp_path, rng):
+    """Duplicate keys fold read-side: lowest measured us wins — exactly the
+    concurrent-writer story (appends never clobber, merge at load)."""
+    st, _ = _operands(rng)
+    key = _key(st, 64)
+    path = tmp_path / "t.jsonl"
+    # two independent handles on one path = two concurrent workers
+    TuneDB(path).record(key, _winner(us=50.0, bn=64))
+    TuneDB(path).record(key, _winner(us=10.0, bn=32))
+    TuneDB(path).record(key, _winner(us=30.0, bn=128))
+    db = TuneDB(path)
+    _, w = db.lookup(key)
+    assert (w["bn"], w["us"]) == (32, 10.0)
+    # compact keeps only the merged winner and stays loadable
+    n = db.compact()
+    assert n == 1
+    with open(path) as f:
+        assert len(f.read().splitlines()) == 1
+    assert TuneDB(path).lookup(key)[0] == "hit"
+
+
+def test_db_quarantines_corrupt_and_wrong_schema(tmp_path, rng):
+    st, _ = _operands(rng)
+    key = _key(st, 64)
+    path = tmp_path / "t.jsonl"
+    good = TuneDB(path)
+    good.record(key, _winner())
+    with open(path, "a") as f:
+        f.write("{ not json at all\n")                      # corrupt line
+        f.write(json.dumps({"schema": "repro-tune/v999",    # wrong schema
+                            "key": key_to_record(key),
+                            "env": env_fingerprint(),
+                            "winner": _winner()}) + "\n")
+        f.write(json.dumps({"schema": TUNE_DB_SCHEMA,       # malformed key
+                            "key": {"op": "spmm"},
+                            "env": env_fingerprint(),
+                            "winner": _winner()}) + "\n")
+        f.write(json.dumps({"schema": TUNE_DB_SCHEMA,       # malformed winner
+                            "key": key_to_record(key),
+                            "env": env_fingerprint(),
+                            "winner": {"bn": -3}}) + "\n")
+    db = TuneDB(path)
+    assert db.quarantined == 4
+    assert db.lookup(key)[0] == "hit"  # the good record still serves
+
+
+def test_db_env_mismatch_is_stale_not_served(tmp_path, rng):
+    st, _ = _operands(rng)
+    key = _key(st, 64)
+    path = tmp_path / "t.jsonl"
+    other = TuneDB(path, env={"jax": "0.0.1", "backend": "elsewhere"})
+    other.record(key, _winner())
+    db = TuneDB(path)  # real env
+    assert db.lookup(key) == ("stale", None)
+    assert len(db.entries) == 0 and len(db.stale) == 1
+    # compact keeps stale records for the other fingerprint's deployments
+    db.compact()
+    assert TuneDB(path, env={"jax": "0.0.1",
+                             "backend": "elsewhere"}).lookup(key)[0] == "hit"
+
+
+def test_db_missing_file_and_unreadable_path_degrade(tmp_path):
+    db = TuneDB(tmp_path / "never-written.jsonl")
+    assert len(db) == 0 and db.quarantined == 0
+    # a directory path can't be read or appended — still no crash on load
+    db2 = TuneDB(tmp_path)
+    assert len(db2) == 0
+
+
+# ---------------------------------------------------------------------------
+# autotune_spmm wiring: consult-before-sweep, record-after, counters
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_records_then_warm_starts(tmp_path, rng):
+    st, b = _operands(rng)
+    path = tmp_path / "t.jsonl"
+    ops.set_tune_db(TuneDB(path))
+    cold = ops.autotune_spmm(st, b, **SWEEP)
+    info = ops.tuning_cache_info()
+    assert info.sweeps == 1 and info.db_misses == 1 and info.db_hits == 0
+    # the winner was committed with the structure digest for provenance
+    rec = next(iter(TuneDB(path).entries.values()))
+    assert rec["structure"] == st.structure.content_digest()
+    assert rec["meta"]["source"] == "autotune"
+
+    # "restart": clean process state, fresh handle on the same file
+    ops.clear_tuning_cache()
+    ops.set_tune_db(TuneDB(path))
+    warm = ops.autotune_spmm(st, b, **SWEEP)
+    info = ops.tuning_cache_info()
+    assert info.sweeps == 0 and info.db_hits == 1
+    assert warm["bn"] == cold["bn"]
+    assert warm["value_codec"] == cold["value_codec"]
+    # the adopted winner steers "auto" plans exactly like a local tune
+    plan = ops.make_plan(st, int(b.shape[1]), ops.current_config())
+    assert plan.bn == cold["bn"]
+
+
+def test_tuned_entry_cold_consult_adopts_from_db(tmp_path, rng):
+    """make_plan/resolve_bn reach the DB through tuned_entry without anyone
+    calling autotune_spmm in this 'process'."""
+    st, b = _operands(rng)
+    key = _key(st, 64)
+    db = TuneDB(tmp_path / "t.jsonl")
+    db.record(key, _winner(bn=32))
+    ops.set_tune_db(db)
+    entry = ops.tuned_entry("spmm", st.format, st.shape, 64, st.block,
+                            st.dtype)
+    assert entry is not None and entry["bn"] == 32
+    assert ops.tuning_cache_info().db_hits == 1
+    # second lookup is an in-process hit: no second DB consult counted
+    ops.tuned_entry("spmm", st.format, st.shape, 64, st.block, st.dtype)
+    assert ops.tuning_cache_info().db_hits == 1
+
+
+def test_corrupt_db_falls_back_to_sweep_never_crashes(tmp_path, rng):
+    st, b = _operands(rng)
+    path = tmp_path / "t.jsonl"
+    with open(path, "w") as f:
+        f.write("\x00\xff garbage\n{broken\n")
+    ops.set_tune_db(str(path))  # path form: engine/env usage
+    best = ops.autotune_spmm(st, b, **SWEEP)
+    info = ops.tuning_cache_info()
+    assert info.sweeps == 1 and info.db_hits == 0 and info.db_misses == 1
+    assert best["bn"] == 32
+    # ...and the fresh winner was appended after the garbage, readably
+    db = TuneDB(path)
+    assert len(db) == 1 and db.quarantined == 2
+
+
+def test_env_mismatched_db_falls_back_and_counts_stale(tmp_path, rng):
+    st, b = _operands(rng)
+    path = tmp_path / "t.jsonl"
+    other = TuneDB(path, env={"jax": "0.0.1", "backend": "elsewhere"})
+    other.record(_key(st, 64), _winner(bn=999))
+    ops.set_tune_db(TuneDB(path))
+    best = ops.autotune_spmm(st, b, **SWEEP)
+    info = ops.tuning_cache_info()
+    assert info.sweeps == 1 and info.db_stale == 1 and info.db_hits == 0
+    assert best["bn"] == 32  # swept locally, never adopted bn=999
+
+
+def test_no_db_behavior_identical_and_sweep_counted(rng):
+    st, b = _operands(rng)
+    y_plain = np.asarray(ops.spmm(st, b, impl="kernel_interpret"))
+    best = ops.autotune_spmm(st, b, **SWEEP)
+    assert ops.tuning_cache_info().sweeps == 1
+    assert ops.tuning_cache_info().db_misses == 0  # no DB: nothing consulted
+    assert best["bn"] == 32
+    y_ref = np.asarray(ops.spmm(st, b, impl="ref"))
+    np.testing.assert_allclose(y_plain, y_ref,
+                               atol=2e-4 * max(1, np.abs(y_ref).max()))
+
+
+def test_env_var_db_and_bad_path_degrade(tmp_path, monkeypatch, rng):
+    st, b = _operands(rng)
+    db = TuneDB(tmp_path / "env.jsonl")
+    db.record(_key(st, 64), _winner(bn=32))
+    monkeypatch.setenv("REPRO_TUNE_DB", str(tmp_path / "env.jsonl"))
+    tiling._ENV_DBS.clear()
+    assert ops.active_tune_db() is not None
+    entry = ops.tuned_entry("spmm", st.format, st.shape, 64, st.block,
+                            st.dtype)
+    assert entry is not None and ops.tuning_cache_info().db_hits == 1
+    # unreadable env path: active_tune_db degrades to None, ops still work
+    monkeypatch.setenv("REPRO_TUNE_DB", str(tmp_path))  # a directory
+    tiling._ENV_DBS.clear()
+    ops.clear_tuning_cache()
+    ops.spmm(st, b, impl="kernel_interpret")
+
+
+def test_adopt_tuned_entries_idempotent_counts_new_only(tmp_path, rng):
+    st, _ = _operands(rng)
+    db = TuneDB(tmp_path / "t.jsonl")
+    db.record(_key(st, 64), _winner())
+    db.record(_key(st, 128), _winner(us=20.0))
+    assert ops.adopt_tuned_entries(db.winners()) == 2
+    assert ops.adopt_tuned_entries(db.winners()) == 0  # re-preload: no-op
+    assert ops.tuning_cache_info().db_hits == 2
+
+
+# ---------------------------------------------------------------------------
+# Satellites: timing env overrides + full counter reset
+# ---------------------------------------------------------------------------
+
+
+def test_tune_iters_warmup_env_overrides(monkeypatch, rng):
+    seen = {}
+    real = tiling._time_us
+
+    def spy(fn, *args, warmup, iters):
+        seen.update(warmup=warmup, iters=iters)
+        return real(fn, *args, warmup=warmup, iters=iters)
+
+    monkeypatch.setattr(tiling, "_time_us", spy)
+    st, b = _operands(rng)
+    monkeypatch.setenv(tiling.ENV_TUNE_ITERS_VAR, "2")
+    monkeypatch.setenv(tiling.ENV_TUNE_WARMUP_VAR, "0")
+    ops.autotune_spmm(st, b, impl="kernel_interpret", bns=(32,),
+                      chunks_per_task=(4,), depths=(1,))
+    assert seen == {"warmup": 0, "iters": 2}
+    # explicit kwargs beat the env; malformed env falls back to defaults
+    ops.clear_tuning_cache()
+    monkeypatch.setenv(tiling.ENV_TUNE_ITERS_VAR, "not-a-number")
+    ops.autotune_spmm(st, b, impl="kernel_interpret", bns=(32,),
+                      chunks_per_task=(4,), depths=(1,), warmup=0, iters=1)
+    assert seen == {"warmup": 0, "iters": 1}
+    assert tiling._env_tune_int(tiling.ENV_TUNE_ITERS_VAR, 3, minimum=1) == 3
+    monkeypatch.setenv(tiling.ENV_TUNE_ITERS_VAR, "-5")  # clamped to minimum
+    assert tiling._env_tune_int(tiling.ENV_TUNE_ITERS_VAR, 3, minimum=1) == 1
+
+
+def test_clear_tuning_cache_resets_every_counter(tmp_path, rng):
+    st, b = _operands(rng)
+    ops.set_tune_db(TuneDB(tmp_path / "t.jsonl"))
+    ops.autotune_spmm(st, b, **SWEEP)
+    ops.spmm(st, b, impl="kernel_interpret")  # count a depth/codec selection
+    info = ops.tuning_cache_info()
+    assert info.autotuned == 1 and info.sweeps == 1
+    assert info.pipeline_depths and info.value_codecs
+    ops.clear_tuning_cache()
+    info = ops.tuning_cache_info()
+    assert dataclasses_zeroed(info)
+
+
+def dataclasses_zeroed(info) -> bool:
+    return (info.hits == info.misses == info.size == info.autotuned == 0
+            and info.pipeline_depths == {} and info.value_codecs == {}
+            and info.db_hits == info.db_misses == info.db_stale == 0
+            and info.sweeps == 0)
+
+
+# ---------------------------------------------------------------------------
+# Farm: jobs, inline run, merge across writers
+# ---------------------------------------------------------------------------
+
+
+def test_tune_job_roundtrip_and_unknown_fields():
+    job = TuneJob(fmt="wcsr", block=(16, 8), codecs=("none", "int8"))
+    assert TuneJob.from_dict(job.to_dict()) == job
+    with pytest.raises(ValueError, match="unknown fields"):
+        TuneJob.from_dict({"fmt": "bcsr", "bogus": 1})
+
+
+def test_run_farm_inline_produces_warm_startable_db(tmp_path):
+    path = str(tmp_path / "farm.jsonl")
+    summary = run_farm(smoke_fleet(), path, workers=0)
+    assert summary["tuned"] == 2 and not summary["failed"]
+    db = TuneDB(path)
+    assert len(db) == 2 and db.quarantined == 0
+    fmts = {k[1] for k in db.entries}
+    assert fmts == {"bcsr", "wcsr"}
+    # every record carries the deterministic structure digest: re-running
+    # a job on another worker maps to the same provenance
+    job = smoke_fleet()[0]
+    r1 = run_job(job)
+    r2 = run_job(job)
+    assert r1["key"] == r2["key"]
+
+
+def test_run_farm_survives_a_bad_job(tmp_path):
+    path = str(tmp_path / "farm.jsonl")
+    jobs = [smoke_fleet()[0],
+            TuneJob(fmt="nope", m=64, k=64, n=32, block=(16, 16))]
+    summary = run_farm(jobs, path, workers=0)
+    assert summary["tuned"] == 1
+    assert len(summary["failed"]) == 1
+    assert summary["failed"][0]["job"]["fmt"] == "nope"
+    assert len(TuneDB(path)) == 1  # the good winner was still committed
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine warm-start (the acceptance criterion, in-suite)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_engine(tune_db):
+    import jax
+
+    from repro.configs import ARCHS, reduced_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced_config(ARCHS["granite-3-2b"], num_layers=1, vocab_size=512)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, slots=1, max_len=32, page_size=8, chunk=8,
+                      prefill_block_q=8, tune_db=tune_db)
+    rng = np.random.default_rng(0)
+    req = Request(rid=0, prompt=rng.integers(0, 512, (6,)), max_new_tokens=2)
+    eng.run([req])
+    assert req.done
+    return eng
+
+
+def test_engine_warm_starts_with_zero_sweeps(tmp_path):
+    path = str(tmp_path / "farm.jsonl")
+    run_farm(smoke_fleet(), path, workers=0)
+    ops.clear_tuning_cache()
+    ops.set_tune_db(None)
+    eng = _tiny_engine(path)
+    db = eng.stats()["tune_db"]
+    assert db["entries"] == 2 and db["quarantined"] == 0
+    assert db["db_hits"] > 0, db
+    assert db["sweeps"] == 0, db
+
+
+def test_engine_with_corrupt_db_serves_normally(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text("definitely { not json\n" * 3)
+    eng = _tiny_engine(str(path))
+    db = eng.stats()["tune_db"]
+    assert db["entries"] == 0 and db["quarantined"] == 3
+    assert db["sweeps"] == 0  # degraded path never sweeps on its own
+
+
+def test_engine_without_db_reports_none():
+    eng = _tiny_engine(None)
+    assert eng.stats()["tune_db"] is None

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Offline autotune farm CLI — sweep a job fleet into a persistent TuneDB.
+
+Runs the measured ``repro.ops.autotune_spmm`` sweep for every job in a
+declarative fleet and commits the winners to a ``repro.tune.TuneDB`` file,
+fanning out over a subprocess pool when ``--workers > 0`` (each worker owns
+an isolated jax runtime; concurrent appends merge without clobbering).
+Point serving replicas at the produced file via ``REPRO_TUNE_DB=<path>`` or
+``ServeEngine(tune_db=<path>)`` and they warm-start with zero in-process
+sweeps. See docs/performance.md ("Persistent tuning").
+
+Usage:
+
+    # CI-sized smoke fleet, inline, into tune.jsonl
+    python tools/tune_farm.py --db tune.jsonl --smoke
+
+    # representative serving fleet over 4 workers
+    python tools/tune_farm.py --db tune.jsonl --workers 4
+
+    # custom fleet (JSON list of TuneJob field dicts)
+    python tools/tune_farm.py --db tune.jsonl --fleet fleet.json
+
+    # inspect / compact an existing DB without tuning
+    python tools/tune_farm.py --db tune.jsonl --stats
+    python tools/tune_farm.py --db tune.jsonl --compact
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="Sweep an autotune job fleet into a persistent TuneDB.")
+    p.add_argument("--db", required=True,
+                   help="TuneDB path (JSON-lines; created if missing)")
+    fleet = p.add_mutually_exclusive_group()
+    fleet.add_argument("--fleet", metavar="FILE",
+                       help="JSON list of TuneJob field dicts")
+    fleet.add_argument("--smoke", action="store_true",
+                       help="CI-sized two-job fleet")
+    p.add_argument("--workers", type=int, default=0,
+                   help="subprocess pool size (0 = run jobs inline)")
+    p.add_argument("--no-compact", action="store_true",
+                   help="skip the final merge-rewrite of the DB file")
+    p.add_argument("--stats", action="store_true",
+                   help="print DB stats as JSON and exit (no tuning)")
+    p.add_argument("--compact", action="store_true",
+                   help="compact the DB file and exit (no tuning)")
+    args = p.parse_args(argv)
+
+    from repro.tune import (TuneDB, default_fleet, load_fleet, run_farm,
+                            smoke_fleet)
+
+    if args.stats or args.compact:
+        db = TuneDB(args.db)
+        if args.compact:
+            n = db.compact()
+            print(f"compacted {args.db}: {n} records", file=sys.stderr)
+        print(json.dumps(db.stats(), indent=2, sort_keys=True))
+        return 0
+
+    if args.fleet:
+        jobs = load_fleet(args.fleet)
+    elif args.smoke:
+        jobs = smoke_fleet()
+    else:
+        jobs = default_fleet()
+
+    summary = run_farm(jobs, args.db, workers=args.workers,
+                       compact=not args.no_compact)
+    print(json.dumps(summary, indent=2, sort_keys=True))
+    if summary["failed"]:
+        print(f"{len(summary['failed'])}/{summary['jobs']} jobs failed",
+              file=sys.stderr)
+        return 1
+    print(f"tuned {summary['tuned']}/{summary['jobs']} jobs -> {args.db}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
