@@ -30,10 +30,10 @@ def main() -> None:
         # suite constants) are imported below
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     only = args[0] if args else None
-    from benchmarks import (dist_scaling, fig7_tilewidth, fig8_prefill,
-                            serve_throughput, table1_suitesparse,
-                            table2_ablation, table3_gateproj,
-                            tune_warmstart)
+    from benchmarks import (dist_scaling, dynamic_structure, fig7_tilewidth,
+                            fig8_prefill, serve_throughput,
+                            table1_suitesparse, table2_ablation,
+                            table3_gateproj, tune_warmstart)
     from benchmarks.common import bench_json_payload
 
     modules = {
@@ -48,6 +48,8 @@ def main() -> None:
         "dist": dist_scaling,
         # persistent-tuning warm-start: farm -> restart with zero sweeps
         "tune": tune_warmstart,
+        # dynamic structure: delta-patch vs full-rebuild host cost
+        "dyn": dynamic_structure,
     }
     rows = [("name", "us_per_call", "derived")]
     for name, mod in modules.items():

@@ -78,6 +78,11 @@ class PlanCacheInfo:
     partition_hits: int = 0
     partition_misses: int = 0
     partitions: int = 0
+    # structure-delta patching (repro.sparse.delta): cache entries derived
+    # by patching the base structure's entry — neither a hit nor a full
+    # rebuild miss
+    plan_patched: int = 0
+    partition_patched: int = 0
 
 
 _PLANS: dict = {}
@@ -88,6 +93,15 @@ _MISSES = 0
 _DECOMPOSITIONS = 0
 _P_HITS = 0
 _P_MISSES = 0
+_PLAN_PATCHED = 0
+_PART_PATCHED = 0
+
+
+def reset_patch_counters() -> None:
+    """Zero the delta-patch counters (``clear_tuning_cache`` calls this)."""
+    global _PLAN_PATCHED, _PART_PATCHED
+    _PLAN_PATCHED = 0
+    _PART_PATCHED = 0
 
 
 def clear_plan_cache() -> None:
@@ -101,6 +115,10 @@ def clear_plan_cache() -> None:
     _DECOMPOSITIONS = 0
     _P_HITS = 0
     _P_MISSES = 0
+    reset_patch_counters()
+    from repro.sparse.delta import reset_delta_stats
+
+    reset_delta_stats()
 
 
 def drop_auto_plans() -> None:
@@ -123,7 +141,9 @@ def plan_cache_info() -> PlanCacheInfo:
                          task_decompositions=_DECOMPOSITIONS,
                          size=len(_PLANS),
                          partition_hits=_P_HITS, partition_misses=_P_MISSES,
-                         partitions=len(_PARTITIONS))
+                         partitions=len(_PARTITIONS),
+                         plan_patched=_PLAN_PATCHED,
+                         partition_patched=_PART_PATCHED)
 
 
 def _as_structure(structure, caller: str) -> SparseStructure:
@@ -198,6 +218,12 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     if plan is not None:
         _HITS += 1
         return plan
+    plan = _try_patch_plan(structure, key, cpt)
+    if plan is not None:
+        global _PLAN_PATCHED
+        _PLAN_PATCHED += 1
+        _PLANS[key] = plan
+        return plan
     _MISSES += 1
     bn = resolve_bn(cfg.bn, int(n), bm, bk, dtype, op="spmm",
                     fmt=structure.fmt, shape=structure.shape, impl="kernel")
@@ -206,6 +232,41 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
                 tasks=tasks, pipeline_depth=depth, value_codec=codec)
     _PLANS[key] = plan
     return plan
+
+
+def _try_patch_plan(structure: SparseStructure, key, cpt) -> Optional[Plan]:
+    """Patch the base structure's plan across a registered delta.
+
+    If ``structure`` was produced by ``repro.sparse.delta`` and its base
+    was planned with the same (n, dtype, bn, chunks_per_task, depth,
+    codec), reuse the base tile width verbatim and patch only the touched
+    windows' tasks (``patch_tasks``) — O(touched + tasks-copy) instead of
+    re-deriving everything. Counted as ``plan_patched``, not as a miss;
+    the patched tasks land in ``_TASKS`` without bumping
+    ``task_decompositions`` (the amortization counter serving CI watches).
+    """
+    from repro.sparse.delta import delta_of, patch_tasks
+
+    d = delta_of(structure)
+    if d is None:
+        return None
+    base_plan = _PLANS.get((d.base,) + key[1:])
+    if base_plan is None:
+        return None
+    tasks = None
+    if structure.fmt == "wcsr":
+        tkey = (structure, cpt)
+        tasks = _TASKS.get(tkey)
+        if tasks is None:
+            base_tasks = _TASKS.get((d.base, cpt), base_plan.tasks)
+            if base_tasks is None:
+                return None
+            tasks = patch_tasks(d, base_tasks, cpt)
+            _TASKS[tkey] = tasks
+    return Plan(structure=structure, n=base_plan.n, bn=base_plan.bn,
+                chunks_per_task=cpt, tasks=tasks,
+                pipeline_depth=base_plan.pipeline_depth,
+                value_codec=base_plan.value_codec)
 
 
 def make_partition(structure, num_shards: int):
@@ -218,13 +279,25 @@ def make_partition(structure, num_shards: int):
     spmm call — serving partitions each layer once. ``structure`` may be a
     ``SparseStructure`` or anything carrying one (``SparseTensor``).
     """
-    global _P_HITS, _P_MISSES
+    global _P_HITS, _P_MISSES, _PART_PATCHED
     structure = _as_structure(structure, "make_partition")
     key = (structure, int(num_shards))
     part = _PARTITIONS.get(key)
     if part is not None:
         _P_HITS += 1
         return part
+    from repro.sparse.delta import delta_of
+
+    d = delta_of(structure)
+    if d is not None:
+        base_part = _PARTITIONS.get((d.base, int(num_shards)))
+        if base_part is not None:
+            from repro.parallel.sparse import patch_partition
+
+            part = patch_partition(d, base_part)
+            _PART_PATCHED += 1
+            _PARTITIONS[key] = part
+            return part
     _P_MISSES += 1
     from repro.parallel.sparse import partition_structure
 
@@ -253,35 +326,54 @@ def cache_stats() -> dict:
     one dashboard-facing view — ``ServeEngine.stats()["cache_stats"]``
     consumes it — with a fixed shape::
 
-        {"plan":      {"hits", "misses", "size"},
+        {"plan":      {"hits", "misses", "patched", "size"},
          "tasks":     {"decompositions"},
-         "partition": {"hits", "misses", "size"},
+         "partition": {"hits", "misses", "patched", "size"},
          "tuning":    {"hits", "misses", "size", "autotuned"},
          "tune_db":   {"hits", "misses", "stale", "sweeps"},
          "selections": {"pipeline_depth": {Q: count},
-                        "value_codec":   {name: count}}}
+                        "value_codec":   {name: count}},
+         "delta":     {"appends", "retires", "plan_patched",
+                       "partition_patched", "groups_reused",
+                       "groups_requantized", "shards_reused",
+                       "shards_reshipped"}}
 
     ``tune_db`` is the persistent tuning database (``repro.tune``) view:
     warm-start adoptions vs consults that fell back, plus in-process
     measured sweeps — ``hits > 0, sweeps == 0`` is the warm-started
     replica invariant CI asserts.
 
+    ``delta`` is the dynamic-sparsity view (``repro.sparse.delta``):
+    structure edits applied, plan/partition cache entries derived by
+    patching instead of a full rebuild, codec value groups spliced bitwise
+    vs requantized, and mesh shards reused vs reshipped. A growing-mask
+    decode loop at steady state shows ``plan_patched`` advancing while
+    ``plan.misses`` stays flat — the amortized-flat host-cost invariant
+    (``ServeEngine.stats()["structure_deltas"]`` republishes this block).
+
     The legacy accessors stay (tests and external dashboards key on them);
     this aggregator is derived from the same counters, never a second set.
     """
+    from repro.sparse.delta import delta_stats
+
     p = plan_cache_info()
     t = tuning_cache_info()
+    delta = delta_stats()
+    delta["plan_patched"] = p.plan_patched
+    delta["partition_patched"] = p.partition_patched
     return {
-        "plan": {"hits": p.hits, "misses": p.misses, "size": p.size},
+        "plan": {"hits": p.hits, "misses": p.misses,
+                 "patched": p.plan_patched, "size": p.size},
         "tasks": {"decompositions": p.task_decompositions},
         "partition": {"hits": p.partition_hits, "misses": p.partition_misses,
-                      "size": p.partitions},
+                      "patched": p.partition_patched, "size": p.partitions},
         "tuning": {"hits": t.hits, "misses": t.misses, "size": t.size,
                    "autotuned": t.autotuned},
         "tune_db": {"hits": t.db_hits, "misses": t.db_misses,
                     "stale": t.db_stale, "sweeps": t.sweeps},
         "selections": {"pipeline_depth": dict(t.pipeline_depths),
                        "value_codec": dict(t.value_codecs)},
+        "delta": delta,
     }
 
 

@@ -14,6 +14,12 @@ Because that structure is concrete static metadata, a ``SparseTensor`` also
 makes the WCSR kernel path traceable under ``jit`` (raw WCSR operands still
 raise: their ``window_ptr`` would be a tracer).
 
+Dynamic structures are transparent here: when the operand's structure came
+from a ``repro.sparse.delta`` edit, the ``make_plan`` call below patches
+the base structure's cached plan (task splice + shifted offsets) instead
+of re-planning from scratch — spmm call sites never distinguish a grown
+mask from a fresh one.
+
 Multi-device: a ``repro.parallel.sparse.ShardedSparseTensor`` operand
 dispatches to the ``"spmm/sharded"`` op family (local kernels per device +
 collective combine), and inside a ``use_sparse_mesh(mesh)`` scope plain

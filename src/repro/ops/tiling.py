@@ -109,6 +109,9 @@ def clear_tuning_cache() -> None:
     pipeline-depth / value-codec selection counters, and the tuning-DB
     consult counters (``db_hits``/``db_misses``/``db_stale``/``sweeps`` —
     ``tuning_cache_info()`` never reports stale tallies after a clear).
+    The structure-delta counters (``delta_stats()`` and the
+    ``plan_patched``/``partition_patched`` tallies) reset too — like the
+    DB counters, they are serving-session telemetry, not cache contents.
     The on-disk DB itself and the active handle are untouched: subsequent
     misses consult it afresh."""
     global _HITS, _MISSES, _DB_HITS, _DB_MISSES, _DB_STALE, _SWEEPS
@@ -123,6 +126,12 @@ def clear_tuning_cache() -> None:
     _DB_MISSES = 0
     _DB_STALE = 0
     _SWEEPS = 0
+    # local imports: tiling sits below plan/delta in the import graph
+    from repro.ops.plan import reset_patch_counters
+    from repro.sparse.delta import reset_delta_stats
+
+    reset_patch_counters()
+    reset_delta_stats()
 
 
 def tuning_cache_info() -> TuningCacheInfo:

@@ -75,6 +75,7 @@ from repro.sparse.tensor import SparseTensor
 __all__ = [
     "SparsePartition",
     "partition_structure",
+    "patch_partition",
     "ShardedSparseTensor",
     "shard_tensor",
     "use_sparse_mesh",
@@ -294,33 +295,90 @@ def partition_structure(structure: SparseStructure, num_shards: int, *,
     if num_shards < 1:
         raise ValueError(f"num_shards must be >= 1, got {num_shards}")
     g = structure
+    bounds = _partition_bounds(g, num_shards, snap_tol)
+    shards = [_shard_structure(g, int(bounds[s]), int(bounds[s + 1]))
+              for s in range(num_shards)]
+    return SparsePartition(g, num_shards, bounds, shards)
+
+
+def _partition_bounds(g: SparseStructure, num_shards: int,
+                      snap_tol: float) -> np.ndarray:
+    """Balanced shard boundaries in stored units (chunks / blocks)."""
     if g.fmt == "wcsr":
         b_col = g.block[1]
-        total_chunks = g.nnz // b_col
-        snap = np.asarray(g.ptrs, np.int64) // b_col
-        bounds = _balanced_boundaries(total_chunks, num_shards, snap, snap_tol)
-        shards = []
-        for s in range(num_shards):
-            c0, c1 = int(bounds[s]) * b_col, int(bounds[s + 1]) * b_col
-            shards.append(SparseStructure(
-                fmt="wcsr", shape=g.shape, block=g.block, nnz=c1 - c0,
-                ptrs=np.clip(g.ptrs, c0, c1) - c0,
-                indices=(g.indices[0][c0:c1],)))
-    elif g.fmt == "bcsr":
-        total = g.nnz  # real (non-padding) stored blocks
-        bounds = _balanced_boundaries(total, num_shards,
-                                      np.asarray(g.ptrs, np.int64), snap_tol)
-        shards = []
-        for s in range(num_shards):
-            s0, s1 = int(bounds[s]), int(bounds[s + 1])
-            shards.append(SparseStructure(
-                fmt="bcsr", shape=g.shape, block=g.block, nnz=s1 - s0,
-                ptrs=np.clip(g.ptrs, s0, s1) - s0,
-                indices=(g.indices[0][s0:s1], g.indices[1][s0:s1])))
-    else:
-        raise ValueError(
-            f"partition_structure: unsupported format {g.fmt!r}")
-    return SparsePartition(g, num_shards, bounds, shards)
+        return _balanced_boundaries(g.nnz // b_col, num_shards,
+                                    np.asarray(g.ptrs, np.int64) // b_col,
+                                    snap_tol)
+    if g.fmt == "bcsr":
+        return _balanced_boundaries(g.nnz, num_shards,
+                                    np.asarray(g.ptrs, np.int64), snap_tol)
+    raise ValueError(f"partition_structure: unsupported format {g.fmt!r}")
+
+
+def _shard_structure(g: SparseStructure, u0: int, u1: int) -> SparseStructure:
+    """One shard's local structure over unit range ``[u0, u1)``."""
+    if g.fmt == "wcsr":
+        b_col = g.block[1]
+        c0, c1 = u0 * b_col, u1 * b_col
+        return SparseStructure(
+            fmt="wcsr", shape=g.shape, block=g.block, nnz=c1 - c0,
+            ptrs=np.clip(g.ptrs, c0, c1) - c0,
+            indices=(g.indices[0][c0:c1],))
+    return SparseStructure(
+        fmt="bcsr", shape=g.shape, block=g.block, nnz=u1 - u0,
+        ptrs=np.clip(g.ptrs, u0, u1) - u0,
+        indices=(g.indices[0][u0:u1], g.indices[1][u0:u1]))
+
+
+def patch_partition(delta, base: SparsePartition, *,
+                    snap_tol: float = 0.2) -> SparsePartition:
+    """Patch a cached partition across a structure delta.
+
+    Boundaries are recomputed exactly as ``partition_structure`` would (the
+    balance pass is O(num_shards · log windows) — cheap), so the patched
+    partition is *structurally identical* to a from-scratch rebuild of the
+    new structure. The saving is in the shards: a shard whose unit range
+    lies entirely before the delta's changed span (and kept its bounds), or
+    entirely after it (bounds shifted by exactly the span's size change),
+    has bitwise-identical local structure content — the base shard object
+    is reused, and with it its memoized device uploads *and* its per-shard
+    ``make_plan`` entries. Only shards whose chunk/block assignment
+    actually changed are rebuilt — those are the ones a mesh must reship
+    (``shards_reused`` / ``shards_reshipped`` in ``delta_stats()``).
+
+    Why suffix shards can be reused: for every row the clipped local ptr
+    ``clip(ptr_new, n0, n1) - n0`` equals ``clip(ptr_base, b0, b1) - b0``
+    when ``(n0, n1) == (b0 + shift, b1 + shift)`` and the range sits past
+    the span — rows before the touched span clip to the lower bound on
+    both sides, rows after it carry the same uniform shift as the bounds —
+    and the index-array slice is the base slice verbatim.
+
+    Called by ``repro.ops.make_partition`` (counted as
+    ``partition_patched``); not meant for direct use.
+    """
+    from repro.sparse.delta import _count
+
+    g = delta.new
+    u0b, u1b = delta.span_base
+    shift = delta.unit_shift
+    bounds = _partition_bounds(g, base.num_shards, snap_tol)
+    shards = []
+    reused = reshipped = 0
+    for s in range(base.num_shards):
+        b0, b1 = int(base.bounds[s]), int(base.bounds[s + 1])
+        n0, n1 = int(bounds[s]), int(bounds[s + 1])
+        if (n0, n1) == (b0, b1) and b1 <= u0b:
+            shards.append(base.shards[s])
+            reused += 1
+        elif (n0, n1) == (b0 + shift, b1 + shift) and b0 >= u1b:
+            shards.append(base.shards[s])
+            reused += 1
+        else:
+            shards.append(_shard_structure(g, n0, n1))
+            reshipped += 1
+    _count("shards_reused", reused)
+    _count("shards_reshipped", reshipped)
+    return SparsePartition(g, base.num_shards, bounds, shards)
 
 
 # ---------------------------------------------------------------------------

@@ -488,6 +488,17 @@ class ServeEngine:
         (``repro.ops.cache_stats`` — fixed key naming; the legacy
         per-cache dataclasses remain for existing dashboards).
 
+        ``structure_deltas`` is the dynamic-sparsity view
+        (``cache_stats()["delta"]``): structure edits applied
+        (``appends``/``retires``), plan/partition cache entries derived by
+        *patching* the base structure's entry (``plan_patched`` /
+        ``partition_patched``) instead of a full rebuild, codec value
+        groups spliced bitwise vs requantized, and mesh shards reused vs
+        reshipped. The growing-mask amortization invariant
+        (``docs/serving.md``): after warmup, a decode loop whose attention
+        mask grows every step advances ``plan_patched`` while
+        ``plan_cache.misses`` stays flat — zero full re-plans.
+
         ``tune_db`` reports the persistent-tuning warm-start state (None
         when the engine was built without one): the DB summary
         (path / entries / stale_entries / quarantined / env) merged with
@@ -517,6 +528,7 @@ class ServeEngine:
                            db_stale=tuning.db_stale,
                            sweeps=tuning.sweeps,
                            **getattr(self, "_tune_coverage", {}))
+        cs = cache_stats()
         return {
             "active_slots": sum(a is not None for a in self.active),
             "free_slots": sum(a is None for a in self.active),
@@ -525,7 +537,8 @@ class ServeEngine:
             "pipeline_depths": tuning.pipeline_depths,
             "value_codecs": tuning.value_codecs,
             "codec_bytes": codec_bytes_report(),
-            "cache_stats": cache_stats(),
+            "cache_stats": cs,
+            "structure_deltas": cs["delta"],
             "tune_db": tune_db,
             "sparse_shards": partition_balance_report(),
             "mode": "paged" if self.paged else "legacy",

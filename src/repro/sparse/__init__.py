@@ -82,6 +82,21 @@ Exported symbols (one-liners; see each docstring for the full story):
 * ``SparseTensor`` — the format-agnostic operand: ``st @ b``, ``.T``,
   ``.astype``, ``.to("wcsr", block=...)``, ``.todense()``,
   ``.shard(mesh, axis)``; a pytree with only values as leaves.
+
+**Dynamic structure (deltas)**
+
+* ``append_blocks`` / ``retire_blocks`` (BCSR) and
+  ``append_window_chunks`` / ``retire_window_chunks`` (WCSR) — structural
+  edits returning ``(new_structure, StructureDelta)``; the tensor-level
+  twins (``SparseTensor.append_blocks`` & co.) also splice values,
+  requantizing only touched codec groups.
+* ``StructureDelta`` / ``delta_of(structure)`` — the edit record and its
+  registry: ``make_plan``/``make_partition`` patch cached entries across
+  registered deltas instead of rebuilding (see docs/formats.md
+  "Structure deltas").
+* ``delta_stats()`` — appends/retires, groups reused vs requantized,
+  shards reused vs reshipped (mirrored in ``repro.ops.cache_stats()
+  ["delta"]`` and ``ServeEngine.stats()["structure_deltas"]``).
 """
 
 from repro.sparse.codecs import (ValueCodec, get_codec,
@@ -89,6 +104,9 @@ from repro.sparse.codecs import (ValueCodec, get_codec,
                                  registered_value_codecs)
 from repro.sparse.convert import (convert, register_conversion,
                                   registered_conversions)
+from repro.sparse.delta import (StructureDelta, append_blocks,
+                                append_window_chunks, delta_of, delta_stats,
+                                retire_blocks, retire_window_chunks)
 from repro.sparse.formats import (BCSR, WCSR, bcsr_from_dense, bcsr_from_mask,
                                   bcsr_to_dense, bcsr_transpose,
                                   block_mask_from_dense, rcm_permutation,
@@ -122,4 +140,8 @@ __all__ = [
     # value codecs
     "ValueCodec", "register_value_codec", "registered_value_codecs",
     "get_codec",
+    # dynamic structure (deltas)
+    "StructureDelta", "append_blocks", "retire_blocks",
+    "append_window_chunks", "retire_window_chunks", "delta_of",
+    "delta_stats",
 ]

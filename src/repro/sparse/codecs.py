@@ -55,6 +55,7 @@ __all__ = [
     "resolve_codec_name",
     "encode_format_values",
     "decode_format_values",
+    "decode_window_values",
     "encode_rowblocks",
     "decode_rowblocks",
     "fake_quant_rowblocks",
@@ -223,6 +224,25 @@ def decode_format_values(fmt: str, block: Tuple[int, int], payload: jax.Array,
         out = _decode(r, scales.reshape(1, nchunks, 1), dtype)
         return out.reshape(payload.shape)
     raise ValueError(f"decode_format_values: unsupported format {fmt!r}")
+
+
+def decode_window_values(block: Tuple[int, int], payload: jax.Array,
+                         scales: jax.Array, codec: str,
+                         dtype=jnp.float32) -> jax.Array:
+    """Dequantize one window's chunk-aligned WCSR column slice.
+
+    The incremental-requantization path (``repro.sparse.delta.
+    patch_values``) reconstructs only the *touched* window in f32 before
+    re-encoding it; every untouched chunk's payload and scale are spliced
+    bitwise without ever being decoded. ``payload`` is ``[b_row, width]``
+    (a ``b_col``-multiple slice) with ``scales`` ``[1, width // b_col]`` —
+    exactly the window's rows of the wire format.
+    """
+    c = get_codec(codec)
+    if c.name == "none":
+        raise ValueError("decode_window_values: codec 'none' stores raw "
+                         "values; nothing to decode")
+    return decode_format_values("wcsr", block, payload, scales, dtype)
 
 
 # ---------------------------------------------------------------------------

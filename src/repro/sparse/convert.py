@@ -18,6 +18,12 @@ Keyword arguments are forwarded to the edges that accept them (by
 signature); a keyword no edge on the path accepts is an error, so typos
 don't silently vanish. ``SparseTensor`` inputs convert through their raw
 container and are re-wrapped on the way out.
+
+Structures produced by ``repro.sparse.delta`` edits (``append_blocks`` &
+co.) flow through this graph unchanged: a delta-patched tensor densifies
+and re-converts exactly like one built from scratch, because the delta
+builders reproduce the ``bcsr_from_mask`` / ``wcsr_from_dense``
+normalization (sorted indices, padding, empty-row coverage) bit for bit.
 """
 
 from __future__ import annotations

@@ -1,0 +1,593 @@
+"""Structure deltas: incremental append/retire of stored blocks / chunks.
+
+Every cache in the stack — plans, task decompositions, partitions, tuned
+entries, codec encodings — keys on an immutable ``SparseStructure``, so a
+serving workload whose sparsity mutates (growing causal block masks during
+decode, MoE expert-routing shifts, in-training magnitude pruning) would
+re-plan, re-partition and re-quantize from scratch on every step. This
+module makes structure changes *first-class*: the four delta builders
+
+* ``append_blocks`` / ``retire_blocks``          (BCSR, block granular)
+* ``append_window_chunks`` / ``retire_window_chunks``  (WCSR, column granular)
+
+each return a brand-new (still immutable) ``SparseStructure`` **plus** a
+``StructureDelta`` describing exactly what moved: which block-rows /
+row-windows were touched, how untouched value groups map from base to new
+positions, and the half-open span of group slots outside which the change
+is a pure prefix-copy / uniform shift. Downstream consumers patch instead
+of rebuilding:
+
+* ``repro.ops.make_plan`` reuses the base plan's tile width and patches
+  only the touched windows' tasks (``patch_tasks``) — counted as
+  ``plan_patched`` in ``cache_stats()``, not as a miss;
+* ``repro.ops.make_partition`` → ``repro.parallel.sparse.patch_partition``
+  recomputes boundaries but reships only the shards whose unit range
+  intersects the changed span (pure-shift shards reuse the base shard
+  object, and with it its per-shard plan cache entries);
+* ``patch_values`` splices value arrays: for codec tensors the untouched
+  groups' payload *and scales* are copied bitwise from the base encoding —
+  only the touched groups are requantized
+  (``groups_requantized`` / ``groups_reused`` counters).
+
+The new structures reproduce ``bcsr_from_mask`` / ``wcsr_from_dense``
+conventions exactly (row-major block order, coverage blocks for emptied
+BCSR rows, ``b_col``-aligned window widths with ``-1`` column padding, the
+``max(total, b_col)`` floor), so a delta chain is bit-identical in
+structure to a from-scratch rebuild — the property
+``tests/test_structure_delta.py`` checks differentially. Deltas also
+splice per-row content digests, making ``content_digest()`` O(touched)
+along a chain.
+
+Delta records are kept in a registry keyed by the *new* structure
+(``delta_of``), which is how ``make_plan`` / ``make_partition`` discover
+that an incoming structure is one step away from something they already
+planned. Padding normalization: delta-produced BCSR structures use the
+default ``npad = max(nnz, 1)`` padding; bases built with an explicit
+``pad_to`` are re-padded to the default on the first delta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.sparse.structure import SparseStructure
+
+__all__ = [
+    "StructureDelta",
+    "append_blocks",
+    "retire_blocks",
+    "append_window_chunks",
+    "retire_window_chunks",
+    "delta_of",
+    "patch_tasks",
+    "patch_values",
+    "delta_stats",
+    "reset_delta_stats",
+]
+
+
+# ---------------------------------------------------------------------------
+# Counters (reset by clear_plan_cache / clear_tuning_cache)
+# ---------------------------------------------------------------------------
+
+def _zero_stats() -> Dict[str, int]:
+    return {
+        "appends": 0,
+        "retires": 0,
+        "groups_reused": 0,
+        "groups_requantized": 0,
+        "shards_reused": 0,
+        "shards_reshipped": 0,
+    }
+
+
+_STATS = _zero_stats()
+
+
+def delta_stats() -> Dict[str, int]:
+    """Counters for the incremental-structure paths (copy).
+
+    ``appends``/``retires`` count delta builder calls;
+    ``groups_reused``/``groups_requantized`` count codec value groups
+    (BCSR blocks / WCSR chunks) spliced bitwise vs re-encoded by
+    ``patch_values``; ``shards_reused``/``shards_reshipped`` count
+    per-device shards kept vs rebuilt by ``patch_partition``.
+    """
+    return dict(_STATS)
+
+
+def reset_delta_stats() -> None:
+    _STATS.update(_zero_stats())
+
+
+def _count(key: str, n: int = 1) -> None:
+    _STATS[key] += n
+
+
+# ---------------------------------------------------------------------------
+# The delta record
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StructureDelta:
+    """One structural edit: ``base`` structure -> ``new`` structure.
+
+    Group/unit convention: a *group* is the codec scale granule and the
+    partitioner unit — one stored block for BCSR, one packed ``b_col``
+    column chunk for WCSR. ``kept_src``/``kept_dst`` map every group whose
+    stored content is unchanged from its base slot to its new slot;
+    ``fresh_dst`` lists new-structure groups that must be (re)encoded.
+    ``span_base``/``span_new`` bound the edit: group slots below the span
+    are identical in place, slots at/above it are the base suffix shifted
+    uniformly by ``unit_shift`` — the invariant partition patching leans
+    on. ``moved_src``/``moved_dst``/``fresh_pos`` are flat *value*
+    positions (WCSR packed columns; BCSR block slots) for value splicing.
+    """
+
+    fmt: str                       # "bcsr" | "wcsr"
+    kind: str                      # "append" | "retire"
+    base: SparseStructure
+    new: SparseStructure
+    touched_rows: Tuple[int, ...]  # block-rows (bcsr) / windows (wcsr)
+    kept_src: np.ndarray           # base group slots copied verbatim...
+    kept_dst: np.ndarray           # ...to these new group slots
+    fresh_dst: np.ndarray          # new group slots needing (re)encode
+    span_base: Tuple[int, int]     # changed group-slot span in base
+    span_new: Tuple[int, int]      # changed group-slot span in new
+    moved_src: Optional[np.ndarray] = None  # wcsr: surviving col positions
+    moved_dst: Optional[np.ndarray] = None
+    fresh_pos: Optional[np.ndarray] = None  # appended entries, caller order
+
+    @property
+    def unit_shift(self) -> int:
+        """Uniform slot shift of the base suffix past ``span_base``."""
+        return ((self.span_new[1] - self.span_new[0])
+                - (self.span_base[1] - self.span_base[0]))
+
+
+_DELTAS: Dict[SparseStructure, StructureDelta] = {}
+
+
+def delta_of(structure: SparseStructure) -> Optional[StructureDelta]:
+    """The delta that produced ``structure``, if it came from one.
+
+    ``make_plan`` / ``make_partition`` probe this on a cache miss: if the
+    structure is one delta away from an already-planned base, they patch
+    the base entry instead of rebuilding.
+    """
+    return _DELTAS.get(structure)
+
+
+def _finish(d: StructureDelta) -> StructureDelta:
+    _count("appends" if d.kind == "append" else "retires")
+    # splice per-row digests: only touched rows are rehashed
+    dig = list(d.base.row_digests())
+    for r in d.touched_rows:
+        dig[r] = d.new._row_digest(r)
+    d.new._rowdig = tuple(dig)
+    _DELTAS[d.new] = d
+    return d
+
+
+# ---------------------------------------------------------------------------
+# BCSR: append / retire stored blocks
+# ---------------------------------------------------------------------------
+
+
+def _check_fmt(g, fmt: str, op: str) -> SparseStructure:
+    if not isinstance(g, SparseStructure):
+        from repro.sparse.structure import structure_of
+
+        g = structure_of(g)
+    if g.fmt != fmt:
+        raise ValueError(f"{op}: expects a {fmt} structure, got {g.fmt!r}")
+    return g
+
+
+def _as_index(x, name: str) -> np.ndarray:
+    a = np.atleast_1d(np.asarray(x, np.int64)).ravel()
+    if a.size == 0:
+        raise ValueError(f"{name}: empty request")
+    return a
+
+
+def _build_bcsr(g: SparseStructure, rows: np.ndarray,
+                cols: np.ndarray) -> SparseStructure:
+    """New BCSR structure from sorted (row, col) block lists, reproducing
+    ``bcsr_from_mask`` conventions (default padding)."""
+    m_b = g.shape[0] // g.block[0]
+    nnz = len(rows)
+    npad = max(nnz, 1)
+    prow = np.full(npad, rows[-1] if nnz else 0, np.int64)
+    pcol = np.zeros(npad, np.int64)
+    prow[:nnz] = rows
+    pcol[:nnz] = cols
+    ptr = np.zeros(m_b + 1, np.int64)
+    np.add.at(ptr, rows + 1, 1)
+    ptr = np.cumsum(ptr)
+    return SparseStructure(fmt="bcsr", shape=g.shape, block=g.block,
+                           nnz=nnz, ptrs=ptr, indices=(prow, pcol))
+
+
+def append_blocks(structure, rows, cols
+                  ) -> Tuple[SparseStructure, StructureDelta]:
+    """Add stored blocks at block coordinates ``(rows[i], cols[i])``.
+
+    Returns ``(new_structure, delta)``. Appending a block that is already
+    stored (including a zero *coverage* block left by ``retire_blocks``)
+    is an error — retire it first if it must be replaced.
+    """
+    g = _check_fmt(structure, "bcsr", "append_blocks")
+    bm, bk = g.block
+    m_b, k_b = g.shape[0] // bm, g.shape[1] // bk
+    rows = _as_index(rows, "append_blocks: rows")
+    cols = _as_index(cols, "append_blocks: cols")
+    if rows.shape != cols.shape:
+        raise ValueError("append_blocks: rows/cols length mismatch")
+    if ((rows < 0) | (rows >= m_b) | (cols < 0) | (cols >= k_b)).any():
+        raise ValueError(
+            f"append_blocks: block coords out of range for "
+            f"{m_b}x{k_b} block grid")
+    nnz = g.nnz
+    b_rows = g.indices[0][:nnz].astype(np.int64)
+    b_cols = g.indices[1][:nnz].astype(np.int64)
+    base_keys = b_rows * k_b + b_cols
+    new_keys = rows * k_b + cols
+    if len(np.unique(new_keys)) != len(new_keys):
+        raise ValueError("append_blocks: duplicate (row, col) in request")
+    clash = np.isin(new_keys, base_keys)
+    if clash.any():
+        i = int(np.flatnonzero(clash)[0])
+        raise ValueError(f"append_blocks: block ({rows[i]}, {cols[i]}) "
+                         "already stored")
+    order = np.argsort(np.concatenate([base_keys, new_keys]), kind="stable")
+    dst = np.empty(len(order), np.int64)
+    dst[order] = np.arange(len(order))
+    fresh_pos = dst[nnz:]
+    new = _build_bcsr(g, np.concatenate([b_rows, rows])[order],
+                      np.concatenate([b_cols, cols])[order])
+    lo = int(np.searchsorted(base_keys, new_keys.min()))
+    hi = int(np.searchsorted(base_keys, new_keys.max()))
+    d = StructureDelta(
+        fmt="bcsr", kind="append", base=g, new=new,
+        touched_rows=tuple(int(r) for r in np.unique(rows)),
+        kept_src=np.arange(nnz), kept_dst=dst[:nnz],
+        fresh_dst=np.sort(fresh_pos),
+        span_base=(lo, hi), span_new=(lo, hi + len(new_keys)),
+        fresh_pos=fresh_pos)
+    _finish(d)
+    return new, d
+
+
+def retire_blocks(structure, rows, cols
+                  ) -> Tuple[SparseStructure, StructureDelta]:
+    """Remove stored blocks at block coordinates ``(rows[i], cols[i])``.
+
+    A block-row whose last stored block is retired gets a zero *coverage*
+    block at column 0 — the unsharded BCSR kernel only writes output rows
+    it visits, so every block-row must keep at least one stored block
+    (the same rule ``bcsr_from_mask(cover_empty_rows=True)`` applies).
+    """
+    g = _check_fmt(structure, "bcsr", "retire_blocks")
+    bm, bk = g.block
+    m_b, k_b = g.shape[0] // bm, g.shape[1] // bk
+    rows = _as_index(rows, "retire_blocks: rows")
+    cols = _as_index(cols, "retire_blocks: cols")
+    if rows.shape != cols.shape:
+        raise ValueError("retire_blocks: rows/cols length mismatch")
+    nnz = g.nnz
+    if nnz == 0:
+        raise ValueError("retire_blocks: structure stores no blocks")
+    b_rows = g.indices[0][:nnz].astype(np.int64)
+    b_cols = g.indices[1][:nnz].astype(np.int64)
+    base_keys = b_rows * k_b + b_cols
+    rm_keys = rows * k_b + cols
+    if len(np.unique(rm_keys)) != len(rm_keys):
+        raise ValueError("retire_blocks: duplicate (row, col) in request")
+    pos = np.searchsorted(base_keys, rm_keys)
+    bad = (pos >= nnz) | (base_keys[np.minimum(pos, nnz - 1)] != rm_keys)
+    if bad.any():
+        i = int(np.flatnonzero(bad)[0])
+        raise ValueError(f"retire_blocks: block ({rows[i]}, {cols[i]}) "
+                         "not stored")
+    keep = np.ones(nnz, bool)
+    keep[pos] = False
+    kept_rows, kept_cols = b_rows[keep], b_cols[keep]
+    counts = np.bincount(kept_rows, minlength=m_b)
+    emptied = np.asarray(
+        [r for r in np.unique(rows) if counts[r] == 0], np.int64)
+    cov_keys = emptied * k_b  # coverage block at (r, 0)
+    order = np.argsort(np.concatenate([base_keys[keep], cov_keys]),
+                       kind="stable")
+    dst = np.empty(len(order), np.int64)
+    dst[order] = np.arange(len(order))
+    n_kept = int(keep.sum())
+    new = _build_bcsr(
+        g, np.concatenate([kept_rows, emptied])[order],
+        np.concatenate([kept_cols, np.zeros(len(emptied), np.int64)])[order])
+    lo, hi = int(pos.min()), int(pos.max()) + 1
+    d = StructureDelta(
+        fmt="bcsr", kind="retire", base=g, new=new,
+        touched_rows=tuple(int(r) for r in np.unique(rows)),
+        kept_src=np.flatnonzero(keep), kept_dst=dst[:n_kept],
+        fresh_dst=np.sort(dst[n_kept:]),
+        span_base=(lo, hi),
+        span_new=(lo, hi - len(rm_keys) + len(emptied)),
+        fresh_pos=dst[n_kept:])
+    _finish(d)
+    return new, d
+
+
+# ---------------------------------------------------------------------------
+# WCSR: append / retire packed columns of one row-window
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, to: int) -> int:
+    return -(-x // to) * to
+
+
+def _wcsr_edit(g: SparseStructure, w: int, union: np.ndarray,
+               old_real: np.ndarray, kind: str,
+               touched_cols) -> Tuple[SparseStructure, StructureDelta]:
+    """Shared repack: window ``w``'s stored column set becomes ``union``."""
+    b_row, b_col = g.block
+    ptr = g.ptrs.astype(np.int64)
+    p0, p1 = int(ptr[w]), int(ptr[w + 1])
+    end_base = int(ptr[-1])
+    width_new = _round_up(len(union), b_col)
+    delta_w = width_new - (p1 - p0)
+    new_ptr = ptr.copy()
+    new_ptr[w + 1:] += delta_w
+    total_new = max(int(new_ptr[-1]), b_col)
+    ci = np.full(total_new, -1, np.int64)
+    ci[:p0] = g.indices[0][:p0]
+    ci[p0:p0 + len(union)] = union
+    ci[p0 + width_new:p0 + width_new + (end_base - p1)] = \
+        g.indices[0][p1:end_base]
+    new = SparseStructure(fmt="wcsr", shape=g.shape, block=g.block,
+                          nnz=total_new, ptrs=new_ptr, indices=(ci,))
+    c_p0, c_p1, c_end = p0 // b_col, p1 // b_col, end_base // b_col
+    c_shift = delta_w // b_col
+    kept_src = np.concatenate([np.arange(c_p0), np.arange(c_p1, c_end)])
+    kept_dst = np.concatenate([np.arange(c_p0),
+                               np.arange(c_p1, c_end) + c_shift])
+    # surviving columns of the window: old packed position -> new position
+    surv = np.flatnonzero(np.isin(old_real, union))
+    moved_src = p0 + surv
+    moved_dst = p0 + np.searchsorted(union, old_real[surv])
+    fresh_pos = (p0 + np.searchsorted(union, touched_cols)
+                 if kind == "append" else np.empty(0, np.int64))
+    d = StructureDelta(
+        fmt="wcsr", kind=kind, base=g, new=new, touched_rows=(int(w),),
+        kept_src=kept_src, kept_dst=kept_dst,
+        fresh_dst=np.arange(c_p0, c_p0 + width_new // b_col),
+        span_base=(c_p0, c_p1),
+        span_new=(c_p0, c_p0 + width_new // b_col),
+        moved_src=moved_src, moved_dst=moved_dst, fresh_pos=fresh_pos)
+    _finish(d)
+    return new, d
+
+
+def _wcsr_window(g, w: int, op: str):
+    b_col = g.block[1]
+    if g.nnz % b_col:
+        raise ValueError(f"{op}: padded_cols ({g.nnz}) not a multiple of "
+                         f"b_col ({b_col}) — explicit pad_cols_to bases "
+                         "are not delta-patchable")
+    w = int(w)
+    if not 0 <= w < g.num_windows:
+        raise ValueError(f"{op}: window {w} out of range "
+                         f"[0, {g.num_windows})")
+    p0, p1 = int(g.ptrs[w]), int(g.ptrs[w + 1])
+    old = g.indices[0][p0:p1].astype(np.int64)
+    return w, old[old >= 0]
+
+
+def append_window_chunks(structure, window, cols
+                         ) -> Tuple[SparseStructure, StructureDelta]:
+    """Add stored columns ``cols`` to row-window ``window``.
+
+    The window's packed column set becomes the sorted union; its width is
+    re-padded to a ``b_col`` multiple (``-1`` column padding), windows
+    after it shift. Returns ``(new_structure, delta)``.
+    """
+    g = _check_fmt(structure, "wcsr", "append_window_chunks")
+    w, old_real = _wcsr_window(g, window, "append_window_chunks")
+    cols = _as_index(cols, "append_window_chunks: cols")
+    if len(np.unique(cols)) != len(cols):
+        raise ValueError("append_window_chunks: duplicate columns")
+    if ((cols < 0) | (cols >= g.shape[1])).any():
+        raise ValueError("append_window_chunks: columns out of range")
+    if np.isin(cols, old_real).any():
+        raise ValueError("append_window_chunks: column already stored in "
+                         f"window {w}")
+    union = np.sort(np.concatenate([old_real, cols]))
+    return _wcsr_edit(g, w, union, old_real, "append", cols)
+
+
+def retire_window_chunks(structure, window, cols
+                         ) -> Tuple[SparseStructure, StructureDelta]:
+    """Remove stored columns ``cols`` from row-window ``window``.
+
+    The remaining columns repack densely (width re-padded to a ``b_col``
+    multiple; a fully-emptied window keeps width 0 — empty windows are
+    legal in WCSR, they simply emit no tasks).
+    """
+    g = _check_fmt(structure, "wcsr", "retire_window_chunks")
+    w, old_real = _wcsr_window(g, window, "retire_window_chunks")
+    cols = _as_index(cols, "retire_window_chunks: cols")
+    if len(np.unique(cols)) != len(cols):
+        raise ValueError("retire_window_chunks: duplicate columns")
+    if not np.isin(cols, old_real).all():
+        raise ValueError(f"retire_window_chunks: column not stored in "
+                         f"window {w}")
+    union = np.setdiff1d(old_real, cols)
+    return _wcsr_edit(g, w, union, old_real, "retire", cols)
+
+
+# ---------------------------------------------------------------------------
+# Plan patching (WCSR task decomposition)
+# ---------------------------------------------------------------------------
+
+
+def patch_tasks(d: StructureDelta, base_tasks, chunks_per_task: int):
+    """Patch a §III-C task decomposition across a delta.
+
+    Tasks of untouched windows are kept with their chunk starts shifted by
+    that window's pointer delta; touched windows' tasks are re-emitted
+    from scratch. Output ordering matches ``SparseStructure.tasks``
+    (windows ascending, chunk starts ascending within a window), so the
+    patched arrays are element-equal to a from-scratch decomposition.
+    """
+    g_new, g_base = d.new, d.base
+    b_col = g_new.block[1]
+    t_win, t_start, t_n = (np.asarray(t, np.int64) for t in base_tasks)
+    real = t_n > 0  # drop the empty-matrix sentinel task, if any
+    t_win, t_start, t_n = t_win[real], t_start[real], t_n[real]
+    touched = np.asarray(d.touched_rows, np.int64)
+    keep = ~np.isin(t_win, touched)
+    shifts = (g_new.ptrs[:-1].astype(np.int64)
+              - g_base.ptrs[:-1].astype(np.int64)) // b_col
+    k_win = t_win[keep]
+    k_start = t_start[keep] + shifts[k_win]
+    k_n = t_n[keep]
+    n_win, n_start, n_n = [], [], []
+    for w in touched:
+        c0, c1 = int(g_new.ptrs[w]), int(g_new.ptrs[w + 1])
+        nchunks = (c1 - c0) // b_col
+        g = 0
+        while g < nchunks:
+            take = min(chunks_per_task, nchunks - g)
+            n_win.append(int(w))
+            n_start.append(c0 // b_col + g)
+            n_n.append(take)
+            g += take
+    aw = np.concatenate([k_win, np.asarray(n_win, np.int64)])
+    ast = np.concatenate([k_start, np.asarray(n_start, np.int64)])
+    an = np.concatenate([k_n, np.asarray(n_n, np.int64)])
+    order = np.lexsort((ast, aw))
+    aw, ast, an = aw[order], ast[order], an[order]
+    if not len(aw):  # fully-empty matrix: keep the no-op sentinel task
+        aw, ast, an = np.zeros(1, np.int64), np.zeros(1, np.int64), \
+            np.zeros(1, np.int64)
+    return (np.asarray(aw, np.int32), np.asarray(ast, np.int32),
+            np.asarray(an, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Value patching (codec-aware: untouched groups splice bitwise)
+# ---------------------------------------------------------------------------
+
+
+def patch_values(d: StructureDelta, data, codec: str = "none",
+                 fresh_values=None):
+    """Splice a value ``data`` tuple (raw or codec-encoded) across a delta.
+
+    Untouched groups are copied verbatim — for codec tensors both the
+    compressed payload and the f32 scales of kept groups are reused
+    bitwise (counted in ``groups_reused``); only touched groups are
+    (re)quantized (``groups_requantized``). ``fresh_values`` supplies the
+    appended entries' raw (f32) values in the caller's request order —
+    zeros when omitted. Retired slots need none; BCSR coverage blocks are
+    zero (zero payload, zero scale — exactly what a rebuild encodes).
+    """
+    import jax.numpy as jnp
+
+    g_new, g_base = d.new, d.base
+    if d.fmt == "bcsr":
+        return _patch_bcsr_values(d, data, codec, fresh_values, jnp)
+    return _patch_wcsr_values(d, data, codec, fresh_values, jnp)
+
+
+def _patch_bcsr_values(d, data, codec, fresh_values, jnp):
+    from repro.sparse.codecs import encode_format_values
+
+    bm, bk = d.new.block
+    npad = max(d.new.nnz, 1)
+    kept_src = jnp.asarray(d.kept_src, jnp.int32)
+    kept_dst = jnp.asarray(d.kept_dst, jnp.int32)
+    has_fresh = fresh_values is not None and len(d.fresh_pos)
+    if codec == "none":
+        (blocks,) = data
+        out = jnp.zeros((npad, bm, bk), blocks.dtype)
+        if len(d.kept_src):
+            out = out.at[kept_dst].set(blocks[kept_src])
+        if has_fresh:
+            out = out.at[jnp.asarray(d.fresh_pos, jnp.int32)].set(
+                jnp.asarray(fresh_values, blocks.dtype))
+        return (out,)
+    payload, scales = data
+    outp = jnp.zeros((npad, bm, bk), payload.dtype)
+    outs = jnp.zeros((npad, 1), scales.dtype)
+    if len(d.kept_src):
+        outp = outp.at[kept_dst].set(payload[kept_src])
+        outs = outs.at[kept_dst].set(scales[kept_src])
+    if has_fresh:
+        fp, fs = encode_format_values(
+            "bcsr", (bm, bk), jnp.asarray(fresh_values, jnp.float32), codec)
+        pos = jnp.asarray(d.fresh_pos, jnp.int32)
+        outp = outp.at[pos].set(fp)
+        outs = outs.at[pos].set(fs)
+    _count("groups_reused", len(d.kept_src))
+    _count("groups_requantized", len(d.fresh_pos) if has_fresh else 0)
+    return (outp, outs)
+
+
+def _patch_wcsr_values(d, data, codec, fresh_values, jnp):
+    from repro.sparse.codecs import decode_window_values, \
+        encode_format_values
+
+    g_new, g_base = d.new, d.base
+    b_row, b_col = g_new.block
+    nch_new = g_new.nnz // b_col
+    w = d.touched_rows[0]
+    p0n, p1n = int(g_new.ptrs[w]), int(g_new.ptrs[w + 1])
+    kept_src = jnp.asarray(d.kept_src, jnp.int32)
+    kept_dst = jnp.asarray(d.kept_dst, jnp.int32)
+    has_fresh = fresh_values is not None and len(d.fresh_pos)
+    if codec == "none":
+        (vals,) = data
+        r = vals.reshape(b_row, g_base.nnz // b_col, b_col)
+        out = jnp.zeros((b_row, nch_new, b_col), vals.dtype)
+        if len(d.kept_src):
+            out = out.at[:, kept_dst].set(r[:, kept_src])
+        out = out.reshape(b_row, g_new.nnz)
+        if len(d.moved_src):
+            out = out.at[:, jnp.asarray(d.moved_dst, jnp.int32)].set(
+                vals[:, jnp.asarray(d.moved_src, jnp.int32)])
+        if has_fresh:
+            out = out.at[:, jnp.asarray(d.fresh_pos, jnp.int32)].set(
+                jnp.asarray(fresh_values, vals.dtype))
+        return (out,)
+    payload, scales = data
+    outp = jnp.zeros((b_row, nch_new, b_col), payload.dtype)
+    outs = jnp.zeros((1, nch_new), scales.dtype)
+    if len(d.kept_src):
+        base_r = payload.reshape(b_row, g_base.nnz // b_col, b_col)
+        outp = outp.at[:, kept_dst].set(base_r[:, kept_src])
+        outs = outs.at[:, kept_dst].set(scales[:, kept_src])
+    outp = outp.reshape(b_row, g_new.nnz)
+    # rebuild the touched window in f32, then re-encode only its chunks
+    win = jnp.zeros((b_row, p1n - p0n), jnp.float32)
+    if len(d.moved_src):
+        p0b, p1b = int(g_base.ptrs[w]), int(g_base.ptrs[w + 1])
+        dec = decode_window_values(
+            (b_row, b_col), payload[:, p0b:p1b],
+            scales[:, p0b // b_col:p1b // b_col], codec)
+        win = win.at[:, jnp.asarray(d.moved_dst - p0n, jnp.int32)].set(
+            dec[:, jnp.asarray(d.moved_src - p0b, jnp.int32)])
+    if has_fresh:
+        win = win.at[:, jnp.asarray(d.fresh_pos - p0n, jnp.int32)].set(
+            jnp.asarray(fresh_values, jnp.float32))
+    if p1n > p0n:
+        wp, ws = encode_format_values("wcsr", (b_row, b_col), win, codec)
+        outp = outp.at[:, p0n:p1n].set(wp)
+        outs = outs.at[:, p0n // b_col:p1n // b_col].set(ws)
+    _count("groups_reused", len(d.kept_src))
+    _count("groups_requantized", (p1n - p0n) // b_col)
+    return (outp, outs)

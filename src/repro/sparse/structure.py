@@ -62,7 +62,7 @@ class SparseStructure:
     """
 
     __slots__ = ("fmt", "shape", "block", "nnz", "ptrs", "indices",
-                 "_hash", "_dev")
+                 "_hash", "_dev", "_digest", "_rowdig")
 
     def __init__(self, fmt: str, shape: Tuple[int, int],
                  block: Tuple[int, int], nnz: int, ptrs, indices):
@@ -74,6 +74,8 @@ class SparseStructure:
         self.indices = tuple(_frozen_i32(ix) for ix in indices)
         self._hash = None
         self._dev = None  # memoized device index arrays
+        self._digest = None  # memoized content_digest()
+        self._rowdig = None  # per-row digests (delta splicing)
 
     # -- identity ----------------------------------------------------------
     def _key(self):
@@ -91,24 +93,56 @@ class SparseStructure:
             self._hash = hash(self._key())
         return self._hash
 
+    def _row_digest(self, r: int) -> bytes:
+        """Digest of one block-row / row-window's stored index content.
+
+        Padding entries past ``ptrs[-1]`` are excluded — they are
+        derivable from the stored entries plus ``nnz``, which the header
+        hash in ``content_digest`` already covers.
+        """
+        import hashlib
+
+        p0, p1 = int(self.ptrs[r]), int(self.ptrs[r + 1])
+        arr = self.indices[1] if self.fmt == "bcsr" else self.indices[0]
+        return hashlib.sha1(arr[p0:p1].tobytes()).digest()
+
+    def row_digests(self) -> Tuple[bytes, ...]:
+        """Per block-row / per row-window digests, computed once.
+
+        Structure deltas (``repro.sparse.delta``) splice these: a patched
+        structure recomputes only its touched rows' digests and reuses the
+        base structure's digests for the rest, so ``content_digest`` costs
+        O(touched) instead of O(nnz) along an append/retire chain.
+        """
+        if self._rowdig is None:
+            self._rowdig = tuple(self._row_digest(r)
+                                 for r in range(len(self.ptrs) - 1))
+        return self._rowdig
+
     def content_digest(self) -> str:
-        """Stable hex digest of the full structure content.
+        """Stable hex digest of the full structure content (memoized).
 
         Unlike ``__hash__`` (salted per process for str/bytes), this is
         reproducible across processes and hosts — it is the structure key
         the persistent tuning database (``repro.tune``) records, so a
         farm-tuned entry can be matched back to the exact pruning pattern
-        it was measured on.
+        it was measured on. It is combined from per-row digests
+        (``row_digests``) plus a cheap header/ptrs hash, so delta-produced
+        structures (``repro.sparse.delta``) compute it incrementally, and
+        the result is cached on the instance — repeated TuneDB lookups on
+        one structure no longer rehash the full index arrays.
         """
-        import hashlib
+        if self._digest is None:
+            import hashlib
 
-        h = hashlib.sha1()
-        h.update(f"{self.fmt}|{self.shape}|{self.block}|{self.nnz}|"
-                 .encode())
-        h.update(self.ptrs.tobytes())
-        for ix in self.indices:
-            h.update(ix.tobytes())
-        return h.hexdigest()
+            h = hashlib.sha1()
+            h.update(f"{self.fmt}|{self.shape}|{self.block}|{self.nnz}|"
+                     .encode())
+            h.update(self.ptrs.tobytes())
+            for d in self.row_digests():
+                h.update(d)
+            self._digest = h.hexdigest()
+        return self._digest
 
     def __repr__(self):
         return (f"SparseStructure(fmt={self.fmt!r}, shape={self.shape}, "

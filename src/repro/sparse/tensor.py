@@ -256,6 +256,61 @@ class SparseTensor:
             self._sharded[key] = sst
         return sst
 
+    # -- dynamic structure (repro.sparse.delta) ----------------------------
+    def _apply_delta(self, new_structure, delta, fresh_values):
+        from repro.sparse.delta import patch_values
+
+        data = patch_values(delta, self.data, self.codec, fresh_values)
+        return SparseTensor(new_structure, data, codec=self.codec)
+
+    def append_blocks(self, rows, cols, values=None) -> "SparseTensor":
+        """Grow a BCSR tensor: store new blocks at ``(rows[i], cols[i])``.
+
+        ``values`` is ``[len(rows), bm, bk]`` raw (dense-dtype) block
+        values in request order (zeros when omitted). Returns a new tensor
+        whose structure is one registered delta away from this one, so
+        downstream planning/partitioning **patches** instead of
+        rebuilding, and under a codec only the new blocks are quantized —
+        every kept block's payload and scale is spliced bitwise.
+        """
+        from repro.sparse.delta import append_blocks
+
+        new, d = append_blocks(self.structure, rows, cols)
+        return self._apply_delta(new, d, values)
+
+    def retire_blocks(self, rows, cols) -> "SparseTensor":
+        """Shrink a BCSR tensor: drop stored blocks (see ``append_blocks``).
+
+        A block-row losing its last block keeps a zero coverage block at
+        column 0 (the unsharded kernel's every-row-covered invariant).
+        """
+        from repro.sparse.delta import retire_blocks
+
+        new, d = retire_blocks(self.structure, rows, cols)
+        return self._apply_delta(new, d, None)
+
+    def append_window_chunks(self, window, cols,
+                             values=None) -> "SparseTensor":
+        """Grow a WCSR tensor: store columns ``cols`` in ``window``.
+
+        ``values`` is ``[b_row, len(cols)]`` raw column values in request
+        order (zeros when omitted). Only the touched window's chunks are
+        re-encoded under a codec; untouched chunks (including their f32
+        scales) splice bitwise. The delta is registered, so
+        ``make_plan``/``make_partition`` patch their cached entries.
+        """
+        from repro.sparse.delta import append_window_chunks
+
+        new, d = append_window_chunks(self.structure, window, cols)
+        return self._apply_delta(new, d, values)
+
+    def retire_window_chunks(self, window, cols) -> "SparseTensor":
+        """Shrink a WCSR tensor: drop stored columns from ``window``."""
+        from repro.sparse.delta import retire_window_chunks
+
+        new, d = retire_window_chunks(self.structure, window, cols)
+        return self._apply_delta(new, d, None)
+
     # -- ops ---------------------------------------------------------------
     def __matmul__(self, b) -> jax.Array:
         """``self @ B`` via ``repro.ops.spmm`` (ambient OpConfig applies)."""

@@ -397,12 +397,13 @@ def test_cache_stats_unifies_counters(rng):
     sw.matmul(b, impl="kernel_interpret")
     cs = ops.cache_stats()
     assert set(cs) == {"plan", "tasks", "partition", "tuning", "selections",
-                       "tune_db"}
+                       "tune_db", "delta"}
     # derived from the same counters as the legacy accessors — never a
     # second set that can drift
     p = ops.plan_cache_info()
     t = ops.tuning_cache_info()
-    assert cs["plan"] == {"hits": p.hits, "misses": p.misses, "size": p.size}
+    assert cs["plan"] == {"hits": p.hits, "misses": p.misses, "size": p.size,
+                          "patched": p.plan_patched}
     assert cs["tasks"]["decompositions"] == p.task_decompositions == 1
     assert cs["partition"]["misses"] == p.partition_misses
     assert cs["tuning"]["autotuned"] == t.autotuned

@@ -2,8 +2,9 @@
 device count must be fixed before jax initializes). Covers: sharded train
 step numerics vs single device, MoE shard_map path, compressed/hierarchical
 collectives, GPipe equivalence, elastic checkpoint restore onto a mesh, the
-structure-aware sparse partitioner (in-process: pure host-side numpy), and
-sharded-vs-single-device spmm equality on a 4-device mesh."""
+structure-aware sparse partitioner (in-process: pure host-side numpy),
+sharded-vs-single-device spmm equality on a 4-device mesh, and dynamic
+structure growth repartitioning with only affected shards reshipped."""
 
 import os
 import subprocess
@@ -321,6 +322,70 @@ def test_sharded_quantized_spmm_matches_single_device():
     info = plan_cache_info()
     assert info.partitions == 2, info
     assert info.partition_misses == 2, info
+    print("OK")
+    """, devices=4)
+
+
+def test_dynamic_append_reships_only_affected_shards():
+    """Grow the last window chunk-by-chunk until the balanced partitioner
+    migrates a chunk boundary. Every repartition must be a *patch* (the
+    ``partition.patched`` counter), untouched shards must be reused by
+    object (the ``shards_reused`` counter — those shards are never
+    re-shipped to their device), and the grown sharded operand must still
+    match single-device spmm."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.sparse import SparseTensor, delta_stats
+    from repro.ops import spmm, make_partition, clear_plan_cache, cache_stats
+    clear_plan_cache()
+
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(256, 128)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.02   # ~half the columns stored per window
+    b = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    mesh = jax.make_mesh((4,), ("data",))
+    st = SparseTensor.from_dense(d, "wcsr", block=(32, 8))
+    part = make_partition(st, 4)
+    bounds0 = np.asarray(part.bounds).copy()
+    bounds_prev = bounds0
+    w = 7  # grow the LAST window: prefix shards must stay reusable
+    migrated, steps = False, 0
+    for step in range(8):
+        g = st.structure
+        p0, p1 = int(g.ptrs[w]), int(g.ptrs[w + 1])
+        stored = set(int(c) for c in g.indices[0][p0:p1] if int(c) >= 0)
+        free = [c for c in range(128) if c not in stored][:8]
+        if len(free) < 8:
+            break
+        vals = rng.normal(size=(32, 8)).astype(np.float32)
+        before = delta_stats()
+        st = st.append_window_chunks(w, free, vals)
+        part = make_partition(st, 4)
+        after = delta_stats()
+        steps += 1
+        shipped = after["shards_reshipped"] - before["shards_reshipped"]
+        reused = after["shards_reused"] - before["shards_reused"]
+        assert shipped + reused == 4, (shipped, reused)
+        bounds = np.asarray(part.bounds)
+        if np.array_equal(bounds, bounds_prev):
+            # pure growth: only the shard holding the touched window ships
+            assert shipped == 1, (step, shipped)
+        else:
+            # a chunk migrated: boundary shards reship, the rest reuse
+            assert shipped <= 3, (step, shipped)
+        bounds_prev = bounds
+        if not np.array_equal(bounds, bounds0):
+            migrated = True
+            break
+    assert migrated, "no chunk migrated across the growth trace"
+    cs = cache_stats()
+    assert cs["partition"]["patched"] == steps, cs["partition"]
+    assert cs["partition"]["misses"] == 1, cs["partition"]  # base only
+
+    y0 = np.asarray(spmm(st, b, impl="ref"))
+    sst = st.shard(mesh, "data")
+    y1 = np.asarray(spmm(sst, b, impl="ref"))
+    np.testing.assert_allclose(y1, y0, atol=2e-4, rtol=1e-4)
     print("OK")
     """, devices=4)
 

@@ -207,6 +207,63 @@ def test_auto_bn_default_matches_explicit(rng):
 
 
 # ---------------------------------------------------------------------------
+# Dynamic structure: plan patching counters
+# ---------------------------------------------------------------------------
+
+
+def _growing_wcsr(rng):
+    from repro.sparse import SparseTensor
+    d = rng.normal(size=(64, 64)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.04  # leave free columns in every window
+    return SparseTensor.from_dense(d, "wcsr", block=(16, 8)).structure
+
+
+def _append_one(g, w):
+    from repro.sparse import append_window_chunks
+    stored = set(int(c) for c in
+                 g.indices[0][int(g.ptrs[w]):int(g.ptrs[w + 1])]
+                 if int(c) >= 0)
+    col = next(c for c in range(64) if c not in stored)
+    g2, _ = append_window_chunks(g, w, [col])
+    return g2
+
+
+def test_n_appends_n_plan_patches_zero_replans(rng):
+    from repro.ops import cache_stats, clear_plan_cache, make_plan
+    clear_plan_cache()
+    g = _growing_wcsr(rng)
+    make_plan(g, 32)
+    warm = cache_stats()
+    assert warm["plan"]["misses"] == 1 and warm["plan"]["patched"] == 0
+    n = 5
+    for i in range(n):
+        g = _append_one(g, i % 4)
+        make_plan(g, 32)
+    cs = cache_stats()
+    assert cs["plan"]["patched"] == n  # every growth step patched
+    assert cs["plan"]["misses"] == warm["plan"]["misses"]  # 0 full re-plans
+    # the §III-C task split was only ever computed once, for the base
+    assert cs["tasks"]["decompositions"] == warm["tasks"]["decompositions"]
+    assert cs["delta"]["appends"] == n
+    assert cs["delta"]["plan_patched"] == n
+    clear_plan_cache()
+
+
+def test_clear_tuning_cache_resets_delta_counters(rng):
+    from repro.ops import cache_stats, clear_plan_cache, make_plan
+    clear_plan_cache()
+    g = _growing_wcsr(rng)
+    make_plan(g, 32)
+    make_plan(_append_one(g, 0), 32)
+    before = cache_stats()
+    assert before["plan"]["patched"] == 1 and before["delta"]["appends"] == 1
+    clear_tuning_cache()
+    after = cache_stats()
+    assert after["plan"]["patched"] == 0 and after["partition"]["patched"] == 0
+    assert all(v == 0 for v in after["delta"].values()), after["delta"]
+
+
+# ---------------------------------------------------------------------------
 # sddmm + differentiable matmul under the same roof
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,372 @@
+"""Delta-vs-rebuild differential harness for ``repro.sparse.delta``.
+
+The contract under test: applying a sequence of structural edits
+(``append_blocks`` / ``retire_blocks`` for BCSR, ``append_window_chunks`` /
+``retire_window_chunks`` for WCSR) through the delta layer must be
+*indistinguishable* from rebuilding the grown/shrunk matrix from dense —
+structures content-equal, content digests equal, plans and partitions
+structurally equal, and spmm numerically identical (exact for raw values;
+within the documented codec tolerance when touched groups requantize).
+Untouched codec scale groups must survive an edit *bitwise* — requantizing
+everything would silently pass the tolerance checks, so that invariant gets
+its own bitwise assertion against the pre-delta tensor.
+
+Property-based via hypothesis (or the deterministic conftest stub when the
+real package isn't installed): random base structures x random edit
+sequences x {none, int8, fp8_e4m3} x pipeline depths 1-3.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st_
+
+import repro.ops as ops
+from repro.ops import (cache_stats, clear_plan_cache, make_partition,
+                       make_plan)
+from repro.parallel.sparse import partition_structure
+from repro.sparse import (SparseTensor, append_blocks, append_window_chunks,
+                          delta_of, delta_stats, registered_value_codecs,
+                          retire_blocks, retire_window_chunks)
+
+# generous: touched groups requantize with mixed old+fresh values, so the
+# patched payload legitimately differs from the rebuilt one inside a group
+DIFF_TOL = {"none": 1e-6, "int8": 0.05, "fp8_e4m3": 0.12}
+CODECS = tuple(c for c in ("none", "int8", "fp8_e4m3")
+               if c == "none" or c in registered_value_codecs())
+
+M = K = 64
+WBLOCK = (16, 8)
+BBLOCK = (16, 16)
+
+
+def _rel(got, ref):
+    return float(np.max(np.abs(got - ref)) / (np.max(np.abs(ref)) + 1e-12))
+
+
+def _dense(rng, density=0.04):
+    # element density 0.04 -> a 16-row window stores ~half its columns
+    # (1 - 0.96**16), leaving real room for both appends and retires
+    d = rng.normal(size=(M, K)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    return d
+
+
+# ---------------------------------------------------------------------------
+# WCSR edit sequences
+# ---------------------------------------------------------------------------
+
+
+def _wcsr_stored(g, w):
+    p0, p1 = int(g.ptrs[w]), int(g.ptrs[w + 1])
+    return sorted(int(c) for c in g.indices[0][p0:p1] if int(c) >= 0)
+
+
+def _apply_wcsr_ops(rng, st, d, nops):
+    """Random append/retire chunk edits; returns (tensor, dense oracle)."""
+    b_row, _ = st.structure.block
+    windows = M // b_row
+    d = d.copy()
+    for _ in range(nops):
+        w = int(rng.integers(0, windows))
+        stored = _wcsr_stored(st.structure, w)
+        free = [c for c in range(K) if c not in stored]
+        # retire only when it leaves the window non-degenerate
+        if stored and (not free or rng.random() < 0.4):
+            cols = [stored[int(rng.integers(0, len(stored)))]]
+            st = st.retire_window_chunks(w, cols)
+            d[w * b_row:(w + 1) * b_row, cols] = 0.0
+        else:
+            n = int(rng.integers(1, min(3, len(free)) + 1))
+            cols = sorted(rng.choice(free, size=n, replace=False).tolist())
+            vals = rng.normal(size=(b_row, n)).astype(np.float32)
+            vals[np.abs(vals) < 1e-3] = 1e-3  # keep columns dense-visible
+            st = st.append_window_chunks(w, cols, vals)
+            d[w * b_row:(w + 1) * b_row, cols] = vals
+    return st, d
+
+
+@settings(max_examples=6)
+@given(seed=st_.integers(0, 10_000), codec=st_.sampled_from(CODECS))
+def test_wcsr_edit_sequence_matches_rebuild(seed, codec):
+    rng = np.random.default_rng(seed)
+    d = _dense(rng)
+    st = SparseTensor.from_dense(d, "wcsr", block=WBLOCK)
+    if codec != "none":
+        st = st.quantize(codec)
+    st, d = _apply_wcsr_ops(rng, st, d, nops=4)
+
+    rb = SparseTensor.from_dense(d, "wcsr", block=WBLOCK)
+    if codec != "none":
+        rb = rb.quantize(codec)
+    assert st.structure == rb.structure
+    assert st.structure.content_digest() == rb.structure.content_digest()
+
+    b = jnp.asarray(rng.normal(size=(K, 32)).astype(np.float32))
+    got = np.asarray(ops.spmm(st, b, impl="ref"))
+    want = np.asarray(ops.spmm(rb, b, impl="ref"))
+    assert _rel(got, want) <= DIFF_TOL[codec], (codec, _rel(got, want))
+
+
+# ---------------------------------------------------------------------------
+# BCSR edit sequences
+# ---------------------------------------------------------------------------
+
+
+def _bcsr_oracle(d, true_mask, cover_mask):
+    """Rebuild from dense exactly as the retire coverage rule demands.
+
+    Coverage blocks are *sticky*: once ``retire_blocks`` (or the base
+    build) inserts a zero block at ``(r, 0)`` to keep the emptied row
+    visible to the kernel, it stays stored — a later append into that row
+    does not remove it (structurally it's indistinguishable from a real
+    block), only an explicit retire does. The oracle mask is therefore
+    ``true_mask | cover_mask``, with ``cover_mask`` evolved alongside.
+    """
+    mask_stored = true_mask | cover_mask
+    bm, bk = BBLOCK
+    dm = d * np.repeat(np.repeat(true_mask, bm, 0), bk, 1)
+    return dm, SparseTensor.from_dense(dm, "bcsr", block=BBLOCK,
+                                       mask=mask_stored)
+
+
+def _init_cover(true_mask):
+    cover = np.zeros_like(true_mask)
+    cover[~true_mask.any(axis=1), 0] = True
+    return cover
+
+
+def _apply_bcsr_ops(rng, st, d, true_mask, cover_mask, nops):
+    bm, bk = BBLOCK
+    m_b, k_b = M // bm, K // bk
+    d = d.copy()
+    true_mask = true_mask.copy()
+    cover_mask = cover_mask.copy()
+    for _ in range(nops):
+        g = st.structure
+        stored = set(zip(g.indices[0][:g.nnz].tolist(),
+                         g.indices[1][:g.nnz].tolist()))
+        real = [(r, c) for (r, c) in stored
+                if true_mask[r, c] and not cover_mask[r, c]]
+        free = [(r, c) for r in range(m_b) for c in range(k_b)
+                if (r, c) not in stored]
+        if real and (not free or rng.random() < 0.4):
+            r, c = real[int(rng.integers(0, len(real)))]
+            st = st.retire_blocks([r], [c])
+            true_mask[r, c] = False
+            d[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] = 0.0
+            if not true_mask[r].any() and not cover_mask[r].any():
+                cover_mask[r, 0] = True  # the retire inserted coverage
+        else:
+            r, c = free[int(rng.integers(0, len(free)))]
+            vals = rng.normal(size=(1, bm, bk)).astype(np.float32)
+            st = st.append_blocks([r], [c], vals)
+            true_mask[r, c] = True
+            d[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] = vals[0]
+    return st, d, true_mask, cover_mask
+
+
+@settings(max_examples=6)
+@given(seed=st_.integers(0, 10_000), codec=st_.sampled_from(CODECS))
+def test_bcsr_edit_sequence_matches_rebuild(seed, codec):
+    rng = np.random.default_rng(seed)
+    bm, bk = BBLOCK
+    true_mask = rng.random((M // bm, K // bk)) < 0.4
+    d = rng.normal(size=(M, K)).astype(np.float32)
+    cover = _init_cover(true_mask)
+    dm, st = _bcsr_oracle(d, true_mask, cover)
+    if codec != "none":
+        st = st.quantize(codec)
+    st, dm, true_mask, cover = _apply_bcsr_ops(rng, st, dm, true_mask,
+                                               cover, nops=4)
+
+    _, rb = _bcsr_oracle(dm, true_mask, cover)
+    if codec != "none":
+        rb = rb.quantize(codec)
+    assert st.structure == rb.structure
+    assert st.structure.content_digest() == rb.structure.content_digest()
+
+    b = jnp.asarray(rng.normal(size=(K, 32)).astype(np.float32))
+    got = np.asarray(ops.spmm(st, b, impl="ref"))
+    want = np.asarray(ops.spmm(rb, b, impl="ref"))
+    assert _rel(got, want) <= DIFF_TOL[codec], (codec, _rel(got, want))
+
+
+# ---------------------------------------------------------------------------
+# Kernel path: patched structures through the real (interpret) kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_wcsr_patched_structure_through_kernel_depths(rng, depth):
+    d = _dense(rng)
+    st = SparseTensor.from_dense(d, "wcsr", block=WBLOCK)
+    st, d = _apply_wcsr_ops(rng, st, d, nops=3)
+    b = jnp.asarray(rng.normal(size=(K, 16)).astype(np.float32))
+    ref = np.asarray(ops.spmm(st, b, impl="ref"))
+    got = np.asarray(ops.spmm(st, b, impl="kernel_interpret", bn=16,
+                              pipeline_depth=depth))
+    np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Untouched codec scale groups survive the edit bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec",
+                         [c for c in CODECS if c != "none"] or
+                         [pytest.param("int8", marks=pytest.mark.skip)])
+def test_untouched_scale_groups_bitwise_wcsr(rng, codec):
+    d = _dense(rng)
+    q = SparseTensor.from_dense(d, "wcsr", block=WBLOCK).quantize(codec)
+    cols = [c for c in range(K) if c not in _wcsr_stored(q.structure, 1)][:2]
+    assert len(cols) == 2, "base draw left no room to append"
+    vals = rng.normal(size=(WBLOCK[0], 2)).astype(np.float32)
+    q2 = q.append_window_chunks(1, cols, vals)
+    dlt = delta_of(q2.structure)
+    assert dlt is not None and dlt.kind == "append"
+    s_old = np.asarray(q.data[1])
+    s_new = np.asarray(q2.data[1])
+    np.testing.assert_array_equal(s_new[:, dlt.kept_dst],
+                                  s_old[:, dlt.kept_src])
+    p_old = np.asarray(q.data[0])
+    p_new = np.asarray(q2.data[0])
+    b_col = q.structure.block[1]
+    for src, dst in zip(dlt.kept_src, dlt.kept_dst):
+        np.testing.assert_array_equal(
+            p_new[:, dst * b_col:(dst + 1) * b_col],
+            p_old[:, src * b_col:(src + 1) * b_col])
+
+
+@pytest.mark.parametrize("codec",
+                         [c for c in CODECS if c != "none"] or
+                         [pytest.param("int8", marks=pytest.mark.skip)])
+def test_untouched_scale_groups_bitwise_bcsr(rng, codec):
+    bm, bk = BBLOCK
+    true_mask = rng.random((M // bm, K // bk)) < 0.4
+    d = rng.normal(size=(M, K)).astype(np.float32)
+    _, st = _bcsr_oracle(d, true_mask, _init_cover(true_mask))
+    q = st.quantize(codec)
+    g = q.structure
+    stored = set(zip(g.indices[0][:g.nnz].tolist(),
+                     g.indices[1][:g.nnz].tolist()))
+    r, c = next((i, j) for i in range(M // bm) for j in range(K // bk)
+                if (i, j) not in stored)
+    q2 = q.append_blocks([r], [c], rng.normal(size=(1, bm, bk)
+                                              ).astype(np.float32))
+    dlt = delta_of(q2.structure)
+    s_old, s_new = np.asarray(q.data[1]), np.asarray(q2.data[1])
+    np.testing.assert_array_equal(s_new[list(dlt.kept_dst)],
+                                  s_old[list(dlt.kept_src)])
+    p_old, p_new = np.asarray(q.data[0]), np.asarray(q2.data[0])
+    np.testing.assert_array_equal(p_new[list(dlt.kept_dst)],
+                                  p_old[list(dlt.kept_src)])
+    ds = delta_stats()
+    assert ds["groups_requantized"] >= 1  # the fresh block
+    assert ds["groups_reused"] >= len(dlt.kept_src)
+
+
+# ---------------------------------------------------------------------------
+# Plans / partitions: patched entries structurally equal to a fresh build
+# ---------------------------------------------------------------------------
+
+
+def test_patched_plan_and_partition_structurally_equal(rng):
+    clear_plan_cache()
+    d = _dense(rng)
+    st = SparseTensor.from_dense(d, "wcsr", block=WBLOCK)
+    make_plan(st, 32)
+    make_partition(st, 4)
+    st2, _ = _apply_wcsr_ops(rng, st, d, nops=1)
+    plan = make_plan(st2, 32)
+    for got, want in zip(plan.tasks,
+                         st2.structure.tasks(plan.chunks_per_task)):
+        np.testing.assert_array_equal(got, want)
+    part = make_partition(st2, 4)
+    fresh = partition_structure(st2.structure, 4)
+    np.testing.assert_array_equal(part.bounds, fresh.bounds)
+    assert all(a == b for a, b in zip(part.shards, fresh.shards))
+    cs = cache_stats()
+    assert cs["plan"]["patched"] == 1 and cs["partition"]["patched"] == 1
+    clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# Digest: memoized on the instance, incremental across deltas
+# ---------------------------------------------------------------------------
+
+
+def test_content_digest_memoized(rng):
+    d = _dense(rng)
+    g = SparseTensor.from_dense(d, "wcsr", block=WBLOCK).structure
+    assert g._digest is None  # lazily computed...
+    first = g.content_digest()
+    assert g._digest == first  # ...then memoized on the instance
+    assert g.content_digest() == first  # stable across lookups
+
+
+def test_digest_incremental_equals_rebuilt(rng):
+    d = _dense(rng)
+    st = SparseTensor.from_dense(d, "wcsr", block=WBLOCK)
+    st2, d2 = _apply_wcsr_ops(rng, st, d, nops=3)
+    g2 = st2.structure
+    # the delta chain pre-splices row digests: only touched rows recompute
+    assert g2._rowdig is not None
+    rb = SparseTensor.from_dense(d2, "wcsr", block=WBLOCK).structure
+    assert g2.content_digest() == rb.content_digest()
+    # and a different structure still gets a different digest
+    assert g2.content_digest() != st.structure.content_digest()
+
+
+# ---------------------------------------------------------------------------
+# Validation errors
+# ---------------------------------------------------------------------------
+
+
+def test_append_duplicate_raises(rng):
+    d = _dense(rng)
+    g = SparseTensor.from_dense(d, "wcsr", block=WBLOCK).structure
+    stored = _wcsr_stored(g, 0)
+    assert stored, "base draw stored nothing in window 0"
+    with pytest.raises(ValueError, match="already stored"):
+        append_window_chunks(g, 0, [stored[0]])
+
+    bm, bk = BBLOCK
+    mask = np.ones((M // bm, K // bk), bool)
+    db = rng.normal(size=(M, K)).astype(np.float32)
+    gb = SparseTensor.from_dense(db, "bcsr", block=BBLOCK,
+                                 mask=mask).structure
+    with pytest.raises(ValueError, match="already stored"):
+        append_blocks(gb, [0], [0])
+
+
+def test_retire_missing_raises(rng):
+    d = _dense(rng)
+    g = SparseTensor.from_dense(d, "wcsr", block=WBLOCK).structure
+    free = [c for c in range(K) if c not in _wcsr_stored(g, 0)]
+    with pytest.raises(ValueError):
+        retire_window_chunks(g, 0, [free[0]])
+
+    bm, bk = BBLOCK
+    mask = np.zeros((M // bm, K // bk), bool)
+    mask[0, 1] = True
+    db = np.zeros((M, K), np.float32)
+    db[:bm, bk:2 * bk] = 1.0
+    gb = SparseTensor.from_dense(db, "bcsr", block=BBLOCK,
+                                 mask=mask).structure
+    with pytest.raises(ValueError):
+        retire_blocks(gb, [0], [0])
+
+
+def test_structure_and_tensor_level_edits_agree(rng):
+    d = _dense(rng)
+    st = SparseTensor.from_dense(d, "wcsr", block=WBLOCK)
+    cols = [c for c in range(K) if c not in _wcsr_stored(st.structure, 2)][:2]
+    g2, dlt = append_window_chunks(st.structure, 2, cols)
+    vals = rng.normal(size=(WBLOCK[0], 2)).astype(np.float32)
+    st2 = st.append_window_chunks(2, cols, vals)
+    assert st2.structure == g2
+    assert delta_of(st2.structure) is not None
+    assert dlt.unit_shift == 0 or dlt.unit_shift > 0
