@@ -31,7 +31,7 @@ def main() -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     only = args[0] if args else None
     from benchmarks import (dist_scaling, dynamic_structure, fig7_tilewidth,
-                            fig8_prefill, serve_throughput,
+                            fig8_prefill, serve_throughput, spmv_decode,
                             table1_suitesparse, table2_ablation,
                             table3_gateproj, tune_warmstart)
     from benchmarks.common import bench_json_payload
@@ -50,6 +50,8 @@ def main() -> None:
         "tune": tune_warmstart,
         # dynamic structure: delta-patch vs full-rebuild host cost
         "dyn": dynamic_structure,
+        # skinny-N decode: GEMV fast path vs full-tile SpMM at N=1
+        "spmv": spmv_decode,
     }
     rows = [("name", "us_per_call", "derived")]
     for name, mod in modules.items():

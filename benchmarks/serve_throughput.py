@@ -11,7 +11,10 @@ Two measurements on a tiny CPU-runnable model:
    workload driven tick-by-tick through the paged engine: generated-token
    throughput, p50/p95 TTFT, and the amortization guard
    (``plan_cache.task_decompositions`` flat across ticks once the first
-   request has traced).
+   request has traced). The trace runs twice — once with the skinny-N
+   GEMV dispatch at its default ``spmv_threshold="auto"`` and once pinned
+   to full-tile (``spmv_threshold=0``) — so the JSON row carries decode
+   tok/s on both sides of the crossover plus the dispatch count.
 
 Both engines warm up on a throwaway request first so compile time doesn't
 pollute TTFT.
@@ -26,6 +29,7 @@ import jax
 
 from benchmarks.common import JSON_EXTRAS, SMOKE, arrival_trace
 from repro.configs import ARCHS, reduced_config
+from repro.ops import DEFAULT_SPMV_THRESHOLD, OpConfig, spmv_dispatch_info
 from repro.models.registry import build_model
 from repro.serve.engine import Request, ServeEngine
 
@@ -37,10 +41,10 @@ N_REQS = 4 if SMOKE else 10
 TRACE_LENS = (8, 24) if SMOKE else (16, 64)
 
 
-def _engine(m, params, *, legacy, slots=2):
+def _engine(m, params, *, legacy, slots=2, op_config=None):
     return ServeEngine(m, params, slots=slots, max_len=MAX_LEN,
                        page_size=PAGE, chunk=CHUNK, prefill_block_q=16,
-                       legacy_prefill=legacy)
+                       legacy_prefill=legacy, op_config=op_config)
 
 
 def _warmup(eng, rng, cfg):
@@ -100,7 +104,10 @@ def _run_trace(eng, rng, cfg):
 
 def run(csv_rows):
     rng = np.random.default_rng(0)
-    cfg = reduced_config(ARCHS["granite-3-2b"], num_layers=2, vocab_size=512)
+    # sparse FFN so decode ticks actually exercise the sparse matmuls the
+    # skinny-N dispatch routes (a dense FFN never touches the spmv family)
+    cfg = reduced_config(ARCHS["granite-3-2b"], num_layers=2, vocab_size=512,
+                         ffn_sparsity=0.75)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
 
@@ -118,9 +125,26 @@ def run(csv_rows):
         "prefill_speedup": speedup,
     }
 
-    eng = _engine(m, params, legacy=False)
-    _warmup(eng, rng, cfg)
-    t = _run_trace(eng, rng, cfg)
+    # the same trace twice: default decode (skinny-N GEMV dispatch on,
+    # OpConfig.spmv_threshold="auto") vs pinned full-tile — so the JSON
+    # surfaces the decode tok/s on each side of the crossover
+    trace, spmv_hits = {}, 0
+    for mode, op_cfg in (("spmv", None),
+                         ("full_tile", OpConfig(spmv_threshold=0))):
+        # dispatch decisions are made at trace time, so snapshot the
+        # counter around warmup+trace, not just the timed run
+        before = spmv_dispatch_info()["dispatched"]
+        eng = _engine(m, params, legacy=False, op_config=op_cfg)
+        _warmup(eng, rng, cfg)
+        _run_trace(eng, rng, cfg)  # warm process-global plan/tuning caches
+        trace[mode] = _run_trace(eng, rng, cfg)
+        if mode == "spmv":
+            spmv_hits = spmv_dispatch_info()["dispatched"] - before
+    t = trace["spmv"]
+    t["decode_tok_s_spmv"] = trace["spmv"]["gen_tok_s"]
+    t["decode_tok_s_full_tile"] = trace["full_tile"]["gen_tok_s"]
+    t["spmv_dispatched"] = spmv_hits
+    t["spmv_crossover_n"] = DEFAULT_SPMV_THRESHOLD
     csv_rows.append((
         "serve/trace_continuous_batching", 1e6 * t["wall_s"],
         f"gen_tok_s={t['gen_tok_s']:.0f}_ttft_p50={t['ttft_p50_ticks']:.0f}t"

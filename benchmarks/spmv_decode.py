@@ -1,0 +1,96 @@
+"""Skinny-N decode hot loop: GEMV fast path vs full-tile SpMM at N=1.
+
+The ``spmv/decode`` row measures exactly what PR 9's dispatch buys: the
+same sparse operand multiplied against a one-column RHS through the
+full-tile kernels (``spmv_threshold=0`` pins the wide path) and through
+the GEMV family (``spmv_threshold=1`` guarantees the skinny route). Both
+timings go through ``spmm`` so the numbers include the dispatch layer the
+decode loop actually pays, and ``benchmarks.common.time_spmm`` jits over
+the same plan/backends the serving engine uses.
+
+The module is also an acceptance guard, not just a number: it asserts the
+GEMV path beats the full-tile path at N=1 for *both* formats — on TPU
+because a b_col-wide row gather replaces full-width tile DMAs, and in
+interpret mode because the GEMV grids issue far fewer DMAs/grid steps —
+and that the dispatch counter actually observed the skinny route (so the
+measurement can't silently compare full-tile against itself).
+
+Standalone:  PYTHONPATH=src python benchmarks/spmv_decode.py --smoke
+Harness:     python benchmarks/run.py spmv [--smoke]
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # standalone: mirror run.py's bootstrap
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import JSON_EXTRAS, SMOKE, time_spmm
+from repro.ops import spmv_dispatch_info
+from repro.sparse import SparseTensor
+
+# smoke: small operands so CI finishes in seconds under interpret-mode
+# kernels — but not so small that the full-tile grid degenerates to a
+# couple of steps (at 64x64 the crossover inverts); full: FFN-decode-ish.
+_M, _K = (128, 128) if SMOKE else (512, 512)
+_BLOCKS = {"wcsr": (16, 8), "bcsr": (16, 16)} if SMOKE else \
+          {"wcsr": (32, 8), "bcsr": (32, 32)}
+_DENSITY = 0.4
+_WARMUP, _ITERS = (1, 2) if SMOKE else (2, 5)
+
+
+def _operand(rng, fmt):
+    d = rng.normal(size=(_M, _K)).astype(np.float32)
+    d *= rng.random(d.shape) < _DENSITY
+    return SparseTensor.from_dense(d, fmt, block=_BLOCKS[fmt])
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.normal(size=(_K, 1)).astype(np.float32))
+
+    extras = {"m": _M, "k": _K, "n": 1}
+    before = spmv_dispatch_info()["dispatched"]
+    for fmt in ("wcsr", "bcsr"):
+        st = _operand(rng, fmt)
+        full_us = time_spmm(st, b, warmup=_WARMUP, iters=_ITERS,
+                            spmv_threshold=0)   # pin the full-tile path
+        gemv_us = time_spmm(st, b, warmup=_WARMUP, iters=_ITERS,
+                            spmv_threshold=1)   # pin the GEMV family
+        extras[f"{fmt}_full_us"] = full_us
+        extras[f"{fmt}_gemv_us"] = gemv_us
+        extras[f"{fmt}_speedup"] = full_us / gemv_us
+    extras["dispatched"] = spmv_dispatch_info()["dispatched"] - before
+
+    # acceptance: the decode fast path must actually be fast, and the
+    # dispatch counter must prove the skinny route ran at all
+    assert extras["dispatched"] > 0, extras
+    for fmt in ("wcsr", "bcsr"):
+        assert extras[f"{fmt}_gemv_us"] < extras[f"{fmt}_full_us"], extras
+
+    csv_rows.append((
+        "spmv/decode", extras["wcsr_gemv_us"],
+        f"wcsr_speedup={extras['wcsr_speedup']:.2f}x"
+        f"_bcsr_speedup={extras['bcsr_speedup']:.2f}x"))
+    JSON_EXTRAS["spmv/decode"] = extras
+    return csv_rows
+
+
+def main() -> None:
+    rows = []
+    run(rows)
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    print("spmv_decode: OK", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -119,6 +119,165 @@ def _kernel(
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _spmv_kernel(
+    # scalar prefetch
+    task_start_ref,  # [T] i32 chunk offset (in b_col units) of each task
+    task_nchunks_ref,  # [T] i32 number of active chunks of each task
+    col_idx_ref,  # [C] i32 original B row per packed column (-1 pad)
+    *rest,  # v_hbm, [s_hbm], b_ref, o_ref, val_slots, [s_slots], sem, acc
+    b_col: int,
+    chunks_per_task: int,
+    depth: int,
+    codec: str,
+    nchunks_total: int,
+):
+    if codec == "none":
+        v_hbm_ref, b_ref, o_ref, val_ref, sem, acc_ref = rest
+        s_hbm_ref = s_ref = None
+    else:
+        (v_hbm_ref, s_hbm_ref, b_ref, o_ref, val_ref, s_ref, sem,
+         acc_ref) = rest
+    g = pl.program_id(1)
+    t = pl.program_id(0)
+    nchunks = task_nchunks_ref[t]
+    num_cols = col_idx_ref.shape[0]
+
+    @pl.when(g == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def copies(chunk, slot):
+        # --- load phase: the *values* stream is the pipelined operand here
+        # (the spmm kernel pipelines the B-row gather instead). One payload
+        # DMA (+ its scale under a codec) per chunk, vs b_col row DMAs on
+        # the full-tile path. Lookahead chunks past the task end are
+        # clamped to a safe chunk.
+        c = jnp.minimum(task_start_ref[t] + chunk, nchunks_total - 1)
+        out = [pltpu.make_async_copy(
+            v_hbm_ref.at[:, pl.ds(c * b_col, b_col)],
+            val_ref.at[slot],
+            sem.at[slot],
+        )]
+        if s_hbm_ref is not None:
+            out.append(pltpu.make_async_copy(
+                s_hbm_ref.at[:, pl.ds(c, 1)],
+                s_ref.at[slot],
+                sem.at[slot],
+            ))
+        return out
+
+    def compute(chunk, slot):
+        # --- compute phase: row-split multiply-accumulate (VPU GEMV
+        # analogue) instead of a bn-wide MXU tile. B is VMEM-resident (the
+        # whole skinny operand is one tile), so the gather is an in-register
+        # dynamic row read per packed column — no per-row DMA at all.
+        a = dequant_tile(val_ref[slot], codec,
+                         None if s_ref is None else s_ref[slot][0, 0])
+        base = (task_start_ref[t] + chunk) * b_col
+        rows = []
+        for j in range(b_col):  # static unroll over packed columns
+            idx = jnp.minimum(base + j, num_cols - 1)
+            src_row = jnp.maximum(col_idx_ref[idx], 0)
+            rows.append(b_ref[pl.ds(src_row, 1), :])
+        gmat = jnp.concatenate(rows, axis=0)  # [b_col, n]
+        acc_ref[...] += jnp.sum(
+            a.astype(jnp.float32)[:, :, None]
+            * gmat.astype(jnp.float32)[None, :, :],
+            axis=1)
+
+    emit_gather_pipeline(step=g, nchunks=nchunks, depth=depth,
+                         copies=copies, compute=compute)
+
+    @pl.when(g == chunks_per_task - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b_row",
+        "b_col",
+        "chunks_per_task",
+        "out_dtype",
+        "interpret",
+        "pipeline_depth",
+        "codec",
+    ),
+)
+def wcsr_spmv_kernel(
+    task_start: jax.Array,  # [T] i32
+    task_nchunks: jax.Array,  # [T] i32
+    col_idx: jax.Array,  # [C] i32
+    values: jax.Array,  # [b_row, C] (codec payload when quantized)
+    b: jax.Array,  # [k, n], n skinny (decode activations; no bn tiling)
+    scales: jax.Array = None,  # [1, C // b_col] f32 per-chunk codec scales
+    *,
+    b_row: int,
+    b_col: int,
+    chunks_per_task: int,
+    out_dtype=None,
+    interpret: bool = True,
+    pipeline_depth: int = 1,
+    codec: str = "none",
+) -> jax.Array:
+    """Skinny-N (SpMV/GEMV) variant of :func:`wcsr_spmm_kernel`.
+
+    For decode-shaped RHS (n of a few columns) the full-tile kernel wastes
+    the entire ``bn`` tile on one activation vector and pays ``b_col`` row
+    DMAs per chunk for a B operand that trivially fits VMEM. This body
+    flips the dataflow: B stays resident in VMEM (one tile = the whole
+    operand, gathered in-register per packed column), while the contiguous
+    packed-*values* stream becomes the pipelined operand — one payload DMA
+    per chunk through the same §III-A Q-deep emitter, with the same
+    per-chunk ``dequant_tile`` codec hook. The MMA tile is replaced by a
+    row-split multiply-accumulate (the SpMV row-split form of Yang et
+    al.), and the §III-C task split / segment-sum combine are unchanged.
+    """
+    depth = validate_depth(pipeline_depth)
+    num_tasks = task_start.shape[0]
+    k, n = b.shape
+    if codec != "none" and scales is None:
+        raise ValueError(f"wcsr_spmv_kernel: codec {codec!r} needs scales")
+    out_dtype = out_dtype or b.dtype
+    nchunks_total = values.shape[1] // b_col
+    grid = (num_tasks, chunks_per_task)
+    body = functools.partial(
+        _spmv_kernel, b_col=b_col, chunks_per_task=chunks_per_task,
+        depth=depth, codec=codec, nchunks_total=nchunks_total)
+    val_slots, sems = gather_slots(depth, (b_row, b_col), values.dtype)
+    # values (and scales) live in HBM; the emitter DMAs them chunk by chunk
+    in_specs = [pl.BlockSpec(memory_space=pl.ANY)]
+    operands = [values]
+    scratch = [val_slots]
+    if codec != "none":
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        operands.append(scales)
+        s_slots, _ = gather_slots(depth, (1, 1), scales.dtype)
+        scratch.append(s_slots)
+    # the skinny B is one resident VMEM tile — no bn tiling dimension
+    in_specs.append(pl.BlockSpec((k, n), lambda t, g, ts, tn, ci: (0, 0)))
+    operands.append(b)
+    scratch += [sems, pltpu.VMEM((b_row, n), jnp.float32)]
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, b_row, n), lambda t, g, ts, tn, ci: (t, 0, 0)
+            ),
+            scratch_shapes=scratch,
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_tasks, b_row, n), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(task_start, task_nchunks, col_idx, *operands)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(

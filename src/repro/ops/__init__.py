@@ -31,7 +31,11 @@ Exported symbols (one-liners; see each docstring for the full story):
 (``impl=``, ``bn=``, ...) that win over the ambient config:
 
 * ``spmm(a, b)`` — sparse @ dense for any registered format:
-  ``spmm(a_bcsr, x)``; sharded operands run multi-device.
+  ``spmm(a_bcsr, x)``; sharded operands run multi-device. Skinny RHS
+  (``n_cols <= spmv_threshold``) auto-dispatches to the ``spmv`` family.
+* ``spmv(a, b)`` — sparse @ vector (GEMV row-split kernels, the decode
+  fast path); ``b`` may be ``[k]`` or ``[k, n]``. Usually reached via
+  ``spmm`` auto-dispatch rather than called directly.
 * ``sddmm(dc, b, a_struct)`` — sampled dense-dense matmul onto a block
   structure: ``sddmm(grad_c, b, a)`` (training backward).
 * ``sparse_attention(q, k, v, block_mask)`` — block-sparse prefill
@@ -72,7 +76,10 @@ guard, whose winner steers every ``"auto"`` knob), ``tuned_entry(...)`` /
 ``set_tune_db(db)`` / ``active_tune_db()`` / ``adopt_tuned_entries(...)``
 (persistent tuning-DB wiring: winners survive the process in a
 ``repro.tune.TuneDB`` — ``REPRO_TUNE_DB`` points every replica at one —
-and ``autotune_spmm`` / ``tuned_entry`` consult it before sweeping).
+and ``autotune_spmm`` / ``tuned_entry`` consult it before sweeping),
+``resolve_spmv_route(threshold, n, ...)`` / ``spmv_dispatch_info()`` /
+``DEFAULT_SPMV_THRESHOLD`` (the skinny-N dispatch: route resolution,
+its counters, and the fallback crossover).
 """
 
 from repro.ops.attention import csr_encode_block_mask, sparse_attention
@@ -89,14 +96,18 @@ from repro.ops.registry import (available_backends, register_backend,
                                 resolve_backend, resolve_format)
 from repro.ops.sddmm import sddmm
 from repro.ops.spmm import spmm
-from repro.ops.tiling import (active_tune_db, adopt_tuned_entries, auto_bn,
+from repro.ops.spmv import spmv
+from repro.ops.tiling import (DEFAULT_SPMV_THRESHOLD, active_tune_db,
+                              adopt_tuned_entries, auto_bn,
                               autotune_spmm, clear_tuning_cache,
                               resolve_bn, resolve_pipeline_depth,
-                              set_tune_db, tuned_entry, tuning_cache_info)
+                              resolve_spmv_route, set_tune_db,
+                              spmv_dispatch_info, tuned_entry,
+                              tuning_cache_info)
 
 __all__ = [
     # ops
-    "spmm", "sddmm", "sparse_attention", "bcsr_matmul",
+    "spmm", "spmv", "sddmm", "sparse_attention", "bcsr_matmul",
     "local_bcsr_matmul_t", "csr_encode_block_mask",
     # structure
     "BCSRStructure", "structure_of",
@@ -112,6 +123,8 @@ __all__ = [
     "cache_stats", "codec_bytes_report",
     "auto_bn", "resolve_bn", "tuning_cache_info", "clear_tuning_cache",
     "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
+    # skinny-N (spmv) dispatch
+    "resolve_spmv_route", "spmv_dispatch_info", "DEFAULT_SPMV_THRESHOLD",
     # persistent tuning DB (repro.tune) wiring
     "set_tune_db", "active_tune_db", "adopt_tuned_entries",
 ]

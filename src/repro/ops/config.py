@@ -57,6 +57,12 @@ class OpConfig:
     # package default is "none" — codecs are opt-in. An operand that is
     # already quantized (SparseTensor.quantize) always keeps its own codec.
     value_codec: Optional[str] = None
+    # Skinny-N (SpMV/GEMV) dispatch crossover: ``spmm`` reroutes to the
+    # ``spmv`` op family when the RHS has <= this many columns. An int pins
+    # the crossover (0 disables the fast path entirely); "auto" adopts the
+    # measured route from a ``TuneDB``/``autotune_spmm`` winner when one
+    # exists for the shape, falling back to ``tiling.DEFAULT_SPMV_THRESHOLD``.
+    spmv_threshold: Union[int, str, None] = None
 
     def merged_under(self, override: "OpConfig") -> "OpConfig":
         """Layer ``override`` on top of self: non-None override fields win."""
@@ -74,7 +80,8 @@ class OpConfig:
 # adopting a tuned codec requires the caller to opt in with "auto".
 _DEFAULTS = OpConfig(impl=None, bn="auto", out_dtype=None,
                      chunks_per_task=None, interpret=None,
-                     pipeline_depth="auto", value_codec="none")
+                     pipeline_depth="auto", value_codec="none",
+                     spmv_threshold="auto")
 
 _STACK: contextvars.ContextVar = contextvars.ContextVar(
     "repro_ops_config_stack", default=())

@@ -204,13 +204,30 @@ def local_bcsr_matmul_t(values, rows, cols, x, mb: int):
     Index arrays are runtime tensors (not static) so callers trace once
     under shard_map/pjit; the dataflow is the gather + micro-GEMM +
     segment-sum form of the BCSR kernel.
+
+    Skinny batches (decode ticks: T <= the ambient ``spmv_threshold``)
+    swap the per-block MXU micro-GEMM for the row-split
+    multiply-accumulate of the ``spmv`` kernel family — the T dimension is
+    static at trace time, so the serve decode step compiles the GEMV form
+    while prefill keeps the einsum, and both land in the
+    ``cache_stats()["spmv"]`` dispatch tallies.
     """
+    from repro.ops.config import current_config
+    from repro.ops.tiling import resolve_spmv_route
+
     nnz, bm, bk = values.shape
     t = x.shape[0]
     xt = x.T.reshape(-1, bk, t)  # [kb, bk, T]
     tiles = xt[cols]  # [nnz, bk, T]
-    part = jnp.einsum(
-        "nij,njt->nit", values, tiles, preferred_element_type=jnp.float32
-    )
+    route = resolve_spmv_route(current_config().spmv_threshold, t)
+    if route == "spmv":
+        # product in the input dtype, f32 accumulation — matches the
+        # einsum's preferred_element_type semantics
+        part = jnp.sum(values[:, :, :, None] * tiles[:, None, :, :],
+                       axis=2, dtype=jnp.float32)
+    else:
+        part = jnp.einsum(
+            "nij,njt->nit", values, tiles, preferred_element_type=jnp.float32
+        )
     y = jax.ops.segment_sum(part, rows, num_segments=mb)  # [mb, bm, T]
     return y.reshape(mb * bm, t)

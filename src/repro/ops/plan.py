@@ -63,6 +63,10 @@ class Plan:
     # ("none" = raw dense-dtype values); part of the cache key, so a codec
     # flip re-plans cleanly while the structure-keyed task cache is shared
     value_codec: str = "none"
+    # resolved skinny-N route ("spmm" = bn-wide tile kernels, "spmv" = the
+    # GEMV family); part of the cache key so the same structure serving
+    # prefill (wide N) and decode (N=1) holds two plans side by side
+    route: str = "spmm"
 
     @property
     def num_tasks(self) -> int:
@@ -171,7 +175,7 @@ def _tasks_for(structure: SparseStructure, chunks_per_task: int):
 
 
 def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
-              dtype=None, codec: str = "none") -> Plan:
+              dtype=None, codec: str = "none", route: str = "spmm") -> Plan:
     """Build (or fetch) the execution plan for ``spmm`` over ``structure``.
 
     ``structure`` may be a ``SparseStructure`` or anything carrying one
@@ -182,7 +186,10 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     byte-width aware — a quantized operand plans with its payload bytes;
     bare-structure default: bfloat16); ``codec`` is the operand's resolved
     value codec and part of the cache key. Casts and codec flips re-plan
-    ``bn`` cheaply but share the structure-keyed task cache.
+    ``bn`` cheaply but share the structure-keyed task cache. ``route`` is
+    the resolved skinny-N dispatch ("spmm" | "spmv", also cache-keyed):
+    the task split and depth resolution are route-invariant, but prefill
+    and decode plans for the same structure must not collide.
     """
     global _HITS, _MISSES
     if not isinstance(structure, SparseStructure):
@@ -212,8 +219,10 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     else:
         cpt = None
         depth = None
+    # route appended last: drop_auto_plans / _try_patch_plan index key[3]
+    # (cfg.bn) and key[1:] respectively, so the layout stays stable
     key = (structure, int(n), str(np.dtype(dtype)), cfg.bn, cpt, depth,
-           codec)
+           codec, str(route))
     plan = _PLANS.get(key)
     if plan is not None:
         _HITS += 1
@@ -229,7 +238,8 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
                     fmt=structure.fmt, shape=structure.shape, impl="kernel")
     tasks = _tasks_for(structure, cpt) if structure.fmt == "wcsr" else None
     plan = Plan(structure=structure, n=int(n), bn=bn, chunks_per_task=cpt,
-                tasks=tasks, pipeline_depth=depth, value_codec=codec)
+                tasks=tasks, pipeline_depth=depth, value_codec=codec,
+                route=str(route))
     _PLANS[key] = plan
     return plan
 
@@ -266,7 +276,8 @@ def _try_patch_plan(structure: SparseStructure, key, cpt) -> Optional[Plan]:
     return Plan(structure=structure, n=base_plan.n, bn=base_plan.bn,
                 chunks_per_task=cpt, tasks=tasks,
                 pipeline_depth=base_plan.pipeline_depth,
-                value_codec=base_plan.value_codec)
+                value_codec=base_plan.value_codec,
+                route=base_plan.route)
 
 
 def make_partition(structure, num_shards: int):
@@ -333,10 +344,17 @@ def cache_stats() -> dict:
          "tune_db":   {"hits", "misses", "stale", "sweeps"},
          "selections": {"pipeline_depth": {Q: count},
                         "value_codec":   {name: count}},
+         "spmv":      {"dispatched", "full_tile"},
          "delta":     {"appends", "retires", "plan_patched",
                        "partition_patched", "groups_reused",
                        "groups_requantized", "shards_reused",
                        "shards_reshipped"}}
+
+    ``spmv`` is the skinny-N dispatch view (``tiling.spmv_dispatch_info``):
+    route resolutions sent to the GEMV op family vs kept on the full-tile
+    kernels. A decode loop at steady state shows ``dispatched`` advancing
+    once per sparse layer per tick while prefill traffic lands in
+    ``full_tile``.
 
     ``tune_db`` is the persistent tuning database (``repro.tune``) view:
     warm-start adoptions vs consults that fell back, plus in-process
@@ -354,6 +372,7 @@ def cache_stats() -> dict:
     The legacy accessors stay (tests and external dashboards key on them);
     this aggregator is derived from the same counters, never a second set.
     """
+    from repro.ops.tiling import spmv_dispatch_info
     from repro.sparse.delta import delta_stats
 
     p = plan_cache_info()
@@ -373,6 +392,7 @@ def cache_stats() -> dict:
                     "stale": t.db_stale, "sweeps": t.sweeps},
         "selections": {"pipeline_depth": dict(t.pipeline_depths),
                        "value_codec": dict(t.value_codecs)},
+        "spmv": spmv_dispatch_info(),
         "delta": delta,
     }
 

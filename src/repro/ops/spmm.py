@@ -57,7 +57,7 @@ __all__ = ["spmm"]
 
 def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
          chunks_per_task=None, interpret=None, pipeline_depth=None,
-         value_codec=None, **extras) -> jax.Array:
+         value_codec=None, spmv_threshold=None, **extras) -> jax.Array:
     """``C[m, n] = A_sparse @ B`` for any registered sparse format of ``a``.
 
     Keyword arguments override the ambient ``use_config(...)`` /
@@ -72,10 +72,15 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
     (memoized per tensor), and ``"auto"`` adopts a measured
     ``autotune_spmm`` winner that passed the accuracy guard. Kernels
     receive the compressed payload + per-group scales and dequantize
-    in-register — the dequantized matrix is never materialized. Remaining
-    ``extras`` are forwarded to the backend (e.g. the sharded path's
-    ``reduce=``) and validated against its signature — unknown keywords
-    raise instead of being silently swallowed.
+    in-register — the dequantized matrix is never materialized.
+    ``spmv_threshold`` governs the skinny-N fast path: when the RHS has
+    ``n_cols <= threshold`` the call auto-dispatches to the ``spmv``
+    (GEMV row-split) op family — same numerics, decode-shaped dataflow
+    (an int pins the crossover, 0 disables it, ``"auto"`` adopts the
+    measured ``autotune_spmm`` route or ``DEFAULT_SPMV_THRESHOLD``).
+    Remaining ``extras`` are forwarded to the backend (e.g. the sharded
+    path's ``reduce=``) and validated against its signature — unknown
+    keywords raise instead of being silently swallowed.
     """
     if "pipeline_gather" in extras:
         warnings.warn(
@@ -90,7 +95,8 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
                           chunks_per_task=chunks_per_task,
                           interpret=interpret,
                           pipeline_depth=pipeline_depth,
-                          value_codec=value_codec)
+                          value_codec=value_codec,
+                          spmv_threshold=spmv_threshold)
     if isinstance(a, SparseTensor):
         a = _resolve_value_codec(a, cfg, int(b.shape[1]))
         a = _maybe_autoshard(a)
@@ -121,9 +127,40 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
         else:
             a = a.raw
     op = resolve_format(a)
+    if op in ("spmm/bcsr", "spmm/wcsr"):
+        op = _dispatch_route(op, a, b, cfg, extras)
     backend = resolve_backend(op, cfg.impl)
     _validate_extras(backend, extras)
     return backend.fn(a, b, cfg, **extras)
+
+
+def _dispatch_route(op: str, a, b, cfg: OpConfig, extras) -> str:
+    """Reroute a skinny-N call to the ``spmv`` op family (decode fast path).
+
+    The crossover comes from ``resolve_spmv_route`` (explicit
+    ``spmv_threshold`` int, or the measured ``autotune_spmm`` route /
+    ``DEFAULT_SPMV_THRESHOLD`` under ``"auto"``); each decision is tallied
+    in ``cache_stats()["spmv"]``. Sharded operands skip this hook — their
+    per-device local calls route inside ``sharded_spmm``.
+    """
+    from repro.ops.tiling import resolve_spmv_route
+
+    fmt = op.split("/", 1)[1]
+    st = extras.get("structure")
+    if st is not None:
+        shape, block = st.shape, st.block
+    elif fmt == "wcsr":
+        shape, block = a.shape, (a.b_row, a.b_col)
+    else:
+        shape, block = a.shape, a.block
+    route = resolve_spmv_route(cfg.spmv_threshold, b.shape[1], op="spmm",
+                               fmt=fmt, shape=shape, block=block,
+                               dtype=a.dtype)
+    if route == "spmv":
+        import repro.ops.spmv  # noqa: F401 — registers the spmv backends
+
+        return f"spmv/{fmt}"
+    return op
 
 
 def _resolve_value_codec(a: SparseTensor, cfg: OpConfig, n: int

@@ -1,0 +1,168 @@
+"""Skinny-N SpMV/GEMV op family: the decode-loop fast path.
+
+``spmm`` wastes a full ``bn`` MMA tile on an N=1 decode activation; Yang et
+al. (*Design Principles for Sparse Matrix Multiplication on the GPU*) show
+sparse@vector wants a structurally different kernel — row-split
+multiply-accumulate — and Acc-SpMM's workload grid likewise measures
+sparse@vector as its own op family. ``spmv`` is that family here: the same
+registry contract as ``spmm`` (``ref`` / ``kernel`` / ``kernel_interpret``
+backends per format, ``OpConfig`` knobs, plan-cache amortization, codec
+payloads dequantized in-register) over the GEMV kernel bodies in
+``repro.kernels`` (``wcsr_spmv_kernel`` / ``bcsr_spmv_kernel``).
+
+Callers rarely invoke ``spmv`` directly: ``spmm`` auto-dispatches here when
+``n_cols <= spmv_threshold`` (see ``tiling.resolve_spmv_route``), so the
+serve decode tick and ``models.transformer.decode_step`` ride the fast path
+with zero call-site changes. The public ``spmv(a, b)`` entry exists for
+explicit use and additionally accepts a 1-D ``b`` vector.
+
+The jnp references are shared with ``spmm`` — a GEMV is an N-column SpMM,
+so the full-tile refs *are* the accuracy oracle for the vector kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bcsr.kernel import bcsr_spmv_kernel
+from repro.kernels.wcsr.kernel import wcsr_spmv_kernel
+from repro.ops.config import OpConfig, resolve_interpret
+from repro.ops.plan import make_plan
+from repro.ops.registry import on_tpu, register_backend
+from repro.ops.spmm import _bcsr_spmm_ref, _wcsr_spmm_ref, spmm
+from repro.sparse.formats import BCSR, WCSR
+from repro.sparse.structure import wcsr_planning_structure
+
+__all__ = ["spmv"]
+
+# any finite RHS width routes to the vector family under this threshold
+_FORCE_SPMV = 1 << 30
+
+
+def spmv(a, b: jax.Array, **knobs) -> jax.Array:
+    """``y = A_sparse @ b`` on the GEMV (row-split) kernel family.
+
+    Same operand/knob contract as :func:`repro.ops.spmm` (``impl``, codec
+    knobs, ``SparseTensor`` unwrapping, extras validation all shared), but
+    the route is pinned to the skinny-N family regardless of width — use
+    it when the caller *knows* the RHS is decode-shaped. ``b`` may be a
+    1-D ``[k]`` vector (returns ``[m]``) or a ``[k, n]`` matrix.
+    """
+    if "spmv_threshold" in knobs:
+        raise TypeError("spmv() pins the route; pass spmv_threshold to "
+                        "spmm() instead")
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    out = spmm(a, b, spmv_threshold=_FORCE_SPMV, **knobs)
+    return out[:, 0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Reference backends: a GEMV is an N-column SpMM, so the spmm refs are
+# reused verbatim — one oracle for both routes.
+# ---------------------------------------------------------------------------
+
+register_backend("spmv/bcsr", "ref", priority=50)(_bcsr_spmm_ref)
+register_backend("spmv/wcsr", "ref", priority=50)(_wcsr_spmm_ref)
+
+
+# ---------------------------------------------------------------------------
+# BCSR backends
+# ---------------------------------------------------------------------------
+
+
+def _bcsr_spmv_pallas(a: BCSR, b, cfg: OpConfig, interpret: bool,
+                      structure=None, codec="none", scales=None):
+    bm, _ = a.block
+    n = b.shape[1]
+    if structure is not None:
+        # no bn to resolve on the vector path, but the plan lookup keeps
+        # the route cache-keyed and the serve amortization counters honest
+        make_plan(structure, n, cfg, dtype=a.dtype, codec=codec,
+                  route="spmv")
+    return bcsr_spmv_kernel(
+        a.block_rows,
+        a.block_cols,
+        a.blocks,
+        b,
+        scales,
+        m_blocks=a.shape[0] // bm,
+        block=a.block,
+        out_dtype=cfg.out_dtype,
+        interpret=interpret,
+        codec=codec,
+    )
+
+
+@register_backend("spmv/bcsr", "kernel", available=on_tpu, priority=100)
+def _bcsr_spmv_kernel(a: BCSR, b, cfg: OpConfig, *, structure=None,
+                      codec="none", scales=None):
+    return _bcsr_spmv_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
+                             structure, codec, scales)
+
+
+@register_backend("spmv/bcsr", "kernel_interpret", priority=10)
+def _bcsr_spmv_kernel_interpret(a: BCSR, b, cfg: OpConfig, *, structure=None,
+                                codec="none", scales=None):
+    return _bcsr_spmv_pallas(a, b, cfg, resolve_interpret(cfg, True),
+                             structure, codec, scales)
+
+
+# ---------------------------------------------------------------------------
+# WCSR backends
+# ---------------------------------------------------------------------------
+
+
+def _wcsr_spmv_pallas(a: WCSR, b, cfg: OpConfig, interpret: bool,
+                      structure=None, codec="none", scales=None):
+    if structure is None:
+        if isinstance(a.window_ptr, jax.core.Tracer):
+            raise ValueError(
+                "spmv on WCSR with impl='kernel'/'kernel_interpret' derives "
+                "its static task decomposition from concrete window_ptr "
+                "values, so it cannot run under an enclosing jit/vmap trace. "
+                "Call it outside jit, wrap the operand in a SparseTensor "
+                "(its static structure makes this path traceable), or use "
+                "impl='ref' (fully traceable).")
+        structure = wcsr_planning_structure(a)
+    n = b.shape[1]
+    # same §III-C task split and §III-A depth resolution as the spmm path
+    # (route-invariant, so the structure-keyed task cache is shared); the
+    # route in the key keeps decode plans beside the prefill ones
+    plan = make_plan(structure, n, cfg, dtype=a.dtype, codec=codec,
+                     route="spmv")
+    t_win, t_start, t_n = plan.tasks
+    partial = wcsr_spmv_kernel(
+        jnp.asarray(t_start),
+        jnp.asarray(t_n),
+        a.col_idx,
+        a.values,
+        b,
+        scales,
+        b_row=a.b_row,
+        b_col=a.b_col,
+        chunks_per_task=plan.chunks_per_task,
+        out_dtype=jnp.float32,
+        interpret=interpret,
+        pipeline_depth=plan.pipeline_depth,
+        codec=codec,
+    )  # [T, b_row, n]
+    out = jax.ops.segment_sum(
+        partial, jnp.asarray(t_win), num_segments=a.num_windows)
+    return out.reshape(a.shape[0], -1).astype(cfg.out_dtype or b.dtype)
+
+
+@register_backend("spmv/wcsr", "kernel", available=on_tpu, priority=100)
+def _wcsr_spmv_kernel(a: WCSR, b, cfg: OpConfig, *, structure=None,
+                      codec="none", scales=None):
+    return _wcsr_spmv_pallas(a, b, cfg, resolve_interpret(cfg, not on_tpu()),
+                             structure, codec, scales)
+
+
+@register_backend("spmv/wcsr", "kernel_interpret", priority=10)
+def _wcsr_spmv_kernel_interpret(a: WCSR, b, cfg: OpConfig, *,
+                                structure=None, codec="none", scales=None):
+    return _wcsr_spmv_pallas(a, b, cfg, resolve_interpret(cfg, True),
+                             structure, codec, scales)

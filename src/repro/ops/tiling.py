@@ -49,8 +49,9 @@ __all__ = ["resolve_bn", "auto_bn", "pad_cols", "unpad_cols",
            "tuning_cache_info", "clear_tuning_cache", "TuningCacheInfo",
            "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
            "count_codec_selection", "set_tune_db", "active_tune_db",
-           "adopt_tuned_entries", "ENV_TUNE_ITERS_VAR",
-           "ENV_TUNE_WARMUP_VAR"]
+           "adopt_tuned_entries", "resolve_spmv_route",
+           "spmv_dispatch_info", "DEFAULT_SPMV_THRESHOLD",
+           "ENV_TUNE_ITERS_VAR", "ENV_TUNE_WARMUP_VAR"]
 
 # measured-timing overrides for autotune_spmm (stable DB entries need
 # stable measurements; CI smoke can dial them down)
@@ -103,6 +104,19 @@ _DB_MISSES = 0
 _DB_STALE = 0
 _SWEEPS = 0
 
+# --- skinny-N (SpMV/GEMV) dispatch -----------------------------------------
+# Crossover adopted when spmv_threshold="auto" and no measured route exists
+# for the shape: decode ticks batch at most a few sequences per slot-group,
+# so a handful of columns still pays the full bn tile + per-row DMA costs
+# the vector kernels avoid.
+DEFAULT_SPMV_THRESHOLD = 4
+# autotune_spmm sweeps the route only when N is plausibly skinny; beyond
+# this the MMA tile always wins and the extra probes are wasted time.
+SPMV_SWEEP_MAX = 16
+# route decisions on spmv-eligible ops: "dispatched" = sent to the GEMV
+# family, "full_tile" = kept on the bn-wide SpMM kernels
+_SPMV_DISPATCH: Dict[str, int] = {"dispatched": 0, "full_tile": 0}
+
 
 def clear_tuning_cache() -> None:
     """Drop all memoized §IV-C tile selections, measured auto-tune entries,
@@ -119,6 +133,7 @@ def clear_tuning_cache() -> None:
     _TUNED.clear()
     _DEPTH_SELECTIONS.clear()
     _CODEC_SELECTIONS.clear()
+    _SPMV_DISPATCH.update(dispatched=0, full_tile=0)
     _DB_NEG.clear()
     _HITS = 0
     _MISSES = 0
@@ -277,6 +292,55 @@ def count_codec_selection(codec: str) -> None:
     _CODEC_SELECTIONS[codec] = _CODEC_SELECTIONS.get(codec, 0) + 1
 
 
+def spmv_dispatch_info() -> Dict[str, int]:
+    """Skinny-N route counters: ``{"dispatched": spmv, "full_tile": spmm}``.
+
+    Every route resolution on an spmv-eligible op bumps one side, so the
+    serving dashboard can prove decode traffic actually rides the GEMV
+    family (``dispatched`` grows per tick) while prefill stays on the
+    tile-parallel kernels. Surfaced as ``cache_stats()["spmv"]`` and in
+    ``ServeEngine.stats()``; reset by ``clear_tuning_cache``.
+    """
+    return dict(_SPMV_DISPATCH)
+
+
+def _count_route(route: str, count: bool) -> None:
+    if count:
+        key = "dispatched" if route == "spmv" else "full_tile"
+        _SPMV_DISPATCH[key] = _SPMV_DISPATCH[key] + 1
+
+
+def resolve_spmv_route(threshold: Union[int, str, None], n: int, *,
+                       op: str = "spmm", fmt: str = "", shape=None,
+                       block=(128, 128), dtype=jnp.float32,
+                       count: bool = True) -> str:
+    """Resolve the SpMM-vs-SpMV route for an N-column RHS.
+
+    An explicit int threshold pins the crossover (``n <= t`` routes to
+    ``"spmv"``; 0 disables the vector path outright). ``"auto"``/None
+    prefers a *measured* route — the ``"route"`` field of an
+    ``autotune_spmm`` / ``TuneDB`` winner for this problem, when ``shape``
+    is known — and otherwise falls back to the static
+    ``DEFAULT_SPMV_THRESHOLD`` crossover. The decision is tallied in
+    ``spmv_dispatch_info()`` unless ``count=False`` (pre-flight probes).
+    """
+    n = int(n)
+    if threshold not in (None, "auto"):
+        t = int(threshold)
+        route = "spmv" if (t > 0 and n <= t) else "spmm"
+        _count_route(route, count)
+        return route
+    if shape is not None:
+        tuned = tuned_entry(op, fmt, shape, n, block, dtype)
+        if tuned is not None and tuned.get("route") in ("spmm", "spmv"):
+            route = tuned["route"]
+            _count_route(route, count)
+            return route
+    route = "spmv" if n <= DEFAULT_SPMV_THRESHOLD else "spmm"
+    _count_route(route, count)
+    return route
+
+
 def auto_bn(n: int, bm: int = 128, bk: int = 128, dtype=jnp.bfloat16, *,
             op: str = "spmm", fmt: str = "", shape: Tuple[int, ...] = (),
             impl: str = "") -> int:
@@ -418,7 +482,11 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
     Times real ``repro.ops.spmm(a, b)`` calls for every candidate combo,
     memoizes the winner for this (format, shape, N, block, dtype) problem,
     and returns it as ``{"bn", "chunks_per_task", "pipeline_depth",
-    "value_codec", "us", "rejected_codecs"}``. Subsequent ``make_plan`` /
+    "value_codec", "route", "us", "rejected_codecs"}``. Skinny problems
+    (``n <= SPMV_SWEEP_MAX``) additionally race the GEMV (``spmv``) route
+    against the tile kernels, so the winner's ``"route"`` turns the
+    ``spmv_threshold="auto"`` crossover into a measured per-shape decision
+    (picked up by ``resolve_spmv_route``, persisted via the ``TuneDB``). Subsequent ``make_plan`` /
     ``spmm`` calls whose config leaves ``bn`` / ``chunks_per_task`` /
     ``pipeline_depth`` on ``"auto"`` adopt the tuned values (stale
     auto-``bn`` plans are dropped so they re-resolve; task splits and mesh
@@ -508,14 +576,19 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
         depths = (None,) if depths is None else depths
         chunks = (None,) if chunks_per_task is None else chunks_per_task
     codecs = ("none", "int8") if codecs is None else codecs
+    # skinny problems race the GEMV family against the tile kernels so the
+    # spmv crossover becomes a *measured* per-shape decision (the winner's
+    # "route" is what spmv_threshold="auto" adopts via resolve_spmv_route)
+    routes = ("spmm", "spmv") if n <= SPMV_SWEEP_MAX else ("spmm",)
     best = None
     rejected = {}
-    # the sweep itself resolves every candidate depth/codec (and its spmm
-    # probes consult the DB through make_plan); snapshot the selection and
-    # DB-consult counters so the dashboard reflects only what real traffic
-    # runs with, not the tuner's probing
+    # the sweep itself resolves every candidate depth/codec/route (and its
+    # spmm probes consult the DB through make_plan); snapshot the selection
+    # and DB-consult counters so the dashboard reflects only what real
+    # traffic runs with, not the tuner's probing
     depth_counters = dict(_DEPTH_SELECTIONS)
     codec_counters = dict(_CODEC_SELECTIONS)
+    spmv_counters = dict(_SPMV_DISPATCH)
     db_counters = (_DB_HITS, _DB_MISSES, _DB_STALE)
     try:
         ref = None
@@ -537,28 +610,38 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
                 continue
             operands.append((cname, aq))
         for cname, operand in operands:
-            for bn in bns:
-                for cpt in chunks:
-                    for depth in depths:
-                        with use_config(impl=impl, bn=bn,
-                                        chunks_per_task=cpt,
-                                        pipeline_depth=depth):
-                            f = jax.jit(lambda b_: spmm(operand, b_))
-                            us = _time_us(f, b, warmup=warmup, iters=iters)
-                        cand = {"bn": int(bn),
-                                "chunks_per_task": cpt if cpt is None
-                                else int(cpt),
-                                "pipeline_depth": depth if depth is None
-                                else int(depth),
-                                "value_codec": cname,
-                                "us": us}
-                        if best is None or us < best["us"]:
-                            best = cand
+            for route in routes:
+                # the vector path has no bn tile, so sweeping widths there
+                # would just re-time identical launches
+                route_bns = bns if route == "spmm" else bns[:1]
+                thr = n if route == "spmv" else 0
+                for bn in route_bns:
+                    for cpt in chunks:
+                        for depth in depths:
+                            with use_config(impl=impl, bn=bn,
+                                            chunks_per_task=cpt,
+                                            pipeline_depth=depth,
+                                            spmv_threshold=thr):
+                                f = jax.jit(lambda b_: spmm(operand, b_))
+                                us = _time_us(f, b, warmup=warmup,
+                                              iters=iters)
+                            cand = {"bn": int(bn),
+                                    "chunks_per_task": cpt if cpt is None
+                                    else int(cpt),
+                                    "pipeline_depth": depth if depth is None
+                                    else int(depth),
+                                    "value_codec": cname,
+                                    "route": route,
+                                    "us": us}
+                            if best is None or us < best["us"]:
+                                best = cand
     finally:
         _DEPTH_SELECTIONS.clear()
         _DEPTH_SELECTIONS.update(depth_counters)
         _CODEC_SELECTIONS.clear()
         _CODEC_SELECTIONS.update(codec_counters)
+        _SPMV_DISPATCH.clear()
+        _SPMV_DISPATCH.update(spmv_counters)
         _DB_HITS, _DB_MISSES, _DB_STALE = db_counters
     if best is None:
         # every candidate codec failed the guard and "none" wasn't swept:

@@ -59,14 +59,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.kernels.bcsr.kernel import bcsr_spmm_kernel
+from repro.kernels.bcsr.kernel import bcsr_spmm_kernel, bcsr_spmv_kernel
 from repro.kernels.bcsr.ref import bcsr_spmm_ref
-from repro.kernels.wcsr.kernel import wcsr_spmm_kernel
+from repro.kernels.wcsr.kernel import wcsr_spmm_kernel, wcsr_spmv_kernel
 from repro.kernels.wcsr.ref import wcsr_spmm_ref
 from repro.ops.config import OpConfig, resolve_interpret
 from repro.ops.plan import make_partition, make_plan
 from repro.ops.registry import on_tpu, register_backend, resolve_backend
-from repro.ops.tiling import pad_cols, resolve_bn, unpad_cols
+from repro.ops.tiling import (pad_cols, resolve_bn, resolve_spmv_route,
+                              unpad_cols)
 from repro.parallel.collectives import compressed_psum_bf16
 from repro.sparse.formats import BCSR, WCSR
 from repro.sparse.structure import SparseStructure
@@ -586,11 +587,21 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
         raise ValueError(f"A {g.shape} @ B {b.shape}: inner dims differ")
     n = b.shape[1]
     bm, bk = g.block
+    # one global skinny-N route, resolved once like bn/depth below (shards
+    # must run one SPMD program): distributed decode rides the same GEMV
+    # kernels as the single-device dispatch instead of silently falling
+    # back to full-tile SpMM
+    route = resolve_spmv_route(cfg.spmv_threshold, n, op="spmm", fmt=g.fmt,
+                               shape=g.shape, block=g.block, dtype=a.dtype)
     # one global tile width, identical to the unsharded selection (shards
     # must run one SPMD program; per-shard bn would diverge the grid)
     bn = resolve_bn(cfg.bn, n, bm, bk, a.dtype, op="spmm", fmt=g.fmt,
                     shape=g.shape, impl="kernel")
-    (b_pad,), bn_eff, pad = pad_cols([b], n, bn)
+    if route == "spmv":
+        # no bn tiling on the vector path, hence nothing to pad
+        b_pad, bn_eff, pad = b, None, 0
+    else:
+        (b_pad,), bn_eff, pad = pad_cols([b], n, bn)
     interpret = resolve_interpret(cfg, True if impl == "kernel_interpret"
                                   else not on_tpu())
     idx = a.partition.index_arrays()
@@ -604,7 +615,8 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
 
     if g.fmt == "wcsr":
         cfg_bn = dataclasses.replace(cfg, bn=bn)
-        plans = [make_plan(s, n, cfg_bn, dtype=a.dtype, codec=codec)
+        plans = [make_plan(s, n, cfg_bn, dtype=a.dtype, codec=codec,
+                           route=route)
                  for s in a.partition.shards]
         cpt = plans[0].chunks_per_task
         # one global §III-A depth, like bn: shards run one SPMD program
@@ -631,10 +643,18 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
                              padded_cols=padded_cols)
                 out = wcsr_spmm_ref(w_loc, bmat, out_dtype=jnp.float32)
             else:
-                partial = wcsr_spmm_kernel(
-                    ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk, bn=bn_eff,
-                    chunks_per_task=cpt, out_dtype=jnp.float32,
-                    interpret=interpret, pipeline_depth=depth, codec=codec)
+                if route == "spmv":
+                    partial = wcsr_spmv_kernel(
+                        ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk,
+                        chunks_per_task=cpt, out_dtype=jnp.float32,
+                        interpret=interpret, pipeline_depth=depth,
+                        codec=codec)
+                else:
+                    partial = wcsr_spmm_kernel(
+                        ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk,
+                        bn=bn_eff, chunks_per_task=cpt,
+                        out_dtype=jnp.float32, interpret=interpret,
+                        pipeline_depth=depth, codec=codec)
                 out = jax.ops.segment_sum(partial, tw,
                                           num_segments=num_windows)
                 out = out.reshape(m, -1)
@@ -662,6 +682,12 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
                              block_row_ptr=pt, shape=(m, k), block=(bm, bk),
                              nnz_blocks=nnz_p)
                 out = bcsr_spmm_ref(a_loc, bmat, out_dtype=jnp.float32)
+            elif route == "spmv":
+                # no row mask needed: the spmv kernel zero-fills its whole
+                # accumulator, so uncovered rows are genuinely zero
+                out = bcsr_spmv_kernel(
+                    r, c, bl, bmat, sc, m_blocks=m_blocks, block=(bm, bk),
+                    out_dtype=jnp.float32, interpret=interpret, codec=codec)
             else:
                 out = bcsr_spmm_kernel(
                     r, c, bl, bmat, sc, m_blocks=m_blocks, block=(bm, bk),

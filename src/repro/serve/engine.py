@@ -499,6 +499,15 @@ class ServeEngine:
         mask grows every step advances ``plan_patched`` while
         ``plan_cache.misses`` stays flat — zero full re-plans.
 
+        ``spmv`` is the skinny-N dispatch view (``cache_stats()["spmv"]``):
+        sparse calls routed to the GEMV (``repro.ops.spmv``) kernel family
+        vs kept on the full-tile SpMM kernels. Decode ticks run skinny
+        activation batches, so a healthy engine shows ``dispatched``
+        advancing with ``decode_tokens`` while prefill traffic lands in
+        ``full_tile`` (the crossover is ``OpConfig.spmv_threshold`` —
+        "auto" adopts the measured ``autotune_spmm`` route; see
+        docs/performance.md).
+
         ``tune_db`` reports the persistent-tuning warm-start state (None
         when the engine was built without one): the DB summary
         (path / entries / stale_entries / quarantined / env) merged with
@@ -539,6 +548,7 @@ class ServeEngine:
             "codec_bytes": codec_bytes_report(),
             "cache_stats": cs,
             "structure_deltas": cs["delta"],
+            "spmv": cs["spmv"],
             "tune_db": tune_db,
             "sparse_shards": partition_balance_report(),
             "mode": "paged" if self.paged else "legacy",

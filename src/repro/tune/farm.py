@@ -76,14 +76,18 @@ class TuneJob:
 
 def default_fleet() -> List[TuneJob]:
     """A representative serving fleet: FFN-ish BCSR + attention-ish WCSR
-    shapes across sparsities and codecs."""
+    shapes across sparsities and codecs — prefill widths (n=128) plus the
+    skinny decode widths (n in {1, 4, 16}) so the farm warms decode-path
+    entries and the measured spmm-vs-spmv crossover route, not just the
+    wide-N tiles the old fleet hardcoded."""
     jobs = []
     for fmt, block in (("bcsr", (32, 32)), ("wcsr", (32, 8))):
         for m, k in ((256, 256), (512, 256)):
             for sparsity in (0.5, 0.8):
-                jobs.append(TuneJob(fmt=fmt, m=m, k=k, n=128, block=block,
-                                    sparsity=sparsity,
-                                    codecs=("none", "int8")))
+                for n in (1, 4, 16, 128):
+                    jobs.append(TuneJob(fmt=fmt, m=m, k=k, n=n, block=block,
+                                        sparsity=sparsity,
+                                        codecs=("none", "int8")))
     return jobs
 
 

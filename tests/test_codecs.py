@@ -397,7 +397,8 @@ def test_cache_stats_unifies_counters(rng):
     sw.matmul(b, impl="kernel_interpret")
     cs = ops.cache_stats()
     assert set(cs) == {"plan", "tasks", "partition", "tuning", "selections",
-                       "tune_db", "delta"}
+                       "tune_db", "spmv", "delta"}
+    assert set(cs["spmv"]) == {"dispatched", "full_tile"}
     # derived from the same counters as the legacy accessors — never a
     # second set that can drift
     p = ops.plan_cache_info()

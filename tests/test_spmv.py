@@ -1,0 +1,199 @@
+"""Skinny-N fast path: the ``spmv`` op family and its ``spmm`` dispatch.
+
+The contract under test: for a decode-shaped RHS the GEMV kernel family
+(``wcsr_spmv_kernel`` / ``bcsr_spmv_kernel``, reached via ``repro.ops.spmv``
+or ``spmm`` auto-dispatch at ``n_cols <= spmv_threshold``) is numerically
+interchangeable with the full-tile SpMM path — across formats, value codecs
+and pipeline depths — while being a *different* compiled dataflow (row-split
+multiply-accumulate, B VMEM-resident). Dispatch decisions are observable in
+``cache_stats()["spmv"]``, the resolved route is part of the ``Plan`` cache
+key, and a structure-delta edit patches the spmv plan instead of re-planning.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.ops as ops
+from repro.ops import (DEFAULT_SPMV_THRESHOLD, cache_stats, clear_plan_cache,
+                       clear_tuning_cache, make_plan, resolve_spmv_route,
+                       spmm, spmv, spmv_dispatch_info, use_config)
+from repro.sparse import SparseTensor, registered_value_codecs
+
+M = K = 64
+WBLOCK = (16, 8)
+BBLOCK = (16, 16)
+CODECS = tuple(c for c in ("none", "int8", "fp8_e4m3")
+               if c == "none" or c in registered_value_codecs())
+# spmv vs the f32 reference: same budgets the codec suite documents
+TOL = {"none": 1e-5, "int8": 0.05, "fp8_e4m3": 0.12}
+
+
+def _rel(got, ref):
+    return float(np.max(np.abs(got - ref)) / (np.max(np.abs(ref)) + 1e-12))
+
+
+def _tensor(rng, fmt, density=0.4):
+    d = rng.normal(size=(M, K)).astype(np.float32)
+    d *= rng.random(d.shape) < density
+    block = WBLOCK if fmt == "wcsr" else BBLOCK
+    return SparseTensor.from_dense(d, fmt, block=block), d
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: spmv == spmm across formats x codecs x depths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("fmt", ["wcsr", "bcsr"])
+def test_spmv_matches_spmm(fmt, codec, depth, rng):
+    st, d = _tensor(rng, fmt)
+    if codec != "none":
+        st = st.quantize(codec)
+    b = jnp.asarray(rng.normal(size=(K, 1)).astype(np.float32))
+    ref = d @ np.asarray(b)
+    with use_config(impl="kernel_interpret", pipeline_depth=depth):
+        got = np.asarray(spmv(st, b))
+        full = np.asarray(spmm(st, b, spmv_threshold=0))  # full-tile path
+    assert _rel(got, ref) <= TOL[codec], (fmt, codec, depth)
+    # both kernel families dequantize the same payload: they agree far
+    # tighter than either agrees with the f32 oracle
+    assert _rel(got, full) <= 1e-5, (fmt, codec, depth)
+
+
+@pytest.mark.parametrize("fmt", ["wcsr", "bcsr"])
+def test_spmv_vector_and_matrix_forms(fmt, rng):
+    st, d = _tensor(rng, fmt)
+    v = jnp.asarray(rng.normal(size=(K,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(K, 3)).astype(np.float32))
+    with use_config(impl="kernel_interpret"):
+        y = np.asarray(spmv(st, v))
+        c = np.asarray(spmv(st, b))
+    assert y.shape == (M,)
+    assert _rel(y, d @ np.asarray(v)) <= 1e-5
+    assert c.shape == (M, 3)
+    assert _rel(c, d @ np.asarray(b)) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Edge cases: empty rows, single stored block
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["wcsr", "bcsr"])
+def test_spmv_empty_rows(fmt, rng):
+    _, d = _tensor(rng, fmt)
+    d[16:32, :] = 0.0  # one whole block-row / window stores nothing
+    block = WBLOCK if fmt == "wcsr" else BBLOCK
+    st = SparseTensor.from_dense(d, fmt, block=block)
+    b = jnp.asarray(rng.normal(size=(K, 1)).astype(np.float32))
+    with use_config(impl="kernel_interpret"):
+        got = np.asarray(spmv(st, b))
+    assert np.all(got[16:32] == 0.0)
+    assert _rel(got, d @ np.asarray(b)) <= 1e-5
+
+
+@pytest.mark.parametrize("fmt", ["wcsr", "bcsr"])
+def test_spmv_single_block(fmt, rng):
+    d = np.zeros((M, K), np.float32)
+    d[:16, :8] = rng.normal(size=(16, 8)).astype(np.float32)
+    block = WBLOCK if fmt == "wcsr" else BBLOCK
+    st = SparseTensor.from_dense(d, fmt, block=block)
+    b = jnp.asarray(rng.normal(size=(K, 1)).astype(np.float32))
+    with use_config(impl="kernel_interpret"):
+        got = np.asarray(spmv(st, b))
+    assert _rel(got, d @ np.asarray(b)) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: threshold resolution + counters
+# ---------------------------------------------------------------------------
+
+
+def test_spmm_auto_dispatches_skinny_rhs(rng):
+    st, d = _tensor(rng, "wcsr")
+    clear_plan_cache()
+    clear_tuning_cache()
+    assert spmv_dispatch_info() == {"dispatched": 0, "full_tile": 0}
+    with use_config(impl="kernel_interpret"):
+        # N=1 <= DEFAULT_SPMV_THRESHOLD: rides the GEMV family
+        b1 = jnp.asarray(rng.normal(size=(K, 1)).astype(np.float32))
+        got = np.asarray(spmm(st, b1))
+    assert spmv_dispatch_info()["dispatched"] == 1
+    assert _rel(got, d @ np.asarray(b1)) <= 1e-5
+    with use_config(impl="kernel_interpret"):
+        # wide N stays on the tile kernels
+        bw = jnp.asarray(rng.normal(size=(K, 128)).astype(np.float32))
+        spmm(st, bw)
+        # an explicit 0 threshold disables the fast path even at N=1
+        spmm(st, b1, spmv_threshold=0)
+    info = spmv_dispatch_info()
+    assert info == {"dispatched": 1, "full_tile": 2}
+    # explicit int threshold pins the crossover above the default
+    assert DEFAULT_SPMV_THRESHOLD < 8
+    b8 = jnp.asarray(rng.normal(size=(K, 8)).astype(np.float32))
+    with use_config(impl="kernel_interpret"):
+        got8 = np.asarray(spmm(st, b8, spmv_threshold=8))
+    assert spmv_dispatch_info()["dispatched"] == 2
+    assert _rel(got8, d @ np.asarray(b8)) <= 1e-5
+    # the counters surface through the unified aggregator
+    assert cache_stats()["spmv"] == spmv_dispatch_info()
+
+
+def test_autotuned_route_steers_auto_threshold(rng):
+    st, _ = _tensor(rng, "wcsr")
+    clear_plan_cache()
+    clear_tuning_cache()
+    b = jnp.asarray(rng.normal(size=(K, 1)).astype(np.float32))
+    w = ops.autotune_spmm(st, b, impl="kernel_interpret", codecs=("none",),
+                          warmup=0, iters=1, use_db=False)
+    assert w["route"] in ("spmm", "spmv")
+    # "auto" now resolves to the measured route for this exact problem
+    got = resolve_spmv_route("auto", 1, op="spmm", fmt="wcsr",
+                             shape=st.shape, block=st.block, dtype=st.dtype,
+                             count=False)
+    assert got == w["route"]
+
+
+def test_route_is_plan_cache_keyed(rng):
+    st, _ = _tensor(rng, "wcsr")
+    clear_plan_cache()
+    p_mm = make_plan(st.structure, 1, dtype=st.dtype, route="spmm")
+    p_mv = make_plan(st.structure, 1, dtype=st.dtype, route="spmv")
+    assert p_mm is not p_mv and p_mm.route == "spmm" and p_mv.route == "spmv"
+    assert ops.plan_cache_info().misses == 2
+    # both routes hit their own entry on re-lookup
+    assert make_plan(st.structure, 1, dtype=st.dtype, route="spmv") is p_mv
+    assert ops.plan_cache_info().hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Dynamic structure: a delta edit patches the spmv plan, no re-plan
+# ---------------------------------------------------------------------------
+
+
+def test_structure_delta_patches_spmv_plan(rng):
+    st, d = _tensor(rng, "wcsr", density=0.04)
+    clear_plan_cache()
+    clear_tuning_cache()
+    b = jnp.asarray(rng.normal(size=(K, 1)).astype(np.float32))
+    with use_config(impl="kernel_interpret"):
+        spmv(st, b)  # plans (and caches) the spmv route for the base
+    before = cache_stats()["plan"]
+    # grow one window by a chunk (at a column it doesn't store yet)
+    g = st.structure
+    p0, p1 = int(g.ptrs[0]), int(g.ptrs[1])
+    stored = {int(c) for c in g.indices[0][p0:p1] if int(c) >= 0}
+    w, cols = 0, [next(c for c in range(K) if c not in stored)]
+    vals = rng.normal(size=(WBLOCK[0], 1)).astype(np.float32)
+    grown = st.append_window_chunks(w, cols, vals)
+    d2 = d.copy()
+    d2[:WBLOCK[0], cols] = vals
+    with use_config(impl="kernel_interpret"):
+        got = np.asarray(spmv(grown, b))
+    after = cache_stats()["plan"]
+    assert after["patched"] == before["patched"] + 1
+    assert after["misses"] == before["misses"]  # no full re-plan
+    assert _rel(got, d2 @ np.asarray(b)) <= 1e-5
