@@ -9,12 +9,22 @@ plumbing smoke (does the sharded path run, does it stay numerically sane),
 not a speedup claim — the ``derived`` column reports the partitioner's
 worst/mean shard-balance ratio, which *is* meaningful at any scale.
 
-Standalone: ``python benchmarks/dist_scaling.py`` (add ``--devices 8`` or
-``--smoke``).
+The ``dist/overlap`` row exercises the chunked compute/collective overlap
+(``combine_chunks``): both combines are measured on the host mesh (plumbing
+smoke; their outputs must match bitwise-tight), and the ``derived`` column
+reports *modeled v5e* throughput — blocking = ``t_comp + t_coll`` vs
+overlapped = ``max(t_comp, t_coll) + min(t_comp, t_coll)/chunks`` — which
+is what the CI guard checks (overlapped >= blocking by construction of the
+overlap; the measured host numbers ride along in the JSON extras).
+
+Standalone: ``python benchmarks/dist_scaling.py`` (add ``--devices 8``,
+``--smoke``, or ``--topology 2x2`` for a 2-D ``(data, model)`` mesh with
+the ``reduce="hier"`` combine).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import pathlib
 import subprocess
@@ -22,6 +32,11 @@ import sys
 
 _SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 _DEVICES = 4
+_TOPOLOGY = None  # (rows, cols) -> 2-D (data, model) mesh in the child
+
+# v5e inter-chip (ICI) bandwidth per chip, one direction — the collective
+# cost model for the overlap row (HBM/MXU peaks live in benchmarks.common)
+ICI_BW = 4.5e10
 
 
 def _child() -> None:
@@ -31,31 +46,77 @@ def _child() -> None:
     import numpy as np
 
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-    from benchmarks.common import suite_matrix, time_call
+    from benchmarks.common import model_bcsr_time, suite_matrix, tflops, time_call
 
-    from repro.ops import make_partition, spmm
+    from repro.ops import DEFAULT_COMBINE_CHUNKS, auto_bn, make_partition, spmm
     from repro.sparse import SparseTensor
 
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev,), ("data",))
+    if _TOPOLOGY is not None:
+        r, c = _TOPOLOGY
+        mesh = jax.make_mesh((r, c), ("data", "model"))
+        axes = ("data", "model")
+    else:
+        mesh = jax.make_mesh((ndev,), ("data",))
+        axes = "data"
     m, k, n = (256, 256, 64) if _SMOKE else (1024, 1024, 256)
     d = suite_matrix("powerlaw", m, k, 0.05, seed=0)
     b = jnp.asarray(np.random.default_rng(1).normal(size=(k, n)),
                     jnp.float32)
+    tag = (f"{_TOPOLOGY[0]}x{_TOPOLOGY[1]}" if _TOPOLOGY is not None
+           else f"x{ndev}")
     for fmt, block in [("bcsr", (32, 32)), ("wcsr", (32, 8))]:
         st = SparseTensor.from_dense(d, fmt, block=block)
         ratio = make_partition(st.structure, ndev).balance()["ratio"]
         f1 = jax.jit(lambda x: spmm(st, x))
         us1 = time_call(f1, b)
-        sst = st.shard(mesh, "data")
+        sst = st.shard(mesh, axes)
         fs = jax.jit(lambda x: spmm(sst, x))
         uss = time_call(fs, b)
         # sanity: the two paths agree before either time means anything
         np.testing.assert_allclose(np.asarray(fs(b)), np.asarray(f1(b)),
                                    atol=2e-3, rtol=1e-3)
+        if _TOPOLOGY is not None:
+            # hierarchical combine must match the flat two-axis psum
+            fh = jax.jit(lambda x: spmm(sst, x, reduce="hier"))
+            np.testing.assert_allclose(np.asarray(fh(b)),
+                                       np.asarray(fs(b)),
+                                       atol=1e-5, rtol=1e-5)
         print(f"dist/{fmt}/single,{us1:.1f},devices=1")
-        print(f"dist/{fmt}/sharded_x{ndev},{uss:.1f},"
+        print(f"dist/{fmt}/sharded_{tag},{uss:.1f},"
               f"balance_ratio={ratio:.3f}")
+
+    # -- chunked compute/collective overlap (combine_chunks) ---------------
+    st = SparseTensor.from_dense(d, "bcsr", block=(32, 32))
+    sst = st.shard(mesh, axes)
+    cc = DEFAULT_COMBINE_CHUNKS
+    f_block = jax.jit(lambda x: spmm(sst, x, combine_chunks=1))
+    f_over = jax.jit(lambda x: spmm(sst, x, combine_chunks=cc))
+    us_block = time_call(f_block, b)
+    us_over = time_call(f_over, b)
+    # the chunked combine is a row-partition of the same math: outputs
+    # must match the blocking combine to float tolerance, not just "close"
+    np.testing.assert_allclose(np.asarray(f_over(b)),
+                               np.asarray(f_block(b)),
+                               atol=1e-5, rtol=1e-5)
+    nnz = int(st.structure.nnz) * 32 * 32
+    bn = auto_bn(n, 32, 32, op="dist", shape=(m, k))
+    nnz_blocks = int(st.structure.nnz)
+    t_comp = model_bcsr_time(max(nnz_blocks // ndev, 1), 32, 32, n, bn, k=k)
+    t_coll = 2.0 * (ndev - 1) / ndev * (m * n * 4) / ICI_BW
+    t_blocking = t_comp + t_coll
+    t_overlap = max(t_comp, t_coll) + min(t_comp, t_coll) / cc
+    tp_b = tflops(nnz, n, t_blocking)
+    tp_o = tflops(nnz, n, t_overlap)
+    print(f"dist/overlap,{us_over:.1f},"
+          f"modeled_v5e={tp_o:.2f}vs{tp_b:.2f}TFLOPS cc={cc}")
+    print("dist-extras/overlap," + json.dumps({
+        "combine_chunks": cc, "devices": ndev,
+        "blocking_us": round(us_block, 1),
+        "overlapped_us": round(us_over, 1),
+        "modeled_blocking_tflops": round(tp_b, 3),
+        "modeled_overlapped_tflops": round(tp_o, 3),
+    }))
 
 
 def run(rows) -> None:
@@ -67,24 +128,36 @@ def run(rows) -> None:
     repo = pathlib.Path(__file__).resolve().parent.parent
     env["PYTHONPATH"] = os.pathsep.join(
         [str(repo / "src"), env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    argv = [sys.executable, __file__, "--child"]
+    if _TOPOLOGY is not None:
+        argv += ["--topology", f"{_TOPOLOGY[0]}x{_TOPOLOGY[1]}"]
     p = subprocess.run(
-        [sys.executable, __file__, "--child"],
-        capture_output=True, text=True, env=env, timeout=900)
+        argv, capture_output=True, text=True, env=env, timeout=900)
     if p.returncode != 0:
         raise RuntimeError(
             f"dist_scaling child failed:\n{p.stdout}\n{p.stderr}")
+    sys.path.insert(0, str(repo))  # standalone runs: make benchmarks importable
+    from benchmarks.common import JSON_EXTRAS
+
     for line in p.stdout.splitlines():
-        if line.startswith("dist/"):
+        if line.startswith("dist-extras/"):
+            name, payload = line.split(",", 1)
+            JSON_EXTRAS["dist/" + name.split("/", 1)[1]] = json.loads(payload)
+        elif line.startswith("dist/"):
             name, us, derived = line.split(",", 2)
             rows.append((name, float(us), derived))
 
 
 def main() -> None:
-    global _SMOKE, _DEVICES
+    global _SMOKE, _DEVICES, _TOPOLOGY
     if "--smoke" in sys.argv:
         _SMOKE = True
     if "--devices" in sys.argv:
         _DEVICES = int(sys.argv[sys.argv.index("--devices") + 1])
+    if "--topology" in sys.argv:
+        r, c = sys.argv[sys.argv.index("--topology") + 1].split("x")
+        _TOPOLOGY = (int(r), int(c))
+        _DEVICES = _TOPOLOGY[0] * _TOPOLOGY[1]
     if "--child" in sys.argv:
         _child()
         return

@@ -6,6 +6,9 @@ dense GEMM (cuBLAS analogue). Matrices are RCM-preprocessed like the paper.
 
 us_per_call measures the jitted CPU reference dataflow (at N=256 only);
 `derived` is modeled v5e TFLOP/s with the paper's convention 2*nnz*N/t.
+Derived-only rows (bell, geomeans, speedups, and the N != 256 strata) have
+no measurement: their us column is empty in the CSV and null in
+BENCH_spmm.json rather than a misleading 0.0.
 
 `wcsr` models the paper-faithful kernel (synchronous per-iteration gather,
 §III-C); `wcsr_opt` adds the beyond-paper double-buffered gather (8
@@ -93,7 +96,9 @@ def run(csv_rows):
             per_fmt["wcsr_opt"].append(tflops(nnz, n, t_wo))
             per_fmt["dense"].append(tflops(nnz, n, t_d))
 
-            us_b = us_w = 0.0
+            # derived-only rows carry "" (JSON us_per_call: null) — a 0.0
+            # would read as a measured zero-microsecond call downstream
+            us_b = us_w = ""
             if n == N_MEASURE:
                 b = jnp.asarray(np.random.default_rng(1).normal(
                     size=(K, n)).astype(np.float32))
@@ -104,15 +109,15 @@ def run(csv_rows):
                              f"{per_fmt['wcsr'][-1]:.2f}TFLOPS"))
             csv_rows.append((f"table1/{kind}_d{density}_N{n}_bcsr", us_b,
                              f"{per_fmt['bcsr'][-1]:.2f}TFLOPS"))
-            csv_rows.append((f"table1/{kind}_d{density}_N{n}_bell", 0.0,
+            csv_rows.append((f"table1/{kind}_d{density}_N{n}_bell", "",
                              f"{per_fmt['bell'][-1]:.2f}TFLOPS"))
         for fmt in per_fmt:
             gm = geomean(per_fmt[fmt])
-            csv_rows.append((f"table1/geomean_N{n}_{fmt}", 0.0,
+            csv_rows.append((f"table1/geomean_N{n}_{fmt}", "",
                              f"{gm:.2f}TFLOPS"))
         for base in ("bell", "dense"):
             for fmt in ("wcsr", "wcsr_opt", "bcsr"):
                 sp = geomean(per_fmt[fmt]) / max(geomean(per_fmt[base]), 1e-9)
                 csv_rows.append((f"table1/speedup_{fmt}_over_{base}_N{n}",
-                                 0.0, f"{sp:.2f}x"))
+                                 "", f"{sp:.2f}x"))
     return csv_rows

@@ -79,7 +79,10 @@ guard, whose winner steers every ``"auto"`` knob), ``tuned_entry(...)`` /
 and ``autotune_spmm`` / ``tuned_entry`` consult it before sweeping),
 ``resolve_spmv_route(threshold, n, ...)`` / ``spmv_dispatch_info()`` /
 ``DEFAULT_SPMV_THRESHOLD`` (the skinny-N dispatch: route resolution,
-its counters, and the fallback crossover).
+its counters, and the fallback crossover),
+``resolve_combine_chunks(value, n, ...)`` / ``combine_dispatch_info()`` /
+``DEFAULT_COMBINE_CHUNKS`` (the sharded chunked-combine overlap: chunk
+count resolution, its counters, and the auto-policy cap).
 """
 
 from repro.ops.attention import csr_encode_block_mask, sparse_attention
@@ -97,10 +100,13 @@ from repro.ops.registry import (available_backends, register_backend,
 from repro.ops.sddmm import sddmm
 from repro.ops.spmm import spmm
 from repro.ops.spmv import spmv
-from repro.ops.tiling import (DEFAULT_SPMV_THRESHOLD, active_tune_db,
+from repro.ops.tiling import (DEFAULT_COMBINE_CHUNKS,
+                              DEFAULT_SPMV_THRESHOLD, active_tune_db,
                               adopt_tuned_entries, auto_bn,
                               autotune_spmm, clear_tuning_cache,
-                              resolve_bn, resolve_pipeline_depth,
+                              combine_dispatch_info,
+                              resolve_bn, resolve_combine_chunks,
+                              resolve_pipeline_depth,
                               resolve_spmv_route, set_tune_db,
                               spmv_dispatch_info, tuned_entry,
                               tuning_cache_info)
@@ -125,6 +131,9 @@ __all__ = [
     "autotune_spmm", "tuned_entry", "resolve_pipeline_depth",
     # skinny-N (spmv) dispatch
     "resolve_spmv_route", "spmv_dispatch_info", "DEFAULT_SPMV_THRESHOLD",
+    # sharded chunked-combine overlap
+    "resolve_combine_chunks", "combine_dispatch_info",
+    "DEFAULT_COMBINE_CHUNKS",
     # persistent tuning DB (repro.tune) wiring
     "set_tune_db", "active_tune_db", "adopt_tuned_entries",
 ]

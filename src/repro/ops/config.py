@@ -63,6 +63,17 @@ class OpConfig:
     # measured route from a ``TuneDB``/``autotune_spmm`` winner when one
     # exists for the shape, falling back to ``tiling.DEFAULT_SPMV_THRESHOLD``.
     spmv_threshold: Union[int, str, None] = None
+    # Sharded-spmm chunked combine (repro.parallel.sparse): split the
+    # output rows into this many row-chunks (snapped to window / block-row
+    # boundaries) and issue each chunk's collective reduction as soon as
+    # its local kernel finishes, so the all-reduce of chunk k overlaps the
+    # compute of chunk k+1 — the paper's §III-A latency hiding lifted from
+    # the DMA level to the collective level. An int pins the chunk count
+    # (1 = the blocking single-collective combine); "auto" adopts a
+    # measured ``autotune_spmm`` winner when one exists, else the static
+    # policy in ``tiling.resolve_combine_chunks``. Ignored by unsharded
+    # calls.
+    combine_chunks: Union[int, str, None] = None
 
     def merged_under(self, override: "OpConfig") -> "OpConfig":
         """Layer ``override`` on top of self: non-None override fields win."""
@@ -81,7 +92,7 @@ class OpConfig:
 _DEFAULTS = OpConfig(impl=None, bn="auto", out_dtype=None,
                      chunks_per_task=None, interpret=None,
                      pipeline_depth="auto", value_codec="none",
-                     spmv_threshold="auto")
+                     spmv_threshold="auto", combine_chunks="auto")
 
 _STACK: contextvars.ContextVar = contextvars.ContextVar(
     "repro_ops_config_stack", default=())

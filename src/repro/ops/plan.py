@@ -67,6 +67,11 @@ class Plan:
     # GEMV family); part of the cache key so the same structure serving
     # prefill (wide N) and decode (N=1) holds two plans side by side
     route: str = "spmm"
+    # resolved sharded-combine chunk count (repro.parallel.sparse chunked
+    # compute/collective overlap); None for unsharded plans. Part of the
+    # cache key: the chunk schedule pads task arrays per chunk, so a plan
+    # reused under a different chunking would mis-shape the kernel launch.
+    combine_chunks: Optional[int] = None
 
     @property
     def num_tasks(self) -> int:
@@ -123,6 +128,11 @@ def clear_plan_cache() -> None:
     from repro.sparse.delta import reset_delta_stats
 
     reset_delta_stats()
+    import sys
+
+    ps = sys.modules.get("repro.parallel.sparse")
+    if ps is not None:  # chunk-schedule arrays are partition-derived state
+        ps.clear_combine_schedules()
 
 
 def drop_auto_plans() -> None:
@@ -175,7 +185,8 @@ def _tasks_for(structure: SparseStructure, chunks_per_task: int):
 
 
 def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
-              dtype=None, codec: str = "none", route: str = "spmm") -> Plan:
+              dtype=None, codec: str = "none", route: str = "spmm",
+              combine_chunks: Optional[int] = None) -> Plan:
     """Build (or fetch) the execution plan for ``spmm`` over ``structure``.
 
     ``structure`` may be a ``SparseStructure`` or anything carrying one
@@ -190,6 +201,10 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     the resolved skinny-N dispatch ("spmm" | "spmv", also cache-keyed):
     the task split and depth resolution are route-invariant, but prefill
     and decode plans for the same structure must not collide.
+    ``combine_chunks`` is the resolved sharded-combine chunk count (the
+    chunked compute/collective overlap of ``repro.parallel.sparse``; None
+    for unsharded plans) — cache-keyed like the route, since the chunk
+    schedule shapes the per-shard task padding.
     """
     global _HITS, _MISSES
     if not isinstance(structure, SparseStructure):
@@ -219,10 +234,12 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     else:
         cpt = None
         depth = None
-    # route appended last: drop_auto_plans / _try_patch_plan index key[3]
-    # (cfg.bn) and key[1:] respectively, so the layout stays stable
+    # route / combine_chunks appended last: drop_auto_plans /
+    # _try_patch_plan index key[3] (cfg.bn) and key[1:] respectively, so
+    # the layout stays stable
+    cc = None if combine_chunks is None else int(combine_chunks)
     key = (structure, int(n), str(np.dtype(dtype)), cfg.bn, cpt, depth,
-           codec, str(route))
+           codec, str(route), cc)
     plan = _PLANS.get(key)
     if plan is not None:
         _HITS += 1
@@ -239,7 +256,7 @@ def make_plan(structure, n: int, cfg: Optional[OpConfig] = None, *,
     tasks = _tasks_for(structure, cpt) if structure.fmt == "wcsr" else None
     plan = Plan(structure=structure, n=int(n), bn=bn, chunks_per_task=cpt,
                 tasks=tasks, pipeline_depth=depth, value_codec=codec,
-                route=str(route))
+                route=str(route), combine_chunks=cc)
     _PLANS[key] = plan
     return plan
 
@@ -277,7 +294,8 @@ def _try_patch_plan(structure: SparseStructure, key, cpt) -> Optional[Plan]:
                 chunks_per_task=cpt, tasks=tasks,
                 pipeline_depth=base_plan.pipeline_depth,
                 value_codec=base_plan.value_codec,
-                route=base_plan.route)
+                route=base_plan.route,
+                combine_chunks=base_plan.combine_chunks)
 
 
 def make_partition(structure, num_shards: int):
@@ -345,6 +363,10 @@ def cache_stats() -> dict:
          "selections": {"pipeline_depth": {Q: count},
                         "value_codec":   {name: count}},
          "spmv":      {"dispatched", "full_tile"},
+         "combine":   {"chunked", "blocking", "chunks": {cc: count},
+                       "schedules_built", "shard_chunks_built",
+                       "shard_chunks_reused",
+                       "hier_calls", "hier_fallback"},
          "delta":     {"appends", "retires", "plan_patched",
                        "partition_patched", "groups_reused",
                        "groups_requantized", "shards_reused",
@@ -361,6 +383,15 @@ def cache_stats() -> dict:
     measured sweeps — ``hits > 0, sweeps == 0`` is the warm-started
     replica invariant CI asserts.
 
+    ``combine`` is the chunked compute/collective overlap view
+    (``repro.parallel.sparse`` sharded combine): resolutions that chose the
+    overlapped multi-chunk pipeline vs the blocking whole-output
+    collective (``tiling.combine_dispatch_info``), combine schedules built
+    vs per-shard chunk arrays reused across structure deltas, and the
+    ``hierarchical_psum`` call/fallback tallies (the ``reduce="hier"``
+    degradation counter). The parallel-layer counters are probed via
+    ``sys.modules`` — zeros when the parallel layer was never imported.
+
     ``delta`` is the dynamic-sparsity view (``repro.sparse.delta``):
     structure edits applied, plan/partition cache entries derived by
     patching instead of a full rebuild, codec value groups spliced bitwise
@@ -372,7 +403,9 @@ def cache_stats() -> dict:
     The legacy accessors stay (tests and external dashboards key on them);
     this aggregator is derived from the same counters, never a second set.
     """
-    from repro.ops.tiling import spmv_dispatch_info
+    import sys
+
+    from repro.ops.tiling import combine_dispatch_info, spmv_dispatch_info
     from repro.sparse.delta import delta_stats
 
     p = plan_cache_info()
@@ -380,6 +413,16 @@ def cache_stats() -> dict:
     delta = delta_stats()
     delta["plan_patched"] = p.plan_patched
     delta["partition_patched"] = p.partition_patched
+    combine = combine_dispatch_info()
+    combine.update({"schedules_built": 0, "shard_chunks_built": 0,
+                    "shard_chunks_reused": 0,
+                    "hier_calls": 0, "hier_fallback": 0})
+    ps = sys.modules.get("repro.parallel.sparse")
+    if ps is not None:
+        combine.update(ps.combine_schedule_counters())
+    pc = sys.modules.get("repro.parallel.collectives")
+    if pc is not None:
+        combine.update(pc.collective_counters())
     return {
         "plan": {"hits": p.hits, "misses": p.misses,
                  "patched": p.plan_patched, "size": p.size},
@@ -393,6 +436,7 @@ def cache_stats() -> dict:
         "selections": {"pipeline_depth": dict(t.pipeline_depths),
                        "value_codec": dict(t.value_codecs)},
         "spmv": spmv_dispatch_info(),
+        "combine": combine,
         "delta": delta,
     }
 

@@ -57,7 +57,8 @@ __all__ = ["spmm"]
 
 def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
          chunks_per_task=None, interpret=None, pipeline_depth=None,
-         value_codec=None, spmv_threshold=None, **extras) -> jax.Array:
+         value_codec=None, spmv_threshold=None, combine_chunks=None,
+         **extras) -> jax.Array:
     """``C[m, n] = A_sparse @ B`` for any registered sparse format of ``a``.
 
     Keyword arguments override the ambient ``use_config(...)`` /
@@ -78,6 +79,11 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
     (GEMV row-split) op family — same numerics, decode-shaped dataflow
     (an int pins the crossover, 0 disables it, ``"auto"`` adopts the
     measured ``autotune_spmm`` route or ``DEFAULT_SPMV_THRESHOLD``).
+    ``combine_chunks`` governs the sharded path's chunked
+    compute/collective overlap: the output rows split into that many
+    chunks whose collectives overlap the next chunk's kernels (1 =
+    blocking single combine, ``"auto"`` adopts a tuned winner or the
+    size-based policy; ignored for unsharded operands).
     Remaining ``extras`` are forwarded to the backend (e.g. the sharded
     path's ``reduce=``) and validated against its signature — unknown
     keywords raise instead of being silently swallowed.
@@ -96,7 +102,8 @@ def spmm(a, b: jax.Array, *, impl=None, bn=None, out_dtype=None,
                           interpret=interpret,
                           pipeline_depth=pipeline_depth,
                           value_codec=value_codec,
-                          spmv_threshold=spmv_threshold)
+                          spmv_threshold=spmv_threshold,
+                          combine_chunks=combine_chunks)
     if isinstance(a, SparseTensor):
         a = _resolve_value_codec(a, cfg, int(b.shape[1]))
         a = _maybe_autoshard(a)

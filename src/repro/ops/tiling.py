@@ -51,6 +51,8 @@ __all__ = ["resolve_bn", "auto_bn", "pad_cols", "unpad_cols",
            "count_codec_selection", "set_tune_db", "active_tune_db",
            "adopt_tuned_entries", "resolve_spmv_route",
            "spmv_dispatch_info", "DEFAULT_SPMV_THRESHOLD",
+           "resolve_combine_chunks", "combine_dispatch_info",
+           "DEFAULT_COMBINE_CHUNKS", "COMBINE_MIN_CHUNK_BYTES",
            "ENV_TUNE_ITERS_VAR", "ENV_TUNE_WARMUP_VAR"]
 
 # measured-timing overrides for autotune_spmm (stable DB entries need
@@ -117,6 +119,20 @@ SPMV_SWEEP_MAX = 16
 # family, "full_tile" = kept on the bn-wide SpMM kernels
 _SPMV_DISPATCH: Dict[str, int] = {"dispatched": 0, "full_tile": 0}
 
+# --- chunked compute/collective overlap (sharded spmm) ----------------------
+# Chunk count adopted when combine_chunks="auto", no measured winner exists
+# and the output is big enough to amortize the extra collective launches.
+DEFAULT_COMBINE_CHUNKS = 4
+# "auto" never chunks below this per-chunk output size: the overlap win is
+# bounded by the collective time, and a tiny [m, n] slab pays more in
+# per-collective launch overhead than it can ever hide.
+COMBINE_MIN_CHUNK_BYTES = 256 * 1024
+# combine resolutions on sharded spmm calls: "chunked" = overlapped
+# multi-chunk pipeline, "blocking" = single whole-output collective;
+# "chunks" tallies the resolved chunk count per value
+_COMBINE_DISPATCH: Dict[str, object] = {"chunked": 0, "blocking": 0,
+                                        "chunks": {}}
+
 
 def clear_tuning_cache() -> None:
     """Drop all memoized §IV-C tile selections, measured auto-tune entries,
@@ -129,11 +145,14 @@ def clear_tuning_cache() -> None:
     The on-disk DB itself and the active handle are untouched: subsequent
     misses consult it afresh."""
     global _HITS, _MISSES, _DB_HITS, _DB_MISSES, _DB_STALE, _SWEEPS
+    import sys
+
     _CACHE.clear()
     _TUNED.clear()
     _DEPTH_SELECTIONS.clear()
     _CODEC_SELECTIONS.clear()
     _SPMV_DISPATCH.update(dispatched=0, full_tile=0)
+    _COMBINE_DISPATCH.update(chunked=0, blocking=0, chunks={})
     _DB_NEG.clear()
     _HITS = 0
     _MISSES = 0
@@ -147,6 +166,15 @@ def clear_tuning_cache() -> None:
 
     reset_patch_counters()
     reset_delta_stats()
+    # sys.modules probes: the parallel layer sits above ops in the import
+    # graph, so its combine-schedule / hierarchical-psum tallies are only
+    # reset when those modules were actually imported
+    ps = sys.modules.get("repro.parallel.sparse")
+    if ps is not None:
+        ps.reset_combine_schedule_counters()
+    pc = sys.modules.get("repro.parallel.collectives")
+    if pc is not None:
+        pc.reset_collective_counters()
 
 
 def tuning_cache_info() -> TuningCacheInfo:
@@ -341,6 +369,63 @@ def resolve_spmv_route(threshold: Union[int, str, None], n: int, *,
     return route
 
 
+def combine_dispatch_info() -> Dict[str, object]:
+    """Chunked-combine counters: ``{"chunked", "blocking", "chunks"}``.
+
+    Every ``resolve_combine_chunks`` call on a sharded spmm bumps
+    ``chunked`` (resolved count > 1: the overlapped per-chunk pipeline) or
+    ``blocking`` (count 1: one whole-output collective), and tallies the
+    resolved count in ``chunks``. Surfaced as part of
+    ``cache_stats()["combine"]`` and ``ServeEngine.stats()``; reset by
+    ``clear_tuning_cache``.
+    """
+    out = dict(_COMBINE_DISPATCH)
+    out["chunks"] = dict(_COMBINE_DISPATCH["chunks"])
+    return out
+
+
+def resolve_combine_chunks(value: Union[int, str, None], n: int, *,
+                           num_groups: int, num_shards: int,
+                           op: str = "spmm", fmt: str = "", shape=None,
+                           block=(128, 128), dtype=jnp.float32,
+                           count: bool = True) -> int:
+    """Resolve the sharded-spmm combine chunk count for one call.
+
+    An explicit int pins it (clamped to ``[1, num_groups]`` — a chunk must
+    cover at least one window / block-row). ``"auto"``/None prefers a
+    measured ``autotune_spmm`` winner's ``"combine_chunks"`` when ``shape``
+    is known, else the static policy: chunk only multi-shard calls whose
+    output is large enough that each chunk's ``[rows, n]`` slab clears
+    ``COMBINE_MIN_CHUNK_BYTES`` (small outputs pay more in extra collective
+    launches than the overlap can hide), capped at
+    ``DEFAULT_COMBINE_CHUNKS``. The decision is tallied in
+    ``combine_dispatch_info()`` unless ``count=False`` (pre-flight probes).
+    """
+    num_groups = max(int(num_groups), 1)
+    if value not in (None, "auto"):
+        cc = max(1, min(int(value), num_groups))
+    else:
+        cc = None
+        if shape is not None:
+            tuned = tuned_entry(op, fmt, shape, int(n), block, dtype)
+            if tuned is not None and tuned.get("combine_chunks") is not None:
+                cc = max(1, min(int(tuned["combine_chunks"]), num_groups))
+        if cc is None:
+            if int(num_shards) <= 1:
+                cc = 1
+            else:
+                m = int(shape[0]) if shape is not None else num_groups
+                out_bytes = m * int(n) * 4  # f32 partials
+                cc = min(DEFAULT_COMBINE_CHUNKS, num_groups,
+                         max(1, out_bytes // COMBINE_MIN_CHUNK_BYTES))
+    if count:
+        key = "chunked" if cc > 1 else "blocking"
+        _COMBINE_DISPATCH[key] = _COMBINE_DISPATCH[key] + 1
+        tally = _COMBINE_DISPATCH["chunks"]
+        tally[cc] = tally.get(cc, 0) + 1
+    return cc
+
+
 def auto_bn(n: int, bm: int = 128, bk: int = 128, dtype=jnp.bfloat16, *,
             op: str = "spmm", fmt: str = "", shape: Tuple[int, ...] = (),
             impl: str = "") -> int:
@@ -475,9 +560,21 @@ def _time_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
                   codecs=None, codec_tol: float = 0.05,
                   impl=None, warmup: Optional[int] = None,
-                  iters: Optional[int] = None, use_db: bool = True) -> dict:
+                  iters: Optional[int] = None, use_db: bool = True,
+                  mesh=None, mesh_axes="data",
+                  combine_chunks=None) -> dict:
     """Measured sweep over ``(bn, chunks_per_task, pipeline_depth,
-    value_codec)``.
+    value_codec)`` — plus ``combine_chunks`` when a ``mesh`` is given.
+
+    **Sharded sweep:** pass ``mesh`` (and ``mesh_axes``, default
+    ``"data"``) to time the *sharded* spmm path instead — each candidate
+    combo additionally sweeps the chunked-combine count
+    (``combine_chunks`` candidates; default ``(1, 2,
+    DEFAULT_COMBINE_CHUNKS)``), so the winner's ``"combine_chunks"`` field
+    turns the ``combine_chunks="auto"`` policy into a measured per-shape
+    decision (picked up by ``resolve_combine_chunks``, persisted via the
+    ``TuneDB`` like every other knob). Without a mesh the winner records
+    ``"combine_chunks": None`` — unsharded calls have no combine.
 
     Times real ``repro.ops.spmm(a, b)`` calls for every candidate combo,
     memoizes the winner for this (format, shape, N, block, dtype) problem,
@@ -580,6 +677,12 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
     # spmv crossover becomes a *measured* per-shape decision (the winner's
     # "route" is what spmv_threshold="auto" adopts via resolve_spmv_route)
     routes = ("spmm", "spmv") if n <= SPMV_SWEEP_MAX else ("spmm",)
+    if mesh is None:
+        ccs = (None,)
+    elif combine_chunks is None:
+        ccs = tuple(dict.fromkeys((1, 2, DEFAULT_COMBINE_CHUNKS)))
+    else:
+        ccs = tuple(dict.fromkeys(int(c) for c in combine_chunks))
     best = None
     rejected = {}
     # the sweep itself resolves every candidate depth/codec/route (and its
@@ -589,6 +692,7 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
     depth_counters = dict(_DEPTH_SELECTIONS)
     codec_counters = dict(_CODEC_SELECTIONS)
     spmv_counters = dict(_SPMV_DISPATCH)
+    combine_counters = combine_dispatch_info()
     db_counters = (_DB_HITS, _DB_MISSES, _DB_STALE)
     try:
         ref = None
@@ -610,6 +714,11 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
                 continue
             operands.append((cname, aq))
         for cname, operand in operands:
+            # the sharded sweep times the mesh path the serving call runs
+            # (local kernels + chunked combine); the accuracy guard above
+            # stays single-device — numerics are combine-invariant
+            timed = operand if mesh is None else operand.shard(mesh,
+                                                               mesh_axes)
             for route in routes:
                 # the vector path has no bn tile, so sweeping widths there
                 # would just re-time identical launches
@@ -618,23 +727,28 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
                 for bn in route_bns:
                     for cpt in chunks:
                         for depth in depths:
-                            with use_config(impl=impl, bn=bn,
-                                            chunks_per_task=cpt,
-                                            pipeline_depth=depth,
-                                            spmv_threshold=thr):
-                                f = jax.jit(lambda b_: spmm(operand, b_))
-                                us = _time_us(f, b, warmup=warmup,
-                                              iters=iters)
-                            cand = {"bn": int(bn),
-                                    "chunks_per_task": cpt if cpt is None
-                                    else int(cpt),
-                                    "pipeline_depth": depth if depth is None
-                                    else int(depth),
-                                    "value_codec": cname,
-                                    "route": route,
-                                    "us": us}
-                            if best is None or us < best["us"]:
-                                best = cand
+                            for cc in ccs:
+                                with use_config(impl=impl, bn=bn,
+                                                chunks_per_task=cpt,
+                                                pipeline_depth=depth,
+                                                spmv_threshold=thr,
+                                                combine_chunks=cc):
+                                    f = jax.jit(
+                                        lambda b_: spmm(timed, b_))
+                                    us = _time_us(f, b, warmup=warmup,
+                                                  iters=iters)
+                                cand = {"bn": int(bn),
+                                        "chunks_per_task": cpt if cpt is None
+                                        else int(cpt),
+                                        "pipeline_depth": depth if depth is
+                                        None else int(depth),
+                                        "value_codec": cname,
+                                        "route": route,
+                                        "combine_chunks": cc if cc is None
+                                        else int(cc),
+                                        "us": us}
+                                if best is None or us < best["us"]:
+                                    best = cand
     finally:
         _DEPTH_SELECTIONS.clear()
         _DEPTH_SELECTIONS.update(depth_counters)
@@ -642,6 +756,8 @@ def autotune_spmm(a, b, *, depths=None, bns=None, chunks_per_task=None,
         _CODEC_SELECTIONS.update(codec_counters)
         _SPMV_DISPATCH.clear()
         _SPMV_DISPATCH.update(spmv_counters)
+        _COMBINE_DISPATCH.clear()
+        _COMBINE_DISPATCH.update(combine_counters)
         _DB_HITS, _DB_MISSES, _DB_STALE = db_counters
     if best is None:
         # every candidate codec failed the guard and "none" wasn't swept:

@@ -17,12 +17,34 @@ well (``reduce="bf16"`` -> ``compressed_psum_bf16``).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import warnings
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size
+
+# hierarchical_psum trace-time tallies: total calls vs calls that degraded
+# to the flat two-axis psum because the leading dim didn't divide the inner
+# axis. Surfaced via collective_counters() -> cache_stats()["combine"] so a
+# dashboard can see when the bandwidth-saving decomposition silently isn't
+# running; reset by repro.ops.clear_tuning_cache.
+_COUNTERS: Dict[str, int] = {"hier_calls": 0, "hier_fallback": 0}
+_WARNED_FALLBACK = False
+
+
+def collective_counters() -> Dict[str, int]:
+    """``{"hier_calls", "hier_fallback"}`` trace-time tallies (see above)."""
+    return dict(_COUNTERS)
+
+
+def reset_collective_counters() -> None:
+    """Zero the hierarchical-psum tallies (``clear_tuning_cache`` calls
+    this); the one-shot fallback warning re-arms too."""
+    global _WARNED_FALLBACK
+    _COUNTERS.update(hier_calls=0, hier_fallback=0)
+    _WARNED_FALLBACK = False
 
 
 def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str) -> jax.Array:
@@ -30,11 +52,36 @@ def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str) -> jax.Arr
 
     Mathematically identical to psum over both axes; the decomposition sends
     only 1/inner_size of the bytes over the outer (inter-pod) links.
+
+    **Divisibility requirement:** the decomposition needs ``x.shape[0]`` to
+    be a multiple of the inner axis size (the reduce-scatter splits the
+    leading dim into ``inner_size`` equal pieces). When it doesn't divide,
+    the call silently degrades to a flat ``psum`` over both axes — correct,
+    but the inter-pod bandwidth saving is lost. The degradation is counted
+    (``collective_counters()["hier_fallback"]``, surfaced in
+    ``cache_stats()["combine"]``) and warned about once per process; pad
+    the leading dim to a multiple of ``inner_size`` to stay on the
+    hierarchical path.
     """
+    global _WARNED_FALLBACK
     n_inner = axis_size(inner_axis)
     lead = x.shape[0]
+    _COUNTERS["hier_calls"] += 1
     if lead % n_inner:
-        # fall back for non-dividing shapes
+        # fall back for non-dividing shapes (counted: correctness is kept,
+        # but the 1/inner_size inter-pod byte saving silently isn't)
+        _COUNTERS["hier_fallback"] += 1
+        if not _WARNED_FALLBACK:
+            _WARNED_FALLBACK = True
+            warnings.warn(
+                f"hierarchical_psum: leading dim {lead} does not divide "
+                f"inner axis {inner_axis!r} (size {n_inner}); falling back "
+                "to a flat two-axis psum (correct, but without the "
+                "hierarchical bandwidth saving). Pad the leading dim to a "
+                f"multiple of {n_inner} to stay on the hierarchical path. "
+                "Further fallbacks are counted in "
+                "cache_stats()['combine']['hier_fallback'] without warning.",
+                stacklevel=2)
         return jax.lax.psum(x, (inner_axis, outer_axis))
     xs = x.reshape(n_inner, lead // n_inner, *x.shape[1:])
     piece = jax.lax.psum_scatter(xs, inner_axis, scatter_dimension=0, tiled=False)

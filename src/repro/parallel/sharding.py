@@ -132,21 +132,25 @@ def make_mesh_rules(mesh, fsdp: bool = False, seq_shard: bool = False):
     return make_rules(multi_pod, fsdp=fsdp, seq_shard=seq_shard)
 
 
-def sparse_operand_sharding(mesh, axis: str = "data") -> NamedSharding:
+def sparse_operand_sharding(mesh, axis="data") -> NamedSharding:
     """Placement for one stacked sparse-operand leaf: shard dim 0 on ``axis``.
 
     The ``sparse_shard`` logical-axis rule as a concrete ``NamedSharding``:
     a ``ShardedSparseTensor``'s stacked value/index arrays carry their
-    per-device slices on the leading dim, which maps to exactly one mesh
-    axis; all trailing dims are replicated.
+    per-device slices on the leading dim, which maps to one mesh axis — or,
+    for a 2-D ``(data, model)`` sharded operand, a tuple of axes laid out
+    major-to-minor on the shard dim; all trailing dims are replicated.
     """
-    if axis not in mesh.shape:
-        raise ValueError(f"sparse_operand_sharding: axis {axis!r} not in "
-                         f"mesh axes {tuple(mesh.axis_names)}")
-    return NamedSharding(mesh, P(axis))
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    for ax in axes:
+        if ax not in mesh.shape:
+            raise ValueError(f"sparse_operand_sharding: axis {ax!r} not in "
+                             f"mesh axes {tuple(mesh.axis_names)}")
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
 
 
-def sparse_operand_shardings(mesh, sharded, axis: Optional[str] = None):
+def sparse_operand_shardings(mesh, sharded, axis=None):
     """Sharding tuple for a ``ShardedSparseTensor``'s data leaves."""
-    sh = sparse_operand_sharding(mesh, axis or sharded.axis)
+    sh = sparse_operand_sharding(mesh, axis if axis is not None
+                                 else sharded.axis)
     return tuple(sh for _ in sharded.data)

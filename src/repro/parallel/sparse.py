@@ -66,9 +66,10 @@ from repro.kernels.wcsr.ref import wcsr_spmm_ref
 from repro.ops.config import OpConfig, resolve_interpret
 from repro.ops.plan import make_partition, make_plan
 from repro.ops.registry import on_tpu, register_backend, resolve_backend
-from repro.ops.tiling import (pad_cols, resolve_bn, resolve_spmv_route,
-                              unpad_cols)
-from repro.parallel.collectives import compressed_psum_bf16
+from repro.ops.tiling import (pad_cols, resolve_bn, resolve_combine_chunks,
+                              resolve_spmv_route, unpad_cols)
+from repro.parallel.collectives import (compressed_psum_bf16,
+                                        hierarchical_psum)
 from repro.sparse.formats import BCSR, WCSR
 from repro.sparse.structure import SparseStructure
 from repro.sparse.tensor import SparseTensor
@@ -77,12 +78,20 @@ __all__ = [
     "SparsePartition",
     "partition_structure",
     "patch_partition",
+    "CombineSchedule",
+    "combine_group_bounds",
+    "combine_schedule_counters",
     "ShardedSparseTensor",
     "shard_tensor",
     "use_sparse_mesh",
     "current_sparse_mesh",
     "sharded_spmm",
 ]
+
+
+def _axis_tuple(axis) -> Tuple[str, ...]:
+    """Normalize a mesh-axis argument (one name or a tuple) to a tuple."""
+    return (axis,) if isinstance(axis, str) else tuple(axis)
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +136,8 @@ class SparsePartition:
     index arrays the sharded kernels consume (uploaded to device once).
     """
 
-    __slots__ = ("structure", "num_shards", "bounds", "shards", "_dev")
+    __slots__ = ("structure", "num_shards", "bounds", "shards", "_dev",
+                 "_combine")
 
     def __init__(self, structure: SparseStructure, num_shards: int,
                  bounds: np.ndarray, shards: List[SparseStructure]):
@@ -136,6 +146,17 @@ class SparsePartition:
         self.bounds = bounds
         self.shards = tuple(shards)
         self._dev = None
+        self._combine: Dict[int, "CombineSchedule"] = {}
+
+    def combine_schedule(self, num_chunks: int) -> "CombineSchedule":
+        """Memoized row-chunk schedule for the chunked overlapped combine."""
+        cc = max(1, int(num_chunks))
+        sched = self._combine.get(cc)
+        if sched is None:
+            sched = CombineSchedule(self, cc)
+            self._combine[cc] = sched
+            _SCHED_COUNTERS["schedules_built"] += 1
+        return sched
 
     def __eq__(self, other):
         if not isinstance(other, SparsePartition):
@@ -383,6 +404,217 @@ def patch_partition(delta, base: SparsePartition, *,
 
 
 # ---------------------------------------------------------------------------
+# Chunked-combine schedules (compute/collective overlap)
+# ---------------------------------------------------------------------------
+
+# Host-side build tallies for the chunked combine, surfaced via
+# cache_stats()["combine"]: schedules_built counts CombineSchedule
+# constructions (memoized per partition x chunk count), shard_chunks_built /
+# shard_chunks_reused count per-shard chunk-array builds vs content hits in
+# _SHARD_CHUNK_MEMO — after a structure delta, shards the partition patcher
+# reused hit the memo, so untouched chunks cost nothing to re-derive.
+_SCHED_COUNTERS: Dict[str, int] = {
+    "schedules_built": 0, "shard_chunks_built": 0, "shard_chunks_reused": 0}
+
+# per-shard chunk arrays keyed by (shard structure, kind, chunk bounds):
+# SparseStructure hashes by content, so a patched partition that kept a
+# shard's local structure (and the re-balance kept the chunk bounds) reuses
+# the shard's chunk arrays without rebuilding them
+_SHARD_CHUNK_MEMO: Dict[tuple, object] = {}
+
+
+def combine_schedule_counters() -> Dict[str, int]:
+    """Chunked-combine build tallies (see ``_SCHED_COUNTERS``)."""
+    return dict(_SCHED_COUNTERS)
+
+
+def reset_combine_schedule_counters() -> None:
+    """Zero the tallies (``repro.ops.clear_tuning_cache`` calls this)."""
+    _SCHED_COUNTERS.update(
+        schedules_built=0, shard_chunks_built=0, shard_chunks_reused=0)
+
+
+def clear_combine_schedules() -> None:
+    """Drop memoized per-shard chunk arrays (``clear_plan_cache`` probe)."""
+    _SHARD_CHUNK_MEMO.clear()
+
+
+def combine_group_bounds(g: SparseStructure, num_chunks: int) -> np.ndarray:
+    """Row-chunk boundaries in *group* indices (windows / block-rows).
+
+    Reuses the partitioner's balance pass over stored units with boundaries
+    snapped (unconditionally — a chunk boundary must be row-aligned, unlike
+    a shard boundary) to window / block-row starts, then maps unit bounds
+    back to group indices. Non-decreasing, ``bounds[0] == 0`` and
+    ``bounds[-1] == num_groups`` so chunks tile every output row; empty
+    chunks are possible for tiny matrices and get skipped by the schedule.
+    """
+    bm = g.block[0]
+    num_groups = g.shape[0] // bm
+    if g.fmt == "wcsr":
+        unit_starts = np.asarray(g.ptrs, np.int64) // g.block[1]
+    elif g.fmt == "bcsr":
+        unit_starts = np.asarray(g.ptrs, np.int64)
+    else:
+        raise ValueError(f"combine_group_bounds: unsupported format {g.fmt!r}")
+    total = int(unit_starts[-1])
+    # snap_tol=num_chunks makes the tolerance exactly `total` units: every
+    # boundary snaps to the nearest group start, no matter how far
+    ub = _balanced_boundaries(total, max(int(num_chunks), 1), unit_starts,
+                              snap_tol=float(max(int(num_chunks), 1)))
+    bounds = np.searchsorted(unit_starts[:-1], ub, side="left").astype(np.int64)
+    bounds[0] = 0
+    bounds[-1] = num_groups
+    return np.maximum.accumulate(bounds)
+
+
+def _shard_task_chunks(shard: SparseStructure, tasks, cpt: int,
+                       spans, bounds_key):
+    """Per-chunk (t_win, t_start, t_n) slices of one shard's task list."""
+    key = (shard, "tasks", cpt, bounds_key)
+    hit = _SHARD_CHUNK_MEMO.get(key)
+    if hit is not None:
+        _SCHED_COUNTERS["shard_chunks_reused"] += 1
+        return hit
+    _SCHED_COUNTERS["shard_chunks_built"] += 1
+    w, st_, nn = (np.asarray(x, np.int32) for x in tasks)
+    out = []
+    for r0, r1 in spans:
+        lo, hi = np.searchsorted(w, (r0, r1), side="left")
+        out.append((w[lo:hi], st_[lo:hi], nn[lo:hi]))
+    _SHARD_CHUNK_MEMO[key] = out
+    return out
+
+
+def _shard_block_chunks(shard: SparseStructure, spans, bounds_key):
+    """Per-chunk (start, count, rel_rows, cols) of one shard's block list."""
+    key = (shard, "blocks", bounds_key)
+    hit = _SHARD_CHUNK_MEMO.get(key)
+    if hit is not None:
+        _SCHED_COUNTERS["shard_chunks_reused"] += 1
+        return hit
+    _SCHED_COUNTERS["shard_chunks_built"] += 1
+    ptr = np.asarray(shard.ptrs, np.int64)
+    rows = np.asarray(shard.indices[0], np.int32)
+    cols = np.asarray(shard.indices[1], np.int32)
+    out = []
+    for r0, r1 in spans:
+        lo, hi = int(ptr[r0]), int(ptr[r1])
+        out.append((lo, hi - lo, rows[lo:hi] - r0, cols[lo:hi]))
+    _SHARD_CHUNK_MEMO[key] = out
+    return out
+
+
+class CombineSchedule:
+    """Row-chunk schedule for one partition's chunked, overlapped combine.
+
+    Splits the output rows into ``num_chunks`` contiguous group (window /
+    block-row) spans of near-equal stored work, so the sharded spmm path can
+    emit an independent local-compute -> collective chain per chunk and let
+    the compiler's latency-hiding scheduler overlap chunk ``k``'s
+    all-reduce with chunk ``k+1``'s kernels. Memoized per partition via
+    ``SparsePartition.combine_schedule`` (identity: partition x chunk
+    count); the per-shard chunk arrays are additionally memoized by shard
+    *content*, so delta-patched partitions rebuild only touched shards.
+    """
+
+    __slots__ = ("partition", "num_chunks", "bounds", "spans",
+                 "_wcsr", "_bcsr")
+
+    def __init__(self, partition: SparsePartition, num_chunks: int):
+        self.partition = partition
+        self.bounds = combine_group_bounds(partition.structure, num_chunks)
+        self.spans = tuple(
+            (int(self.bounds[c]), int(self.bounds[c + 1]))
+            for c in range(len(self.bounds) - 1)
+            if self.bounds[c + 1] > self.bounds[c])
+        self.num_chunks = len(self.spans)
+        self._wcsr: Dict[int, list] = {}
+        self._bcsr = None
+
+    def _bounds_key(self):
+        return tuple(int(x) for x in self.bounds)
+
+    def wcsr_task_chunks(self, plans) -> list:
+        """Per-chunk stacked ``(t_win, t_start, t_n)`` device arrays.
+
+        ``t_start`` stays absolute into each shard's packed columns (only
+        the task list is chunked; col_idx/values are passed whole), so the
+        existing WCSR kernels run unchanged per chunk. Padding tasks carry
+        ``t_n == 0`` (kernel no-ops) at the chunk's first window.
+        """
+        cpt = int(plans[0].chunks_per_task)
+        hit = self._wcsr.get(cpt)
+        if hit is not None:
+            return hit
+        bkey = self._bounds_key()
+        per_shard = [_shard_task_chunks(s, p.tasks, cpt, self.spans, bkey)
+                     for s, p in zip(self.partition.shards, plans)]
+        S = self.partition.num_shards
+        chunks = []
+        for c, (r0, r1) in enumerate(self.spans):
+            tc = max(max(len(ps[c][0]) for ps in per_shard), 1)
+            tw = np.full((S, tc), r0, np.int32)
+            ts = np.zeros((S, tc), np.int32)
+            tn = np.zeros((S, tc), np.int32)  # 0 => no-op task
+            for s, ps in enumerate(per_shard):
+                w, st_, nn = ps[c]
+                tw[s, : len(w)], ts[s, : len(w)], tn[s, : len(w)] = w, st_, nn
+            chunks.append(tuple(jnp.asarray(x) for x in (tw, ts, tn)))
+        self._wcsr[cpt] = chunks
+        return chunks
+
+    def bcsr_block_chunks(self):
+        """Per-chunk BCSR index arrays + value-slice metadata.
+
+        Returns ``(chunks, pad_blocks)``: each chunk is a dict with stacked
+        chunk-relative ``rows`` / ``cols`` ``[S, size]``, a per-chunk
+        ``row_mask`` ``[S, span_rows]``, per-shard ``start`` / ``count``
+        ``[S]`` into the shard's padded value array, and the static
+        ``size``. Values themselves are sliced inside ``shard_map`` with a
+        ``dynamic_slice`` at ``start`` (sizes are uniform per chunk across
+        shards — SPMD needs one program), after zero-padding the value dim
+        by ``pad_blocks`` so the slice never clamps; blocks past ``count``
+        are zeroed before the kernel sees them.
+        """
+        if self._bcsr is not None:
+            return self._bcsr
+        g = self.partition.structure
+        bm = g.block[0]
+        bkey = self._bounds_key()
+        per_shard = [_shard_block_chunks(s, self.spans, bkey)
+                     for s in self.partition.shards]
+        S = self.partition.num_shards
+        chunks = []
+        for c, (r0, r1) in enumerate(self.spans):
+            size = max(max(ps[c][1] for ps in per_shard), 1)
+            rows = np.zeros((S, size), np.int32)
+            cols = np.zeros((S, size), np.int32)
+            mask = np.zeros((S, (r1 - r0) * bm), bool)
+            start = np.zeros(S, np.int32)
+            count = np.zeros(S, np.int32)
+            for s, ps in enumerate(per_shard):
+                lo, cnt, r, cl = ps[c]
+                rows[s, :cnt] = r
+                # padding repeats the last covered row (blocks are zeroed)
+                rows[s, cnt:] = r[-1] if cnt else 0
+                cols[s, :cnt] = cl
+                start[s], count[s] = lo, cnt
+                cover = np.zeros(r1 - r0, bool)
+                if cnt:
+                    cover[np.unique(r)] = True
+                mask[s] = np.repeat(cover, bm)
+            chunks.append({
+                "rows": jnp.asarray(rows), "cols": jnp.asarray(cols),
+                "mask": jnp.asarray(mask), "start": jnp.asarray(start),
+                "count": jnp.asarray(count), "size": size,
+            })
+        pad_blocks = max(ch["size"] for ch in chunks)
+        self._bcsr = (chunks, pad_blocks)
+        return self._bcsr
+
+
+# ---------------------------------------------------------------------------
 # Sharded operand + mesh context
 # ---------------------------------------------------------------------------
 
@@ -402,11 +634,14 @@ class ShardedSparseTensor:
     __slots__ = ("structure", "partition", "mesh", "axis", "data", "codec")
 
     def __init__(self, structure: SparseStructure, partition: SparsePartition,
-                 mesh, axis: str, data, codec: str = "none"):
+                 mesh, axis, data, codec: str = "none"):
         self.structure = structure
         self.partition = partition
         self.mesh = mesh
-        self.axis = str(axis)
+        # one axis name, or a tuple of names for 2-D (data, model) sharding:
+        # the leading shard dim is laid out major-to-minor over the tuple
+        self.axis = (str(axis) if isinstance(axis, str)
+                     else tuple(str(x) for x in axis))
         self.data = tuple(data)
         self.codec = str(codec)
 
@@ -485,22 +720,34 @@ def _is_traced(data) -> bool:
     return any(isinstance(x, jax.core.Tracer) for x in data)
 
 
-def shard_tensor(st: SparseTensor, mesh, axis: str = "data"
+def shard_tensor(st: SparseTensor, mesh, axis="data"
                  ) -> ShardedSparseTensor:
-    """Partition a ``SparseTensor`` over one mesh axis by stored work.
+    """Partition a ``SparseTensor`` over mesh axes by stored work.
+
+    ``axis`` is one mesh-axis name, or a tuple of names for 2-D sharding —
+    ``st.shard(mesh, ("data", "model"))`` splits into
+    ``mesh.shape["data"] * mesh.shape["model"]`` shards laid out data-major
+    on the stacked leading dim (shard ``s`` lives at mesh position
+    ``(s // n_model, s % n_model)``), enabling ``reduce="hier"`` combines.
 
     The partition comes from the ``repro.ops.make_partition`` cache (once
     per structure); value slicing is static, so this also works on traced
     tensors inside ``jit`` (the eager path additionally places the stacked
-    leaves along the mesh axis via ``parallel.sharding`` rules).
+    leaves along the mesh axes via ``parallel.sharding`` rules).
     """
-    if axis not in mesh.shape:
-        raise ValueError(
-            f"shard_tensor: axis {axis!r} not in mesh axes "
-            f"{tuple(mesh.axis_names)}")
-    part = make_partition(st.structure, int(mesh.shape[axis]))
+    axes = _axis_tuple(axis)
+    for ax in axes:
+        if ax not in mesh.shape:
+            raise ValueError(
+                f"shard_tensor: axis {ax!r} not in mesh axes "
+                f"{tuple(mesh.axis_names)}")
+    num_shards = 1
+    for ax in axes:
+        num_shards *= int(mesh.shape[ax])
+    part = make_partition(st.structure, num_shards)
     data = part.stack_values(st.data)
-    sst = ShardedSparseTensor(st.structure, part, mesh, axis, data,
+    sst = ShardedSparseTensor(st.structure, part, mesh,
+                              axes[0] if len(axes) == 1 else axes, data,
                               codec=st.codec)
     if not _is_traced(data):
         from repro.parallel.sharding import sparse_operand_shardings
@@ -515,12 +762,13 @@ _SPARSE_MESH: contextvars.ContextVar = contextvars.ContextVar(
 
 
 @contextlib.contextmanager
-def use_sparse_mesh(mesh, axis: str = "data"):
+def use_sparse_mesh(mesh, axis="data"):
     """Route ``SparseTensor`` spmm through the sharded path in this scope.
 
     Inside the context, ``repro.ops.spmm`` (and ``st @ b``) auto-shards
-    plain ``SparseTensor`` operands over ``mesh``'s ``axis`` — partitions
-    are memoized per structure, so repeated calls (a serving loop) pay the
+    plain ``SparseTensor`` operands over ``mesh``'s ``axis`` (one name, or
+    a tuple like ``("data", "model")`` for 2-D sharding) — partitions are
+    memoized per structure, so repeated calls (a serving loop) pay the
     partitioner once. ``ShardedSparseTensor`` operands are unaffected (they
     carry their own mesh).
 
@@ -530,10 +778,13 @@ def use_sparse_mesh(mesh, axis: str = "data"):
     call, or shard explicitly with ``st.shard(mesh, axis)`` so the sharded
     operand itself keys the jit cache.
     """
-    if axis not in mesh.shape:
-        raise ValueError(f"use_sparse_mesh: axis {axis!r} not in mesh axes "
-                         f"{tuple(mesh.axis_names)}")
-    token = _SPARSE_MESH.set((mesh, str(axis)))
+    axes = _axis_tuple(axis)
+    for ax in axes:
+        if ax not in mesh.shape:
+            raise ValueError(f"use_sparse_mesh: axis {ax!r} not in mesh "
+                             f"axes {tuple(mesh.axis_names)}")
+    token = _SPARSE_MESH.set(
+        (mesh, axes[0] if len(axes) == 1 else axes))
     try:
         yield
     finally:
@@ -550,14 +801,27 @@ def current_sparse_mesh() -> Optional[Tuple[object, str]]:
 # ---------------------------------------------------------------------------
 
 
-def _reduce(x: jax.Array, axis: str, method: str) -> jax.Array:
-    """Cross-device partial-output combine (repro.parallel.collectives)."""
+def _reduce(x: jax.Array, axis, method: str) -> jax.Array:
+    """Cross-device partial-output combine (repro.parallel.collectives).
+
+    ``axis`` is one mesh-axis name or a tuple (2-D sharded operands reduce
+    over both). ``"hier"`` runs ``hierarchical_psum`` with the second axis
+    as the inner (fast) links — 2-axis operands only.
+    """
     if method in (None, "psum"):
         return jax.lax.psum(x, axis)
     if method == "bf16":
         return compressed_psum_bf16(x, axis)
+    if method == "hier":
+        axes = _axis_tuple(axis)
+        if len(axes) != 2:
+            raise ValueError(
+                "reduce='hier' needs an operand sharded over exactly two "
+                f"mesh axes (outer, inner); got {axes!r} — shard with "
+                "st.shard(mesh, (outer, inner)) first")
+        return hierarchical_psum(x, axes[1], axes[0])
     raise ValueError(f"unknown sharded-spmm reduce {method!r} "
-                     "(use 'psum' or 'bf16')")
+                     "(use 'psum', 'bf16' or 'hier')")
 
 
 def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
@@ -577,6 +841,20 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
     kernels fuse the dequant in-register, and the partial outputs reuse
     the same collective machinery — including the bf16-compressed
     ``reduce="bf16"`` — as the raw-value path.
+
+    **Chunked compute/collective overlap** (``cfg.combine_chunks``): when
+    the resolved chunk count is > 1, the output rows are split into
+    row-chunks snapped to window / block-row starts (``CombineSchedule``)
+    and the local program emits an independent compute -> ``reduce`` chain
+    per chunk — the compiler's latency-hiding scheduler can then run the
+    collective for chunk ``k`` while chunk ``k+1``'s kernels execute.
+    Numerics are identical to the blocking combine (same local partials,
+    same reduction, just row-partitioned). ``combine_chunks=1`` keeps the
+    single fused combine.
+
+    2-D meshes: an operand sharded over two axes (``st.shard(mesh,
+    ("data", "model"))``) reduces over both; ``reduce="hier"`` routes the
+    combine through ``hierarchical_psum`` (inner = second axis).
     """
     g = a.structure
     mesh, axis = a.mesh, a.axis
@@ -604,6 +882,15 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
         (b_pad,), bn_eff, pad = pad_cols([b], n, bn)
     interpret = resolve_interpret(cfg, True if impl == "kernel_interpret"
                                   else not on_tpu())
+    if reduce == "hier" and len(_axis_tuple(axis)) != 2:
+        raise ValueError(
+            "reduce='hier' needs an operand sharded over two mesh axes "
+            f"(got axis={axis!r}); use st.shard(mesh, ('data', 'model'))")
+    # one global chunk count, resolved like bn/route above (one SPMD
+    # program): >1 splits the combine into overlapped row-chunk chains
+    cc = resolve_combine_chunks(
+        cfg.combine_chunks, n, num_groups=m // bm, num_shards=a.num_shards,
+        op="spmm", fmt=g.fmt, shape=g.shape, block=g.block, dtype=a.dtype)
     idx = a.partition.index_arrays()
     specs = lambda n_ops: (P(axis),) * n_ops + (P(),)
 
@@ -616,7 +903,7 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
     if g.fmt == "wcsr":
         cfg_bn = dataclasses.replace(cfg, bn=bn)
         plans = [make_plan(s, n, cfg_bn, dtype=a.dtype, codec=codec,
-                           route=route)
+                           route=route, combine_chunks=cc)
                  for s in a.partition.shards]
         cpt = plans[0].chunks_per_task
         # one global §III-A depth, like bn: shards run one SPMD program
@@ -632,78 +919,190 @@ def sharded_spmm(a: ShardedSparseTensor, b: jax.Array, cfg: OpConfig, *,
         padded_cols = a.partition.padded_size
         num_windows = g.num_windows
 
-        def local(tw, ts, tn, ci, wp, v, sc, bmat):
-            tw, ts, tn, ci, wp, v = (x[0] for x in (tw, ts, tn, ci, wp, v))
-            sc = None if sc is None else sc[0]
-            if impl == "ref":
-                if codec != "none":
-                    v = _decode_local(v, sc)
-                w_loc = WCSR(values=v, col_idx=ci, window_ptr=wp,
-                             shape=(m, k), b_row=bm, b_col=bk,
-                             padded_cols=padded_cols)
-                out = wcsr_spmm_ref(w_loc, bmat, out_dtype=jnp.float32)
-            else:
-                if route == "spmv":
-                    partial = wcsr_spmv_kernel(
-                        ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk,
-                        chunks_per_task=cpt, out_dtype=jnp.float32,
-                        interpret=interpret, pipeline_depth=depth,
-                        codec=codec)
-                else:
-                    partial = wcsr_spmm_kernel(
-                        ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk,
-                        bn=bn_eff, chunks_per_task=cpt,
-                        out_dtype=jnp.float32, interpret=interpret,
-                        pipeline_depth=depth, codec=codec)
-                out = jax.ops.segment_sum(partial, tw,
-                                          num_segments=num_windows)
-                out = out.reshape(m, -1)
-            return _reduce(out, axis, reduce)
+        def _wcsr_partial(ts, tn, ci, v, sc, bmat):
+            if route == "spmv":
+                return wcsr_spmv_kernel(
+                    ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk,
+                    chunks_per_task=cpt, out_dtype=jnp.float32,
+                    interpret=interpret, pipeline_depth=depth, codec=codec)
+            return wcsr_spmm_kernel(
+                ts, tn, ci, v, bmat, sc, b_row=bm, b_col=bk,
+                bn=bn_eff, chunks_per_task=cpt, out_dtype=jnp.float32,
+                interpret=interpret, pipeline_depth=depth, codec=codec)
 
-        # the scales slot always exists (None when codec is off — an empty
-        # pytree, so its P(axis) spec binds no leaves)
-        out = shard_map(
-            local, mesh=mesh, in_specs=specs(7), out_specs=P(),
-            check_vma=False,
-        )(jnp.asarray(t_win), jnp.asarray(t_start), jnp.asarray(t_n),
-          idx["col_idx"], idx["window_ptr"], a.data[0],
-          a.data[1] if codec != "none" else None, b_pad)
+        if cc > 1:
+            sched = a.partition.combine_schedule(cc)
+            spans = sched.spans
+            chunk_ops = sched.wcsr_task_chunks(plans)
+
+            def local(chunks, ci, wp, v, sc, bmat):
+                ci, wp, v = ci[0], wp[0], v[0]
+                sc = None if sc is None else sc[0]
+                if impl == "ref":
+                    # ref has no task list: one full local partial, then
+                    # per-chunk row slices ride the chunked combine
+                    vd = _decode_local(v, sc) if codec != "none" else v
+                    w_loc = WCSR(values=vd, col_idx=ci, window_ptr=wp,
+                                 shape=(m, k), b_row=bm, b_col=bk,
+                                 padded_cols=padded_cols)
+                    full = wcsr_spmm_ref(w_loc, bmat, out_dtype=jnp.float32)
+                    return jnp.concatenate(
+                        [_reduce(full[r0 * bm:r1 * bm], axis, reduce)
+                         for r0, r1 in spans], axis=0)
+                outs = []
+                for (r0, r1), (tw, ts, tn) in zip(spans, chunks):
+                    tw, ts, tn = tw[0], ts[0], tn[0]
+                    partial = _wcsr_partial(ts, tn, ci, v, sc, bmat)
+                    o = jax.ops.segment_sum(partial, tw - r0,
+                                            num_segments=r1 - r0)
+                    outs.append(_reduce(o.reshape((r1 - r0) * bm, -1),
+                                        axis, reduce))
+                return jnp.concatenate(outs, axis=0)
+
+            out = shard_map(
+                local, mesh=mesh, in_specs=specs(5), out_specs=P(),
+                check_vma=False,
+            )(chunk_ops, idx["col_idx"], idx["window_ptr"], a.data[0],
+              a.data[1] if codec != "none" else None, b_pad)
+        else:
+            def local(tw, ts, tn, ci, wp, v, sc, bmat):
+                tw, ts, tn, ci, wp, v = (x[0] for x in (tw, ts, tn, ci, wp, v))
+                sc = None if sc is None else sc[0]
+                if impl == "ref":
+                    if codec != "none":
+                        v = _decode_local(v, sc)
+                    w_loc = WCSR(values=v, col_idx=ci, window_ptr=wp,
+                                 shape=(m, k), b_row=bm, b_col=bk,
+                                 padded_cols=padded_cols)
+                    out = wcsr_spmm_ref(w_loc, bmat, out_dtype=jnp.float32)
+                else:
+                    partial = _wcsr_partial(ts, tn, ci, v, sc, bmat)
+                    out = jax.ops.segment_sum(partial, tw,
+                                              num_segments=num_windows)
+                    out = out.reshape(m, -1)
+                return _reduce(out, axis, reduce)
+
+            # the scales slot always exists (None when codec is off — an
+            # empty pytree, so its P(axis) spec binds no leaves)
+            out = shard_map(
+                local, mesh=mesh, in_specs=specs(7), out_specs=P(),
+                check_vma=False,
+            )(jnp.asarray(t_win), jnp.asarray(t_start), jnp.asarray(t_n),
+              idx["col_idx"], idx["window_ptr"], a.data[0],
+              a.data[1] if codec != "none" else None, b_pad)
     else:
         nnz_p = a.partition.padded_size
         m_blocks = m // bm
+        if cc > 1 and impl == "ref":
+            # ref path: one full local partial, per-chunk row slices ride
+            # the chunked combine (plumbing parity with the kernel path)
+            sched = a.partition.combine_schedule(cc)
+            spans = sched.spans
 
-        def local(r, c, pt, mask, bl, sc, bmat):
-            r, c, pt, mask, bl = (x[0] for x in (r, c, pt, mask, bl))
-            sc = None if sc is None else sc[0]
-            if impl == "ref":
+            def local(r, c, pt, bl, sc, bmat):
+                r, c, pt, bl = (x[0] for x in (r, c, pt, bl))
+                sc = None if sc is None else sc[0]
                 if codec != "none":
                     bl = _decode_local(bl, sc)
                 a_loc = BCSR(blocks=bl, block_rows=r, block_cols=c,
                              block_row_ptr=pt, shape=(m, k), block=(bm, bk),
                              nnz_blocks=nnz_p)
-                out = bcsr_spmm_ref(a_loc, bmat, out_dtype=jnp.float32)
-            elif route == "spmv":
-                # no row mask needed: the spmv kernel zero-fills its whole
-                # accumulator, so uncovered rows are genuinely zero
-                out = bcsr_spmv_kernel(
-                    r, c, bl, bmat, sc, m_blocks=m_blocks, block=(bm, bk),
-                    out_dtype=jnp.float32, interpret=interpret, codec=codec)
-            else:
-                out = bcsr_spmm_kernel(
-                    r, c, bl, bmat, sc, m_blocks=m_blocks, block=(bm, bk),
-                    bn=bn_eff, out_dtype=jnp.float32, interpret=interpret,
-                    codec=codec)
-                # rows no shard-block covers are never written by the
-                # kernel: select zeros there instead of trusting the buffer
-                out = jnp.where(mask[:, None], out, 0.0)
-            return _reduce(out, axis, reduce)
+                full = bcsr_spmm_ref(a_loc, bmat, out_dtype=jnp.float32)
+                return jnp.concatenate(
+                    [_reduce(full[r0 * bm:r1 * bm], axis, reduce)
+                     for r0, r1 in spans], axis=0)
 
-        out = shard_map(
-            local, mesh=mesh, in_specs=specs(6), out_specs=P(),
-            check_vma=False,
-        )(idx["block_rows"], idx["block_cols"], idx["block_row_ptr"],
-          idx["row_mask"], a.data[0],
-          a.data[1] if codec != "none" else None, b_pad)
+            out = shard_map(
+                local, mesh=mesh, in_specs=specs(5), out_specs=P(),
+                check_vma=False,
+            )(idx["block_rows"], idx["block_cols"], idx["block_row_ptr"],
+              a.data[0], a.data[1] if codec != "none" else None, b_pad)
+        elif cc > 1:
+            sched = a.partition.combine_schedule(cc)
+            spans = sched.spans
+            bchunks, pad_blocks = sched.bcsr_block_chunks()
+            idx_ops = [(ch["rows"], ch["cols"], ch["mask"], ch["start"],
+                        ch["count"]) for ch in bchunks]
+            sizes = [ch["size"] for ch in bchunks]
+            # zero-pad the block dim so per-chunk dynamic slices never clamp
+            v_pad = jnp.pad(a.data[0],
+                            ((0, 0), (0, pad_blocks), (0, 0), (0, 0)))
+            sc_pad = (jnp.pad(a.data[1], ((0, 0), (0, pad_blocks), (0, 0)))
+                      if codec != "none" else None)
+
+            def local(chunks, v, sc, bmat):
+                v = v[0]
+                sc = None if sc is None else sc[0]
+                outs = []
+                for (r0, r1), (r, c, msk, st0, cnt), size in zip(
+                        spans, chunks, sizes):
+                    r, c, msk, st0, cnt = (r[0], c[0], msk[0],
+                                           st0[0], cnt[0])
+                    bl = jax.lax.dynamic_slice_in_dim(v, st0, size, 0)
+                    # blocks past this shard's count belong to the next
+                    # chunk: zero them (their padded row ids are harmless)
+                    valid = jnp.arange(size) < cnt
+                    bl = jnp.where(valid[:, None, None], bl, 0)
+                    scc = None
+                    if sc is not None:
+                        scc = jax.lax.dynamic_slice_in_dim(sc, st0, size, 0)
+                        scc = jnp.where(valid[:, None], scc, 0)
+                    mb = r1 - r0
+                    if route == "spmv":
+                        # spmv kernel zero-fills its accumulator: no mask
+                        o = bcsr_spmv_kernel(
+                            r, c, bl, bmat, scc, m_blocks=mb,
+                            block=(bm, bk), out_dtype=jnp.float32,
+                            interpret=interpret, codec=codec)
+                    else:
+                        o = bcsr_spmm_kernel(
+                            r, c, bl, bmat, scc, m_blocks=mb,
+                            block=(bm, bk), bn=bn_eff,
+                            out_dtype=jnp.float32, interpret=interpret,
+                            codec=codec)
+                        o = jnp.where(msk[:, None], o, 0.0)
+                    outs.append(_reduce(o, axis, reduce))
+                return jnp.concatenate(outs, axis=0)
+
+            out = shard_map(
+                local, mesh=mesh, in_specs=specs(3), out_specs=P(),
+                check_vma=False,
+            )(idx_ops, v_pad, sc_pad, b_pad)
+        else:
+            def local(r, c, pt, mask, bl, sc, bmat):
+                r, c, pt, mask, bl = (x[0] for x in (r, c, pt, mask, bl))
+                sc = None if sc is None else sc[0]
+                if impl == "ref":
+                    if codec != "none":
+                        bl = _decode_local(bl, sc)
+                    a_loc = BCSR(blocks=bl, block_rows=r, block_cols=c,
+                                 block_row_ptr=pt, shape=(m, k),
+                                 block=(bm, bk), nnz_blocks=nnz_p)
+                    out = bcsr_spmm_ref(a_loc, bmat, out_dtype=jnp.float32)
+                elif route == "spmv":
+                    # no row mask needed: the spmv kernel zero-fills its
+                    # whole accumulator, so uncovered rows are genuinely zero
+                    out = bcsr_spmv_kernel(
+                        r, c, bl, bmat, sc, m_blocks=m_blocks,
+                        block=(bm, bk), out_dtype=jnp.float32,
+                        interpret=interpret, codec=codec)
+                else:
+                    out = bcsr_spmm_kernel(
+                        r, c, bl, bmat, sc, m_blocks=m_blocks,
+                        block=(bm, bk), bn=bn_eff, out_dtype=jnp.float32,
+                        interpret=interpret, codec=codec)
+                    # rows no shard-block covers are never written by the
+                    # kernel: select zeros there instead of trusting the
+                    # buffer
+                    out = jnp.where(mask[:, None], out, 0.0)
+                return _reduce(out, axis, reduce)
+
+            out = shard_map(
+                local, mesh=mesh, in_specs=specs(6), out_specs=P(),
+                check_vma=False,
+            )(idx["block_rows"], idx["block_cols"], idx["block_row_ptr"],
+              idx["row_mask"], a.data[0],
+              a.data[1] if codec != "none" else None, b_pad)
 
     out = out.astype(cfg.out_dtype or b.dtype)
     return unpad_cols(out, n, pad)

@@ -112,7 +112,7 @@ class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 512,
                  frontend_inputs: Optional[dict] = None, greedy: bool = True,
                  op_config: Optional[OpConfig] = None,
-                 mesh=None, mesh_axis: str = "data",
+                 mesh=None, mesh_axis="data",
                  page_size: int = 64, num_pages: Optional[int] = None,
                  chunk: int = 256, prefill_block_q: Optional[int] = None,
                  prefill_attn_budget: float = 1.0, prefill_attn_impl=None,
@@ -128,6 +128,8 @@ class ServeEngine:
         self.op_config = op_config
         # device mesh for sharded sparse operands: decode traces under
         # use_sparse_mesh so SparseTensor spmm distributes over mesh_axis
+        # (one axis name, or a tuple like ("data", "model") for 2-D
+        # sharding + reduce="hier"-capable operands)
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self.greedy = greedy
@@ -499,6 +501,13 @@ class ServeEngine:
         mask grows every step advances ``plan_patched`` while
         ``plan_cache.misses`` stays flat — zero full re-plans.
 
+        ``combine`` is the sharded chunked-combine view
+        (``cache_stats()["combine"]``): sharded spmm calls that traced the
+        chunked overlapped combine vs the blocking single collective, the
+        chunk-count tally, schedule/chunk-array build-vs-reuse counters,
+        and the ``hierarchical_psum`` call/fallback tallies for
+        ``reduce="hier"`` meshes.
+
         ``spmv`` is the skinny-N dispatch view (``cache_stats()["spmv"]``):
         sparse calls routed to the GEMV (``repro.ops.spmv``) kernel family
         vs kept on the full-tile SpMM kernels. Decode ticks run skinny
@@ -549,6 +558,7 @@ class ServeEngine:
             "cache_stats": cs,
             "structure_deltas": cs["delta"],
             "spmv": cs["spmv"],
+            "combine": cs["combine"],
             "tune_db": tune_db,
             "sparse_shards": partition_balance_report(),
             "mode": "paged" if self.paged else "legacy",

@@ -228,23 +228,26 @@ class SparseTensor:
 
         return convert(self.raw, "dense")
 
-    def shard(self, mesh, axis: str = "data"):
-        """Distribute over one mesh axis, partitioned by stored work.
+    def shard(self, mesh, axis="data"):
+        """Distribute over mesh axes, partitioned by stored work.
 
         Returns a ``repro.parallel.sparse.ShardedSparseTensor``: per-device
         shards balanced by nonzero/block count (the paper's §III-C split at
         mesh scale), whose ``@``/``spmm`` runs the local kernel per device
-        and sums partial outputs. Quantized tensors ship their shards in
+        and sums partial outputs. ``axis`` is one mesh-axis name or a tuple
+        (``("data", "model")`` shards over both axes jointly — required for
+        ``reduce="hier"``). Quantized tensors ship their shards in
         compressed form — each shard's payload slice travels with the f32
         scales of exactly its chunks/blocks. The partition is memoized per
         structure (``repro.ops.make_partition``) and the sharded wrapper
-        per (mesh, axis) on this tensor, so serving shards each layer
+        per (mesh, axes) on this tensor, so serving shards each layer
         once::
 
             sst = st.shard(mesh, "data")
             y = sst @ b                  # == st @ b, on mesh.shape["data"]
         """
-        key = (mesh, str(axis))
+        key = (mesh, (str(axis),) if isinstance(axis, str)
+               else tuple(str(x) for x in axis))
         if self._sharded is not None and key in self._sharded:
             return self._sharded[key]
         from repro.parallel.sparse import shard_tensor

@@ -397,8 +397,14 @@ def test_cache_stats_unifies_counters(rng):
     sw.matmul(b, impl="kernel_interpret")
     cs = ops.cache_stats()
     assert set(cs) == {"plan", "tasks", "partition", "tuning", "selections",
-                       "tune_db", "spmv", "delta"}
+                       "tune_db", "spmv", "delta", "combine"}
     assert set(cs["spmv"]) == {"dispatched", "full_tile"}
+    assert set(cs["combine"]) == {"chunked", "blocking", "chunks",
+                                  "schedules_built", "shard_chunks_built",
+                                  "shard_chunks_reused", "hier_calls",
+                                  "hier_fallback"}
+    # unsharded calls never chunk the combine
+    assert cs["combine"]["chunked"] == 0
     # derived from the same counters as the legacy accessors — never a
     # second set that can drift
     p = ops.plan_cache_info()

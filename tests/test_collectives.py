@@ -1,0 +1,134 @@
+"""repro.parallel.collectives semantics on a forced multi-device host mesh
+(subprocess: device count must be fixed before jax initializes). Covers
+``hierarchical_psum`` on dividing and non-dividing leading dims (both must
+equal the flat two-axis psum; the non-dividing case must be *counted* as a
+fallback and warned about once), and the ``compressed_psum_int8_ef``
+error-feedback contract: the running mean of repeated reductions converges
+to the exact sum at the 1/T telescoping rate."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str, devices: int = 4):
+    src = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    p = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+def test_hierarchical_psum_dividing_matches_flat_psum():
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.parallel.collectives import (collective_counters,
+                                            hierarchical_psum,
+                                            reset_collective_counters)
+
+    mesh = jax.make_mesh((2, 2), ("outer", "inner"))
+    xs = np.random.default_rng(0).normal(size=(4, 8, 3)).astype(np.float32)
+
+    def hier(x):
+        return hierarchical_psum(x[0], "inner", "outer")[None]
+
+    def flat(x):
+        return jax.lax.psum(x[0], ("inner", "outer"))[None]
+
+    kw = dict(mesh=mesh, in_specs=P(("outer", "inner")),
+              out_specs=P(("outer", "inner")), check_vma=False)
+    reset_collective_counters()
+    got = np.asarray(shard_map(hier, **kw)(jnp.asarray(xs)))
+    want = np.asarray(shard_map(flat, **kw)(jnp.asarray(xs)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    c = collective_counters()
+    assert c["hier_calls"] == 1 and c["hier_fallback"] == 0, c
+    print("OK")
+    """)
+
+
+def test_hierarchical_psum_non_dividing_falls_back_counted():
+    _run("""
+    import warnings
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.parallel.collectives import (collective_counters,
+                                            hierarchical_psum,
+                                            reset_collective_counters)
+    import repro.ops as ops
+
+    mesh = jax.make_mesh((2, 2), ("outer", "inner"))
+    # leading dim 3 does not divide inner size 2 -> counted fallback
+    xs = np.random.default_rng(1).normal(size=(4, 3, 5)).astype(np.float32)
+
+    def hier(x):
+        return hierarchical_psum(x[0], "inner", "outer")[None]
+
+    def flat(x):
+        return jax.lax.psum(x[0], ("inner", "outer"))[None]
+
+    kw = dict(mesh=mesh, in_specs=P(("outer", "inner")),
+              out_specs=P(("outer", "inner")), check_vma=False)
+    reset_collective_counters()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = np.asarray(shard_map(hier, **kw)(jnp.asarray(xs)))
+        # second trace: the warning is one-shot, the counter is not
+        got2 = np.asarray(jax.jit(shard_map(hier, **kw))(jnp.asarray(xs)))
+    want = np.asarray(shard_map(flat, **kw)(jnp.asarray(xs)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(got2, want, rtol=1e-6, atol=1e-6)
+    hits = [w for w in rec if "hierarchical_psum" in str(w.message)]
+    assert len(hits) == 1, [str(w.message) for w in rec]
+    c = collective_counters()
+    assert c["hier_calls"] == 2 and c["hier_fallback"] == 2, c
+    # the tallies surface on the unified dashboard
+    assert ops.cache_stats()["combine"]["hier_fallback"] == 2
+    print("OK")
+    """)
+
+
+def test_compressed_psum_int8_ef_mean_converges():
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.parallel.collectives import compressed_psum_int8_ef
+
+    mesh = jax.make_mesh((4,), ("data",))
+    xs = np.random.default_rng(2).normal(size=(4, 16)).astype(np.float32)
+    exact = xs.sum(0)
+
+    def mean_of(T):
+        def body(x):
+            x = x[0]
+            err = jnp.zeros_like(x)
+            acc = jnp.zeros_like(x)
+            for _ in range(T):
+                red, err = compressed_psum_int8_ef(x, "data", err)
+                acc = acc + red
+            return (acc / T)[None]
+        f = shard_map(body, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data"), check_vma=False)
+        return np.asarray(f(jnp.asarray(xs)))[0]
+
+    e1 = np.abs(mean_of(1) - exact).max()
+    e16 = np.abs(mean_of(16) - exact).max()
+    # telescoping: sum_t red_t = T*exact - sum_d err_T, so the mean error
+    # decays like |err_T|/T — bounded by the per-device quantization step
+    ndev = 4
+    step_bound = ndev * 1.2 * np.abs(xs).max() / 127.0
+    assert e1 <= step_bound, (e1, step_bound)
+    assert e16 <= step_bound / 8.0 + 1e-6, (e16, step_bound)
+    assert e16 <= e1 / 2.0 + 1e-6, (e1, e16)
+    print("OK")
+    """)

@@ -407,3 +407,154 @@ def test_elastic_checkpoint_restore_onto_mesh(tmp_path):
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]))
     print("OK")
     """)
+
+
+def test_chunked_combine_matches_blocking():
+    """The chunked overlapped combine is a row-partition of the same math:
+    for every format x impl x codec x route, combine_chunks>1 must equal
+    the blocking combine_chunks=1 result to float tolerance, and the
+    dispatch/schedule counters must record the chunked path."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.sparse import SparseTensor
+    import repro.ops as ops
+    from repro.ops import spmm
+
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(256, 128)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.12
+    mesh = jax.make_mesh((4,), ("data",))
+    ops.clear_tuning_cache()
+    for fmt, block in [("bcsr", (32, 32)), ("wcsr", (32, 8))]:
+        st = SparseTensor.from_dense(d, fmt, block=block)
+        stq = st.quantize("int8")
+        for n in (64, 2):  # full-tile and skinny (spmv-routed) RHS
+            b = jnp.asarray(rng.normal(size=(128, n)).astype(np.float32))
+            for operand in (st, stq):
+                sst = operand.shard(mesh, "data")
+                for impl in ("ref", "kernel_interpret"):
+                    y1 = np.asarray(spmm(sst, b, impl=impl,
+                                         combine_chunks=1))
+                    y3 = np.asarray(spmm(sst, b, impl=impl,
+                                         combine_chunks=3))
+                    np.testing.assert_allclose(
+                        y3, y1, atol=1e-5, rtol=1e-5,
+                        err_msg=f"{fmt} {impl} n={n} "
+                                f"codec={operand.codec}")
+    cs = ops.cache_stats()["combine"]
+    assert cs["chunked"] > 0 and cs["blocking"] > 0, cs
+    assert cs["chunks"].get(3, 0) > 0, cs
+    assert cs["schedules_built"] > 0, cs
+    assert cs["shard_chunks_built"] > 0, cs
+
+    # structure delta: the patched partition keeps untouched shards by
+    # object, so the fresh schedule's per-shard chunk arrays memo-hit as
+    # long as the chunk bounds survive the re-balance. Skewed block
+    # counts park the chunk cuts far from any snap midpoint, so the
+    # one-block delta in the last row cannot move them.
+    counts = [10, 10, 10, 1, 1, 1, 1, 1]
+    d2 = np.zeros((256, 320), np.float32)
+    for i, cnt in enumerate(counts):
+        d2[32 * i:32 * (i + 1), :32 * cnt] = rng.normal(
+            size=(32, 32 * cnt)).astype(np.float32)
+    b2 = jnp.asarray(rng.normal(size=(320, 64)).astype(np.float32))
+    base = SparseTensor.from_dense(d2, "bcsr", block=(32, 32))
+    y0 = np.asarray(spmm(base.shard(mesh, "data"), b2,
+                         impl="kernel_interpret", combine_chunks=3))
+    before = ops.cache_stats()["combine"]
+    grown = base.append_blocks([7], [5], rng.normal(
+        size=(1, 32, 32)).astype(np.float32))
+    y1 = np.asarray(spmm(grown.shard(mesh, "data"), b2,
+                         impl="kernel_interpret", combine_chunks=3))
+    after = ops.cache_stats()["combine"]
+    assert after["shard_chunks_reused"] > before["shard_chunks_reused"], (
+        before, after)
+    np.testing.assert_allclose(
+        y1, np.asarray(grown.todense()) @ np.asarray(b2),
+        atol=2e-3, rtol=1e-3)
+    print("OK")
+    """, devices=4)
+
+
+def test_two_axis_mesh_and_hier_reduce():
+    """2-D (data, model) sharded operands: equivalence with the
+    single-device result under psum, bf16 and the hierarchical combine;
+    reduce='hier' on a 1-axis operand must raise."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    import pytest
+    from repro.sparse import SparseTensor
+    import repro.ops as ops
+    from repro.ops import spmm
+    from repro.parallel.sparse import use_sparse_mesh
+
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(256, 128)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.12
+    b = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    ops.clear_tuning_cache()
+    for fmt, block in [("bcsr", (32, 32)), ("wcsr", (32, 8))]:
+        st = SparseTensor.from_dense(d, fmt, block=block)
+        y0 = np.asarray(spmm(st, b))
+        sst = st.shard(mesh, ("data", "model"))
+        assert sst.num_shards == 4 and sst.axis == ("data", "model")
+        for impl in ("ref", "kernel_interpret"):
+            yp = np.asarray(spmm(sst, b, impl=impl))
+            np.testing.assert_allclose(yp, y0, atol=2e-4, rtol=1e-4)
+            yh = np.asarray(spmm(sst, b, impl=impl, reduce="hier"))
+            np.testing.assert_allclose(yh, yp, atol=1e-5, rtol=1e-5)
+            yc = np.asarray(spmm(sst, b, impl=impl, reduce="hier",
+                                 combine_chunks=2))
+            np.testing.assert_allclose(yc, yp, atol=1e-5, rtol=1e-5)
+        yb = np.asarray(spmm(sst, b, impl="ref", reduce="bf16"))
+        np.testing.assert_allclose(yb, y0, atol=2e-2, rtol=1e-2)
+    # auto-shard over both axes via the mesh scope
+    with use_sparse_mesh(mesh, ("data", "model")):
+        y2 = np.asarray(st @ b)
+    np.testing.assert_allclose(y2, y0, atol=2e-4, rtol=1e-4)
+    # hier needs a 2-axis operand
+    mesh1 = jax.make_mesh((4,), ("data",))
+    sst1 = st.shard(mesh1, "data")
+    with pytest.raises(ValueError, match="hier"):
+        spmm(sst1, b, impl="ref", reduce="hier")
+    assert ops.cache_stats()["combine"]["hier_calls"] > 0
+    print("OK")
+    """, devices=4)
+
+
+def test_autotune_sweeps_combine_chunks_on_mesh():
+    """autotune_spmm(mesh=...) times the sharded path and records a
+    combine_chunks winner that the "auto" knob then adopts (and that a
+    TuneDB round-trips like every other field)."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.sparse import SparseTensor
+    import repro.ops as ops
+
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(256, 128)).astype(np.float32)
+    d *= rng.random(d.shape) < 0.12
+    b = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    mesh = jax.make_mesh((4,), ("data",))
+    st = SparseTensor.from_dense(d, "bcsr", block=(32, 32))
+    ops.clear_tuning_cache()
+    win = ops.autotune_spmm(st, b, bns=(64,), codecs=("none",),
+                            mesh=mesh, combine_chunks=(1, 3),
+                            warmup=0, iters=1, use_db=False)
+    assert win["combine_chunks"] in (1, 3), win
+    tuned = ops.tuned_entry("spmm", "bcsr", st.shape, 64, st.block,
+                            st.dtype)
+    assert tuned["combine_chunks"] == win["combine_chunks"], tuned
+    # "auto" adopts the measured winner
+    got = ops.resolve_combine_chunks(
+        "auto", 64, num_groups=8, num_shards=4, op="spmm", fmt="bcsr",
+        shape=st.shape, block=st.block, dtype=st.dtype, count=False)
+    assert got == win["combine_chunks"], (got, win)
+    # without a mesh the sweep records no combine (unsharded calls)
+    ops.clear_tuning_cache()
+    win1 = ops.autotune_spmm(st, b, bns=(64,), codecs=("none",),
+                             warmup=0, iters=1, use_db=False)
+    assert win1["combine_chunks"] is None, win1
+    print("OK")
+    """, devices=4)
